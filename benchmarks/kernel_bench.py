@@ -1,0 +1,51 @@
+"""Timed kernel micro-benchmarks (CPU): MX Pallas (interpret), baseline
+Pallas (interpret), and the XLA path, plus the tile-planner itself.
+
+interpret-mode timings measure Python-level kernel-body execution — they
+validate the traffic/semantics, NOT TPU speed (that's §Roofline's job) —
+but the XLA-path numbers are real CPU wall times for the dispatch layer.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ops import MXPolicy, matmul, use_policy
+from repro.core.tiling import plan_matmul_tiles
+from repro.core.transfer_model import GemmProblem
+
+
+def _time(fn, *args, iters=3):
+    fn(*args).block_until_ready()  # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    M = K = N = 256
+    a = jax.random.normal(jax.random.PRNGKey(0), (M, K), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(1), (K, N), jnp.float32)
+
+    for backend in ("xla", "pallas_mx", "pallas_baseline"):
+        pol = MXPolicy(backend=backend, bm=128, bn=128, bk=64, interpret=True)
+
+        def f(x, y, pol=pol):
+            return matmul(x, y, policy=pol)
+
+        us = _time(f, a, b)
+        flops = 2 * M * N * K
+        rows.append((f"kernel_{backend}_256", us, f"{flops / us / 1e3:.1f}MFLOP/s_cpu"))
+
+    # tile planner latency + its decision for a llama-shaped GEMM
+    t0 = time.perf_counter()
+    plan = plan_matmul_tiles(GemmProblem(4096, 53248, 16384, 2))
+    us = (time.perf_counter() - t0) * 1e6
+    rows.append(("tile_planner_llama_mlp", us,
+                 f"bm{plan.bm}_bn{plan.bn}_bk{plan.bk}_AI{plan.arithmetic_intensity:.0f}"))
+    return rows

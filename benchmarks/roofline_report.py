@@ -1,0 +1,106 @@
+"""§Roofline report generator: reads experiments/dryrun/*.json (written by
+launch/dryrun.py) and emits the per-(arch × shape × mesh) three-term roofline
+table as markdown + CSV summary rows for benchmarks.run."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+DRYRUN_DIR = Path("experiments/dryrun")
+
+
+def load_records(d: Path = DRYRUN_DIR, *, include_variants: bool = False) -> List[dict]:
+    recs = []
+    for f in sorted(d.glob("*.json")):
+        try:
+            r = json.loads(f.read_text())
+        except json.JSONDecodeError:
+            continue
+        tag = (r.get("variant") or {}).get("tag", "")
+        if tag and not include_variants:
+            continue  # perf-iteration variants live in §Perf, not the baseline table
+        recs.append(r)
+    return recs
+
+
+def fmt_seconds(s: float) -> str:
+    if s >= 1:
+        return f"{s:.2f}s"
+    if s >= 1e-3:
+        return f"{s*1e3:.1f}ms"
+    return f"{s*1e6:.0f}us"
+
+
+def markdown_table(recs: List[dict], mesh: str = "single") -> str:
+    lines = [
+        "| arch | shape | kind | bound | compute | memory | collective | "
+        "MODEL_FLOPS/HLO | roofline frac | fits 16GB | peak GB/dev |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("mesh") != mesh:
+            continue
+        if r["status"] == "skipped":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | — | SKIP | — | — | — | — | — | — | — |"
+            )
+            continue
+        if r["status"] != "ok":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | — | ERROR | — | — | — | — | — | — | — |"
+            )
+            continue
+        rf = r["roofline"]
+        ufr = rf.get("useful_flops_ratio")
+        frac = rf.get("roofline_fraction")
+        lines.append(
+            "| {arch} | {shape} | {kind} | **{bound}** | {c} | {m} | {x} | "
+            "{ufr} | {frac} | {fits} | {peak:.1f} |".format(
+                arch=r["arch"], shape=r["shape"], kind=r["kind"],
+                bound=rf["bound"], c=fmt_seconds(rf["compute_s"]),
+                m=fmt_seconds(rf["memory_s"]), x=fmt_seconds(rf["collective_s"]),
+                ufr=f"{ufr:.2f}" if ufr else "—",
+                frac=f"{frac:.3f}" if frac else "—",
+                fits="✅" if r["memory"]["fits_v5e_16gb"] else "❌",
+                peak=r["memory"]["peak_bytes_per_device"] / 2**30,
+            )
+        )
+    return "\n".join(lines)
+
+
+def run() -> list[tuple[str, float, str]]:
+    recs = load_records()
+    ok = [r for r in recs if r["status"] == "ok"]
+    skipped = [r for r in recs if r["status"] == "skipped"]
+    err = [r for r in recs if r["status"] not in ("ok", "skipped")]
+    rows = [
+        ("roofline_cells_ok", 0.0, str(len(ok))),
+        ("roofline_cells_skipped", 0.0, str(len(skipped))),
+        ("roofline_cells_error", 0.0, str(len(err))),
+    ]
+    for bound in ("compute", "memory", "collective"):
+        n = sum(1 for r in ok if r["roofline"]["bound"] == bound)
+        rows.append((f"roofline_bound_{bound}", 0.0, str(n)))
+    fits = sum(1 for r in ok if r["memory"]["fits_v5e_16gb"])
+    rows.append(("roofline_fits_16gb", 0.0, f"{fits}/{len(ok)}"))
+    # worst roofline fraction among train cells (hillclimb candidate signal)
+    fracs = [
+        (r["roofline"].get("roofline_fraction") or 0.0, r["arch"], r["shape"], r["mesh"])
+        for r in ok if r["roofline"].get("roofline_fraction")
+    ]
+    if fracs:
+        worst = min(fracs)
+        best = max(fracs)
+        rows.append(("roofline_worst_cell", 0.0,
+                     f"{worst[1]}/{worst[2]}/{worst[3]}={worst[0]:.4f}"))
+        rows.append(("roofline_best_cell", 0.0,
+                     f"{best[1]}/{best[2]}/{best[3]}={best[0]:.4f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    recs = load_records()
+    for mesh in ("single", "multi"):
+        print(f"\n## mesh: {mesh}\n")
+        print(markdown_table(recs, mesh))

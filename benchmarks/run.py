@@ -1,0 +1,48 @@
+"""Benchmark harness: one module per paper table + kernel/roofline reports.
+
+Prints ``name,us_per_call,derived`` CSV (harness contract).
+
+  table1_transfers      — paper Table I   (hierarchy transfer counts)
+  table2_mx_vs_baseline — paper Table II  (MX vs baseline traffic, TPU mapping)
+  table3 (area)         — silicon-only; replaced by the VMEM-footprint
+                          accounting in the tile rows (see DESIGN.md §7)
+  table4_perf_energy    — paper Table IV + Fig. 3 (perf/energy reproduction)
+  kernel_bench          — Pallas kernels (interpret) + XLA dispatch timings
+  roofline_report       — §Roofline summary over the dry-run artifacts
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (
+        kernel_bench, roofline_report, table1_transfers,
+        table2_mx_vs_baseline, table3_area, table4_perf_energy,
+    )
+
+    modules = [
+        ("table1", table1_transfers),
+        ("table2", table2_mx_vs_baseline),
+        ("table3", table3_area),
+        ("table4", table4_perf_energy),
+        ("kernels", kernel_bench),
+        ("roofline", roofline_report),
+    ]
+    print("name,us_per_call,derived")
+    failed = 0
+    for name, mod in modules:
+        try:
+            for row_name, us, derived in mod.run():
+                print(f"{row_name},{us:.2f},{derived}")
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            print(f"{name}_ERROR,0,{type(e).__name__}")
+            failed += 1
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,26 @@
+"""Paper Table I: transfer counts between hierarchy levels for the generic
+tiled GEMM, evaluated at the paper's configurations."""
+from __future__ import annotations
+
+import time
+
+from repro.core.transfer_model import (
+    GemmProblem, buf_to_fpu, mem_to_vrf, vrf_to_buf,
+)
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    p = GemmProblem(64, 64, 64, 8)
+    t0 = time.perf_counter_ns()
+    m1 = mem_to_vrf(p, 8, 16, 4, inter_k_buffering=True, c_is_zero=True)
+    m2 = vrf_to_buf(p, 8, 16, 4, 8, 4, 4, inter_k_buffering_vrf=True)
+    m3 = buf_to_fpu(p, 8, 4, 4, t_a=4, t_b=4)
+    us = (time.perf_counter_ns() - t0) / 1e3
+    rows.append(("table1_mem_vrf_total", us / 3, f"{m1.total}"))
+    rows.append(("table1_vrf_buf_total", us / 3, f"{m2.total}"))
+    rows.append(("table1_buf_fpu_total", us / 3, f"{m3.total}"))
+    # monotone traffic growth toward the FPUs (Kung's balance principle)
+    rows.append(("table1_hierarchy_monotone", us / 3,
+                 f"{m1.total <= m2.total <= m3.total}"))
+    return rows

@@ -1,0 +1,20 @@
+"""Batched serving example: prefill + greedy decode for three different
+architecture families through one code path (dense GQA, hybrid SSM, xLSTM).
+
+  PYTHONPATH=src python examples/serve_decode.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.serve import main as serve_main
+
+ARCHS = ["llama3.2-1b", "zamba2-2.7b", "xlstm-125m"]
+
+if __name__ == "__main__":
+    for arch in ARCHS:
+        print(f"\n===== {arch} (smoke config) =====")
+        rc = serve_main(["--arch", arch, "--smoke", "--batch", "2",
+                         "--prompt-len", "8", "--gen", "8"])
+        if rc:
+            raise SystemExit(rc)

@@ -1,0 +1,55 @@
+"""Tile-space explorer: reproduce the paper's Table IV *search* (which
+tile/sub-tile wins and why) and run the same search for a TPU GEMM.
+
+  PYTHONPATH=src python examples/tile_explorer.py [M N K elem_bytes]
+"""
+import sys
+
+from repro.core import paper_data
+from repro.core.energy import fit_energy_model
+from repro.core.tiling import paper_subtile_space, plan_matmul_tiles
+from repro.core.transfer_model import GemmProblem, MXKernel, PallasGemmTiling
+
+
+def paper_search():
+    print("== the paper's search space (dual-core, 64^3 FP64) ==")
+    p = GemmProblem(64, 64, 64, 8)
+    model = fit_energy_model(paper_data.rows("dual"), "dual")
+    print(f"{'tile':>12} {'subtile':>10} {'transfers':>10} {'AI':>6} {'ops/insn':>9}")
+    best = None
+    for m_, n_, k_ in paper_subtile_space():
+        for B in (2, 4):
+            tile = (m_, B * n_, k_)
+            try:
+                kern = MXKernel(*tile, m_, n_, k_)
+            except ValueError:
+                continue
+            t = kern.mem_to_vrf(p).total
+            ai = kern.arithmetic_intensity(p)
+            sr = kern.simd_ratio(p)
+            print(f"{str(tile):>12} {str((m_, n_, k_)):>10} {t:>10} {ai:>6.2f} {sr:>9.1f}")
+            key = (t, -sr)
+            if best is None or key < best[0]:
+                best = (key, tile, (m_, n_, k_))
+    print(f"--> minimum-traffic config: tile {best[1]} sub-tile {best[2]} "
+          f"(paper's best: (8,16,4)/(8,4,4))")
+
+
+def tpu_search(M, N, K, eb):
+    print(f"\n== TPU tile plan for {M}x{N}x{K} ({eb}B elements) ==")
+    p = GemmProblem(M, N, K, eb)
+    plan = plan_matmul_tiles(p)
+    print(f" chosen blocks: bm={plan.bm} bn={plan.bn} bk={plan.bk}")
+    print(f" VMEM: {plan.vmem_bytes/2**20:.1f} MiB; HBM: {plan.hbm_bytes/2**30:.3f} GiB; "
+          f"AI: {plan.arithmetic_intensity:.0f}; grid steps: {plan.grid_steps}")
+    for bm, bn, bk in ((128, 128, 128), (256, 256, 256), (512, 512, 512)):
+        t = PallasGemmTiling(bm, bn, bk)
+        print(f"   fixed {bm:>4}x{bn:>4}x{bk:>4}: HBM {t.hbm_bytes(p)/2**30:.3f} GiB")
+
+
+if __name__ == "__main__":
+    paper_search()
+    if len(sys.argv) == 5:
+        tpu_search(*(int(x) for x in sys.argv[1:]))
+    else:
+        tpu_search(8192, 8192, 8192, 2)

@@ -1,0 +1,44 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps on CPU
+with the full substrate (sharded data, AdamW+cosine, async checkpoints,
+fault-tolerant loop).  This is deliverable (b)'s end-to-end example.
+
+  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+The ~100M config is the xlstm-125m assigned arch at full width but reduced
+depth (so a few hundred CPU steps finish in minutes); pass --full-depth to
+train the real 12-layer config if you have the time budget.
+"""
+import argparse
+import dataclasses
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs import get_config
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--full-depth", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    # xlstm-125m is genuinely ~140M params; reduced depth keeps CPU time sane
+    argv = [
+        "--arch", "xlstm-125m",
+        "--steps", str(args.steps),
+        "--batch", "8", "--seq", "128",
+        "--lr", "3e-4",
+        "--ckpt-dir", args.ckpt_dir,
+        "--ckpt-every", "50",
+        "--metrics-csv", "/tmp/train_lm_metrics.csv",
+    ]
+    if not args.full_depth:
+        argv += ["--smoke"]  # reduced config for quick demonstration
+    raise SystemExit(train_main(argv))
+
+
+if __name__ == "__main__":
+    main()

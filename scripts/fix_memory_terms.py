@@ -1,0 +1,42 @@
+"""Recompute roofline memory terms in existing dry-run records (no
+re-compile needed — raw XLA and census values are stored in each record).
+
+memory bytes := xla_bytes_accessed * max(1, census_flops / xla_flops)
+(see dryrun.py provenance comment).
+"""
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, "src")
+from repro.core.roofline import RooflineReport  # noqa: E402
+
+D = Path("experiments/dryrun")
+n = 0
+for f in sorted(D.glob("*.json")):
+    r = json.loads(f.read_text())
+    if r.get("status") != "ok":
+        continue
+    c = r["cost"]
+    if "trip_ratio" in c:
+        continue  # already new-format
+    xf, xb = c["xla_cost_analysis_flops"], c["xla_cost_analysis_bytes"]
+    cf = c["per_device_flops"]
+    ratio = (cf / xf) if xf > 0 else 1.0
+    new_bytes = xb * max(ratio, 1.0)
+    if new_bytes == 0.0:
+        new_bytes = c["per_device_bytes"]
+    c["census_instr_level_bytes"] = c["per_device_bytes"]
+    c["trip_ratio"] = ratio
+    c["per_device_bytes"] = new_bytes
+    rep = RooflineReport(
+        hlo_flops=cf * r["chips"],
+        hlo_bytes=new_bytes * r["chips"],
+        collective_bytes=c["per_device_collective_bytes"] * r["chips"],
+        chips=r["chips"],
+        model_flops=r["roofline"].get("model_flops"),
+    )
+    r["roofline"] = rep.as_dict()
+    f.write_text(json.dumps(r, indent=2, default=str))
+    n += 1
+print(f"rewrote {n} records")

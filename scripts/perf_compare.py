@@ -1,0 +1,65 @@
+"""Diff perf-variant dry-run records against their baselines.
+
+  PYTHONPATH=src python scripts/perf_compare.py [arch shape]
+"""
+import json
+import sys
+from pathlib import Path
+
+D = Path("experiments/dryrun")
+
+
+def load(name):
+    f = D / f"{name}.json"
+    return json.loads(f.read_text()) if f.exists() else None
+
+
+def row(r):
+    rf = r["roofline"]
+    return {
+        "bound": rf["bound"],
+        "compute_s": rf["compute_s"],
+        "memory_s": rf["memory_s"],
+        "collective_s": rf["collective_s"],
+        "step_lb_s": rf["step_lb_s"],
+        "frac": rf.get("roofline_fraction"),
+        "peak_gb": r["memory"]["peak_bytes_per_device"] / 2**30,
+        "fits": r["memory"]["fits_v5e_16gb"],
+    }
+
+
+def main():
+    cells = (
+        [(sys.argv[1], sys.argv[2])] if len(sys.argv) == 3
+        else [("llama3-405b", "train_4k"), ("zamba2-2.7b", "prefill_32k"),
+              ("kimi-k2-1t-a32b", "decode_32k")]
+    )
+    for arch, shape in cells:
+        base = load(f"{arch}__{shape}__single")
+        if not base or base["status"] != "ok":
+            print(f"{arch} x {shape}: no baseline yet")
+            continue
+        b = row(base)
+        print(f"\n=== {arch} × {shape} (single pod) — dominant: {b['bound']} ===")
+        print(f"{'variant':>14} {'bound':>10} {'comp':>9} {'mem':>9} {'coll':>9} "
+              f"{'step_lb':>9} {'frac':>7} {'GB/dev':>7} {'Δdom':>7}")
+        dom_key = b["bound"] + "_s"
+
+        def pr(tag, r):
+            delta = (r[dom_key] - b[dom_key]) / b[dom_key] * 100 if b[dom_key] else 0
+            print(f"{tag:>14} {r['bound']:>10} {r['compute_s']:>9.4f} "
+                  f"{r['memory_s']:>9.4f} {r['collective_s']:>9.4f} "
+                  f"{r['step_lb_s']:>9.4f} "
+                  f"{(r['frac'] or 0):>7.4f} {r['peak_gb']:>7.1f} {delta:>+6.1f}%")
+
+        pr("baseline", b)
+        for f in sorted(D.glob(f"{arch}__{shape}__single__*.json")):
+            r = json.loads(f.read_text())
+            if r["status"] != "ok":
+                print(f"{f.stem.split('__')[-1]:>14} ERROR: {r.get('error','')[:60]}")
+                continue
+            pr(f.stem.split("__")[-1], row(r))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""repro.core — the paper's contribution: transfer model, tiling, energy, MX ops."""
+from . import energy, ops, paper_data, roofline, tiling, transfer_model
+from .ops import MXPolicy, matmul, use_policy
+from .tiling import TilePlan, plan_matmul_tiles
+from .transfer_model import (
+    BaselineKernel,
+    GemmProblem,
+    MXKernel,
+    PallasGemmTiling,
+    Transfers,
+)
+
+__all__ = [
+    "energy", "ops", "paper_data", "roofline", "tiling", "transfer_model",
+    "MXPolicy", "matmul", "use_policy", "TilePlan", "plan_matmul_tiles",
+    "BaselineKernel", "GemmProblem", "MXKernel", "PallasGemmTiling", "Transfers",
+]

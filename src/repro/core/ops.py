@@ -1,0 +1,133 @@
+"""MX dispatch layer: every heavy matmul in the framework routes through here.
+
+`MXPolicy` is the software surface of the paper's `msettile`/`mx*` ISA: it
+selects the kernel backend and the tile plan.  Model code calls
+`ops.matmul(a, b)`; which physical kernel runs is a deployment decision:
+
+  - "pallas_mx"        — the paper-faithful TPU kernel (VMEM accumulator,
+                         C-reset, plan from core.tiling).  TPU, or CPU via
+                         interpret=True (tests).
+  - "pallas_baseline"  — the paper's baseline traffic pattern (no inter-k
+                         buffering), for A/B comparisons.
+  - "xla"              — plain jnp.dot.  Used for dry-run lowering (Pallas
+                         TPU kernels cannot lower on the CPU backend) and CPU
+                         smoke tests.  On real TPU, XLA's own matmul already
+                         implements MX-style accumulation internally — the
+                         Pallas kernels exist to *control* the tiling with
+                         the paper's calculus and to fuse beyond what XLA
+                         picks (see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.baseline_matmul import baseline_matmul
+from ..kernels.mx_matmul import mx_matmul
+from .tiling import DEFAULT_VMEM_BUDGET, TilePlan, plan_matmul_tiles
+from .transfer_model import GemmProblem
+
+BACKENDS = ("xla", "pallas_mx", "pallas_baseline")
+
+
+@dataclasses.dataclass(frozen=True)
+class MXPolicy:
+    backend: str = "xla"
+    vmem_budget: int = DEFAULT_VMEM_BUDGET
+    interpret: bool = True  # CPU container default; False on real TPU
+    # Fixed block shapes override the tile planner when set:
+    bm: Optional[int] = None
+    bn: Optional[int] = None
+    bk: Optional[int] = None
+
+    def __post_init__(self):
+        if self.backend not in BACKENDS:
+            raise ValueError(f"unknown backend {self.backend!r}; one of {BACKENDS}")
+
+    def plan(self, M: int, N: int, K: int, elem_bytes: int) -> TilePlan:
+        if self.bm and self.bn and self.bk:
+            from .transfer_model import PallasGemmTiling
+
+            t = PallasGemmTiling(self.bm, self.bn, self.bk,
+                                 accumulate_in_vmem=self.backend != "pallas_baseline")
+            p = GemmProblem(M, N, K, elem_bytes)
+            return TilePlan(
+                self.bm, self.bn, self.bk,
+                hbm_bytes=t.hbm_bytes(p),
+                vmem_bytes=t.vmem_bytes(p),
+                arithmetic_intensity=t.arithmetic_intensity(p),
+                grid_steps=t.grid_steps(p),
+                accumulate_in_vmem=t.accumulate_in_vmem,
+            )
+        return plan_matmul_tiles(
+            GemmProblem(M, N, K, elem_bytes),
+            vmem_budget=self.vmem_budget,
+            accumulate_in_vmem=self.backend != "pallas_baseline",
+        )
+
+
+_state = threading.local()
+
+
+def current_policy() -> MXPolicy:
+    return getattr(_state, "policy", None) or MXPolicy()
+
+
+@contextlib.contextmanager
+def use_policy(policy: MXPolicy):
+    prev = getattr(_state, "policy", None)
+    _state.policy = policy
+    try:
+        yield policy
+    finally:
+        _state.policy = prev
+
+
+def matmul(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    policy: Optional[MXPolicy] = None,
+    out_dtype=None,
+) -> jax.Array:
+    """D = A @ B through the MX dispatch.  a: (..., M, K), b: (K, N)."""
+    policy = policy or current_policy()
+    out_dtype = out_dtype or a.dtype
+    if policy.backend == "xla":
+        return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(out_dtype)
+
+    lead = a.shape[:-2] if a.ndim > 2 else ()
+    a2 = a.reshape(-1, a.shape[-1])
+    M, K = a2.shape
+    N = b.shape[-1]
+    plan = policy.plan(M, N, K, a.dtype.itemsize)
+    kw = dict(bm=plan.bm, bn=plan.bn, bk=plan.bk, out_dtype=out_dtype,
+              interpret=policy.interpret)
+    if policy.backend == "pallas_mx":
+        out = mx_matmul(a2, b, **kw)
+    else:
+        out = baseline_matmul(a2, b, **kw)
+    if a.ndim > 2:
+        out = out.reshape(*lead, a.shape[-2], N)
+    return out
+
+
+def einsum(subscripts: str, *operands, policy: Optional[MXPolicy] = None, **kw):
+    """Einsum that routes plain contractions through `matmul`; everything
+    else falls back to jnp.einsum (still counted by the roofline from HLO)."""
+    policy = policy or current_policy()
+    if policy.backend == "xla" or len(operands) != 2:
+        return jnp.einsum(subscripts, *operands, **kw)
+    # Only the canonical "...mk,kn->...mn" form hits the Pallas path.
+    try:
+        lhs, rhs = subscripts.split("->")[0].split(",")
+        if lhs.endswith("mk") and rhs == "kn":
+            return matmul(*operands, policy=policy)
+    except ValueError:
+        pass
+    return jnp.einsum(subscripts, *operands, **kw)

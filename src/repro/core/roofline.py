@@ -1,0 +1,214 @@
+"""Three-term roofline calculus for TPU v5e (the contract's HW constants).
+
+    compute term    = HLO_FLOPs            / (chips * PEAK_FLOPS)
+    memory term     = HLO_bytes            / (chips * HBM_BW)
+    collective term = collective_bytes     / (chips * ICI_BW)
+
+The terms are *times in seconds* for one step; the max of the three is the
+lower bound on step time, and the dominant term is the bottleneck the perf
+loop iterates on (system prompt §ROOFLINE ANALYSIS).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Iterable, Optional
+
+# TPU v5e, per chip (contract-specified):
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+HBM_BW = 819e9  # B/s
+ICI_BW = 50e9  # B/s per link
+
+_COLLECTIVE_OPS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# HLO shape token, e.g. f32[128,256]{1,0} or bf16[4,8,16]
+_SHAPE_RE = re.compile(r"(pred|u4|u8|u16|u32|u64|s4|s8|s16|s32|s64|bf16|f8e4m3fn|f8e5m2|f16|f32|f64|c64|c128)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {
+    "pred": 1, "u4": 1, "s4": 1, "u8": 1, "s8": 1,
+    "u16": 2, "s16": 2, "f16": 2, "bf16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+    "u32": 4, "s32": 4, "f32": 4,
+    "u64": 8, "s64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Sum byte sizes of all shapes appearing in an HLO type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dtype, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    """Per-kind byte counts of collective ops parsed from HLO text."""
+
+    bytes_by_kind: Dict[str, int]
+    count_by_kind: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_kind.values())
+
+
+def parse_collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Sum operand sizes of every collective op in an HLO dump.
+
+    We parse instruction lines of the form
+        %x = f32[...] all-gather(f32[...] %y), ...
+    and attribute the *operand* bytes (what actually crosses links, to first
+    order) to the op kind.  ``-start`` variants are counted; ``-done`` ops are
+    skipped to avoid double counting.
+    """
+    bytes_by_kind: Dict[str, int] = {k: 0 for k in _COLLECTIVE_OPS}
+    count_by_kind: Dict[str, int] = {k: 0 for k in _COLLECTIVE_OPS}
+    # instruction form:  %name = <result-type> <opcode>(<operands>), attrs...
+    defn_re = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\([^=]*?\)|\S+)\s+([\w\-]+)")
+    # pass 1: instruction name -> result-type string
+    shapes: Dict[str, str] = {}
+    lines = hlo_text.splitlines()
+    for line in lines:
+        m = defn_re.match(line)
+        if m:
+            shapes[m.group(1)] = m.group(2)
+    ref_re = re.compile(r"%([\w\.\-]+)")
+    for line in lines:
+        m = defn_re.match(line)
+        if not m:
+            continue
+        opcode = m.group(3)
+        kind = None
+        for k in _COLLECTIVE_OPS:
+            if opcode == k or opcode == f"{k}-start":
+                kind = k
+                break
+        if kind is None:
+            continue
+        # operands: inside the first level-0 (...) after the opcode
+        rest = line[m.end():]
+        paren = rest.find("(")
+        if paren < 0:
+            continue
+        inside = rest[paren + 1:]
+        depth, end = 1, len(inside)
+        for i, ch in enumerate(inside):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        seg = inside[:end]
+        operand_bytes = _shape_bytes(seg)  # inline-typed operands
+        if operand_bytes == 0:
+            # bare %ref operands: resolve from the definition table
+            operand_bytes = sum(
+                _shape_bytes(shapes.get(r, "")) for r in ref_re.findall(seg)
+            )
+        if operand_bytes == 0:
+            operand_bytes = _shape_bytes(m.group(2))  # last resort: result type
+        bytes_by_kind[kind] += operand_bytes
+        count_by_kind[kind] += 1
+    return CollectiveStats(bytes_by_kind, count_by_kind)
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    """The contract's per-(arch, mesh) §Roofline record."""
+
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    chips: int
+    model_flops: Optional[float] = None  # 6*N*D (dense) / 6*N_active*D (MoE)
+    peak_flops: float = PEAK_FLOPS_BF16
+    hbm_bw: float = HBM_BW
+    ici_bw: float = ICI_BW
+
+    @property
+    def compute_s(self) -> float:
+        return self.hlo_flops / (self.chips * self.peak_flops)
+
+    @property
+    def memory_s(self) -> float:
+        return self.hlo_bytes / (self.chips * self.hbm_bw)
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes / (self.chips * self.ici_bw)
+
+    @property
+    def bound(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_lower_bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> Optional[float]:
+        """MODEL_FLOPS / HLO_FLOPs — catches remat/redundancy waste."""
+        if self.model_flops is None or self.hlo_flops == 0:
+            return None
+        return self.model_flops / self.hlo_flops
+
+    @property
+    def roofline_fraction(self) -> Optional[float]:
+        """Useful-FLOP utilization if the step ran at the roofline bound:
+        MODEL_FLOPS / (chips * peak * bound_time).  This is the 'score'
+        fraction reported in EXPERIMENTS.md §Perf."""
+        if self.model_flops is None:
+            return None
+        t = self.step_time_lower_bound_s
+        if t == 0:
+            return None
+        return self.model_flops / (self.chips * self.peak_flops * t)
+
+    def as_dict(self) -> dict:
+        return {
+            "hlo_flops": self.hlo_flops,
+            "hlo_bytes": self.hlo_bytes,
+            "collective_bytes": self.collective_bytes,
+            "chips": self.chips,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bound": self.bound,
+            "step_lb_s": self.step_time_lower_bound_s,
+            "model_flops": self.model_flops,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def dense_model_flops(n_params: int, tokens: int) -> float:
+    """6*N*D training FLOPs (fwd+bwd).  For inference use 2*N*D."""
+    return 6.0 * n_params * tokens
+
+
+def inference_model_flops(n_params: int, tokens: int) -> float:
+    return 2.0 * n_params * tokens

@@ -1,0 +1,135 @@
+"""Tile-plan search — the TPU analogue of the paper's `msettile` + §II calculus.
+
+The paper picks (m, n, k, m', n', k') under a 256 B near-FPU buffer budget to
+minimize VRF traffic.  We pick Pallas block shapes (bm, bn, bk) under a VMEM
+budget to minimize HBM traffic, with MXU alignment constraints (the systolic
+array wants multiples of 128 on the matmul dims; the sublane dim wants
+multiples of 8 for f32 / 16 for bf16).
+
+`TilePlan` is consumed by `kernels/mx_matmul.py` as its BlockSpec shapes and
+by `core/energy.py` / `benchmarks` for the traffic accounting.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .transfer_model import GemmProblem, PallasGemmTiling
+
+# TPU v5e-ish VMEM budget we allow a single kernel working set to claim.
+# (Real VMEM is ~128 MiB; we keep headroom for double buffering: Pallas
+# prefetches the next block while computing, doubling the input footprint.)
+DEFAULT_VMEM_BUDGET = 64 * 1024 * 1024
+
+MXU_DIM = 128  # systolic array edge
+_SUBLANE = {2: 16, 4: 8, 8: 8}  # min second-minor tile per element size
+
+
+@dataclasses.dataclass(frozen=True)
+class TilePlan:
+    """A chosen (bm, bn, bk) with provenance for reporting."""
+
+    bm: int
+    bn: int
+    bk: int
+    hbm_bytes: int
+    vmem_bytes: int
+    arithmetic_intensity: float
+    grid_steps: int
+    accumulate_in_vmem: bool = True
+
+    def block_shapes(self) -> Tuple[Tuple[int, int], Tuple[int, int], Tuple[int, int]]:
+        return (self.bm, self.bk), (self.bk, self.bn), (self.bm, self.bn)
+
+
+def _round_up(x: int, mult: int) -> int:
+    return mult * -(-x // mult)
+
+
+def _candidate_dims(dim: int, align: int, cap: int) -> List[int]:
+    """Aligned candidate block sizes covering a dimension of size `dim`."""
+    cands = []
+    b = align
+    while b < min(dim, cap):
+        cands.append(b)
+        b *= 2
+    cands.append(min(_round_up(dim, align), cap))
+    return sorted(set(cands))
+
+
+def plan_matmul_tiles(
+    p: GemmProblem,
+    *,
+    vmem_budget: int = DEFAULT_VMEM_BUDGET,
+    accumulate_in_vmem: bool = True,
+    max_block: int = 4096,
+    acc_bytes: int = 4,
+) -> TilePlan:
+    """Search (bm, bn, bk) minimizing HBM traffic under the VMEM budget.
+
+    Mirrors the paper's search over tile/sub-tile configs in Table IV:
+    the objective is the Table I ref. 1) total with inter-k buffering
+    (MX) or without (baseline), and the constraint is the lower-level
+    capacity (VMEM here, the 256 B buffer there).
+
+    Tie-breaks (in order): fewer grid steps (higher "SIMD ratio" — the
+    paper's instruction-amortization argument), larger bk (longer
+    accumulation chains), squarer (bm, bn).
+    """
+    sub = _SUBLANE[p.elem_bytes]
+    bm_cands = _candidate_dims(p.M, max(sub, min(MXU_DIM, _round_up(p.M, sub))), max_block)
+    bn_cands = _candidate_dims(p.N, min(MXU_DIM, _round_up(p.N, MXU_DIM)), max_block)
+    bk_cands = _candidate_dims(p.K, min(MXU_DIM, _round_up(p.K, sub)), max_block)
+
+    best: Optional[Tuple] = None
+    best_plan: Optional[TilePlan] = None
+    for bm in bm_cands:
+        for bn in bn_cands:
+            for bk in bk_cands:
+                tiling = PallasGemmTiling(
+                    bm, bn, bk, accumulate_in_vmem=accumulate_in_vmem
+                )
+                # Double-buffered inputs: Pallas pipelines the next (A, B)
+                # block DMA while the MXU consumes the current one.
+                vmem = (
+                    2 * (bm * bk + bk * bn) * p.elem_bytes + bm * bn * acc_bytes
+                )
+                if vmem > vmem_budget:
+                    continue
+                traffic = tiling.hbm_bytes(p)
+                key = (
+                    traffic,
+                    tiling.grid_steps(p),
+                    -bk,
+                    abs(math.log(bm / bn)) if bn else 0.0,
+                )
+                if best is None or key < best:
+                    best = key
+                    best_plan = TilePlan(
+                        bm=bm,
+                        bn=bn,
+                        bk=bk,
+                        hbm_bytes=traffic,
+                        vmem_bytes=vmem,
+                        arithmetic_intensity=tiling.arithmetic_intensity(p),
+                        grid_steps=tiling.grid_steps(p),
+                        accumulate_in_vmem=accumulate_in_vmem,
+                    )
+    if best_plan is None:
+        raise ValueError(
+            f"no feasible tile plan for {p} under vmem_budget={vmem_budget}"
+        )
+    return best_plan
+
+
+def paper_subtile_space() -> Iterable[Tuple[int, int, int]]:
+    """The paper's feasible sub-tile space: m', n', k' in {4, 8} under the
+    256 B buffer (m'*n' output elements * 8 B <= 256 B for FP64)."""
+    for m_ in (4, 8):
+        for n_ in (4, 8):
+            for k_ in (4, 8):
+                if m_ * n_ * 8 <= 256:
+                    yield (m_, n_, k_)

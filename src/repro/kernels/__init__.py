@@ -1,0 +1,8 @@
+"""Pallas TPU kernels (validated on CPU via interpret=True) + jnp oracles."""
+from . import ref
+from .baseline_matmul import baseline_matmul
+from .mx_flash_attention import mx_flash_attention
+from .mx_matmul import mx_matmul
+from .ssd_scan import ssd_scan
+
+__all__ = ["ref", "baseline_matmul", "mx_flash_attention", "mx_matmul", "ssd_scan"]

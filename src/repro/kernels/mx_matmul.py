@@ -1,0 +1,134 @@
+"""MX-ready Pallas matmul: the paper's technique, TPU-native.
+
+The paper's near-FPU tile buffer accumulates an m'×n' output sub-tile across
+the k' reduction, writing the result to the VRF once instead of
+read-modify-writing it every step (inter-k-buffering, §II-C-a), and resets
+instead of loading when C == 0 (§II-C-b).
+
+TPU mapping (DESIGN.md §2):
+  - the output block's f32 accumulator lives in a VMEM scratch that persists
+    across the innermost (k) grid dimension;
+  - `@pl.when(k == 0)` zero-init  == C-tile reset (no C load);
+  - `@pl.when(k == nk-1)` single write-back of the finished block == the
+    single D(↑) = M*N store of Table II's MX row;
+  - BlockSpec index maps are the `mld.a` / `mld.b` tile loads — the A block
+    (i, k) is independent of j, so Pallas's pipeline keeps it resident while
+    j advances: that is the broadcast-engine reuse of the A tile.
+
+Block shapes come from `core.tiling.plan_matmul_tiles` (the `msettile`
+analogue).  The grid iterates (m, n, k) with k innermost ("arbitrary"
+semantics — the accumulator carries a dependence), m/n parallel.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mx_matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, nk: int, out_dtype):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():  # C-tile reset: initialize the near-compute accumulator
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # mxfmacc: one systolic-tile FMA chain into the resident accumulator.
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _store():  # single write-back of the finished output tile (D up once)
+        o_ref[...] = acc_ref[...].astype(out_dtype)
+
+
+def _bias_matmul_kernel(a_ref, b_ref, c_ref, o_ref, acc_ref, *, nk: int, out_dtype):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():  # general GEMM (Eq. 1): load C once instead of resetting
+        acc_ref[...] = c_ref[...].astype(jnp.float32)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(out_dtype)
+
+
+def _pad_to(x: jax.Array, m0: int, m1: int) -> jax.Array:
+    p0 = (-x.shape[0]) % m0
+    p1 = (-x.shape[1]) % m1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bm", "bn", "bk", "out_dtype", "interpret"),
+)
+def mx_matmul(
+    a: jax.Array,
+    b: jax.Array,
+    c: Optional[jax.Array] = None,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    out_dtype=None,
+    interpret: bool = False,
+) -> jax.Array:
+    """D = A @ B (+ C), MX-style: f32 VMEM accumulator across the K grid.
+
+    a: (M, K), b: (K, N), optional c: (M, N).  Inputs are padded up to block
+    multiples (the wrapper-level analogue of the paper's ceil-div tiling).
+    """
+    if a.ndim != 2 or b.ndim != 2:
+        raise ValueError(f"mx_matmul expects 2-D operands, got {a.shape}, {b.shape}")
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2, (a.shape, b.shape)
+    out_dtype = out_dtype or a.dtype
+
+    bm_, bn_, bk_ = min(bm, M), min(bn, N), min(bk, K)
+    a_p = _pad_to(a, bm_, bk_)
+    b_p = _pad_to(b, bk_, bn_)
+    Mp, Kp = a_p.shape
+    Np = b_p.shape[1]
+    nk = Kp // bk_
+    grid = (Mp // bm_, Np // bn_, nk)
+
+    in_specs = [
+        pl.BlockSpec((bm_, bk_), lambda i, j, k: (i, k)),  # mld.a
+        pl.BlockSpec((bk_, bn_), lambda i, j, k: (k, j)),  # mld.b
+    ]
+    operands = [a_p, b_p]
+    if c is not None:
+        c_p = _pad_to(c, bm_, bn_)
+        in_specs.append(pl.BlockSpec((bm_, bn_), lambda i, j, k: (i, j)))
+        operands.append(c_p)
+        kernel = functools.partial(_bias_matmul_kernel, nk=nk, out_dtype=out_dtype)
+    else:
+        kernel = functools.partial(_mx_matmul_kernel, nk=nk, out_dtype=out_dtype)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, k: (i, j)),  # mst.c
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.float32)],  # the tile buffer
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(*operands)
+    return out[:M, :N]

@@ -1,0 +1,85 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each `*_ref` is the semantic ground truth its kernel is tested against
+(interpret-mode allclose sweeps in tests/test_kernels_*.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jax.Array, b: jax.Array, out_dtype=None) -> jax.Array:
+    """D = A @ B with f32 accumulation (the MX semantic: full-precision
+    accumulation in the near-FPU buffer, single write-back)."""
+    out_dtype = out_dtype or a.dtype
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def matmul_bias_ref(a, b, c, out_dtype=None):
+    """GEMM with C != 0 (the paper's general Eq. 1)."""
+    out_dtype = out_dtype or a.dtype
+    acc = jnp.dot(a, b, preferred_element_type=jnp.float32)
+    return (acc + c.astype(jnp.float32)).astype(out_dtype)
+
+
+def baseline_matmul_ref(a, b, bk: int, out_dtype=None):
+    """Oracle for the *baseline* kernel: partial sums round-trip through the
+    output buffer in the output dtype every bk-chunk (no inter-k buffering).
+    For f32 outputs this equals matmul_ref; for narrow dtypes it exposes the
+    accumulation-precision loss the MX buffer avoids."""
+    out_dtype = out_dtype or a.dtype
+    K = a.shape[-1]
+    nk = -(-K // bk)
+    out = jnp.zeros((*a.shape[:-1], b.shape[-1]), out_dtype)
+    for ki in range(nk):
+        a_blk = a[..., ki * bk : (ki + 1) * bk]
+        b_blk = b[ki * bk : (ki + 1) * bk, :]
+        part = jnp.dot(a_blk, b_blk, preferred_element_type=jnp.float32)
+        out = (out.astype(jnp.float32) + part).astype(out_dtype)
+    return out
+
+
+def ssd_scan_ref(x, a_log, b, c, chunk: int):
+    """Mamba-2 SSD (state-space dual) oracle, chunked semantics.
+
+    Shapes (single head):
+      x:     (L, P)   input projected to head dim P
+      a_log: (L,)     log of the per-step scalar decay (a_t = exp(a_log_t) in (0,1])
+      b:     (L, S)   input->state projection   (S = ssm state size)
+      c:     (L, S)   state->output projection
+    Returns y: (L, P) with  h_t = a_t * h_{t-1} + b_t^T x_t ;  y_t = c_t h_t.
+
+    The chunked algorithm (intra-chunk quadratic + inter-chunk recurrence) is
+    what the kernel implements; this oracle is the exact sequential scan, so
+    it validates both the math and the chunking.
+    """
+    L, P = x.shape
+    S = b.shape[-1]
+
+    def step(h, inp):
+        xt, alog_t, bt, ct = inp
+        a_t = jnp.exp(alog_t)
+        h = a_t * h + jnp.outer(bt, xt)  # (S, P)
+        y = ct @ h  # (P,)
+        return h, y
+
+    h0 = jnp.zeros((S, P), jnp.float32)
+    _, y = jax.lax.scan(
+        step, h0, (x.astype(jnp.float32), a_log.astype(jnp.float32),
+                   b.astype(jnp.float32), c.astype(jnp.float32))
+    )
+    return y.astype(x.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, scale=None):
+    """Numerically-stable softmax attention oracle. q,k,v: (L, H) single head."""
+    Lq, d = q.shape
+    Lk = k.shape[0]
+    scale = scale if scale is not None else 1.0 / (d**0.5)
+    s = (q.astype(jnp.float32) @ k.astype(jnp.float32).T) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((Lq, Lk), bool), k=Lk - Lq)
+        s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return (p @ v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,2 @@
+from . import mesh, specs, steps
+__all__ = ["mesh", "specs", "steps"]

@@ -1,0 +1,253 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+# ^ MUST precede any jax import (jax locks the device count at first init).
+#   The 512 placeholder host devices exist ONLY for this dry-run process.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this script:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. constructs abstract params/optimizer/batch specs (no allocation),
+  3. jit(step, in_shardings, out_shardings).lower(...).compile(),
+  4. records memory_analysis(), cost_analysis(), and the collective-byte
+     census parsed from the optimized HLO, into a JSON file consumed by
+     benchmarks/roofline_report.py and EXPERIMENTS.md.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-405b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all [--mesh both] [--out experiments/dryrun]
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ARCH_IDS, SHAPES, cell_applicable, get_config
+from ..core.hlo_census import census
+from ..core.roofline import (
+    HBM_BW, ICI_BW, PEAK_FLOPS_BF16, RooflineReport, parse_collective_bytes,
+)
+from ..launch.mesh import make_production_mesh
+from ..launch.specs import cell_specs
+from ..launch.steps import make_prefill_step, make_serve_step, make_train_step
+from ..models import build_model
+from ..optim.adamw import AdamW
+from ..optim.schedules import warmup_cosine
+from ..parallel.sharding import make_rules, use_rules
+
+
+def lower_cell(arch: str, shape: str, mesh_kind: str, *, extra: dict | None = None):
+    """Lower+compile one cell; returns the result record dict."""
+    cfg = get_config(arch)
+    preset = SHAPES[shape]
+    ok, reason = cell_applicable(cfg, preset)
+    if not ok:
+        return {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                "status": "skipped", "reason": reason}
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = mesh.size
+    extra = extra or {}
+    if extra.get("cfg"):
+        cfg = __import__("dataclasses").replace(cfg, **extra["cfg"])
+    rules = make_rules(
+        mesh, profile=cfg.parallelism, fsdp=cfg.fsdp,
+        seq_parallel=extra.get("seq_parallel", False),
+    )
+    model = build_model(cfg)
+    opt = AdamW(lr=warmup_cosine(3e-4, 100, 10_000))
+    specs = cell_specs(cfg, preset, rules, opt=opt)
+
+    if specs.kind == "train":
+        step = make_train_step(model, cfg, opt,
+                               microbatch=extra.get("microbatch", 1))
+    elif specs.kind == "prefill":
+        step = make_prefill_step(model, cfg)
+    else:
+        step = make_serve_step(model, cfg)
+
+    t0 = time.time()
+    with use_rules(rules):
+        jitted = jax.jit(
+            step,
+            in_shardings=specs.in_shardings,
+            out_shardings=specs.out_shardings,
+            donate_argnums=specs.donate_argnums,
+        )
+        lowered = jitted.lower(*specs.args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    print(mem)  # proves it fits (per-device bytes)
+    cost = compiled.cost_analysis() or {}
+    print({k: v for k, v in cost.items() if k in ("flops", "bytes accessed")})
+    hlo = compiled.as_text()
+
+    # Trip-count-aware census: compiled.cost_analysis() counts while-loop
+    # (lax.scan) bodies ONCE — verified in tests/test_hlo_census.py — so for
+    # scanned layer stacks it undercounts by ~n_layers.  The census parses
+    # the optimized HLO, extracts known_trip_count, and multiplies.
+    cen = census(hlo)
+
+    per_dev_flops = float(cen.flops)
+    # Memory bytes: XLA's own per-op byte model (operands+results at fusion
+    # boundaries) scaled by the trip-count inflation ratio measured on FLOPs
+    # (dot FLOPs are fusion-independent, so census/xla flops isolates the
+    # while-loop undercount).  The raw instruction-level census overcounts on
+    # the CPU backend, whose fusion granularity is far finer than TPU's.
+    xla_flops = float(cost.get("flops", 0.0))
+    xla_bytes = float(cost.get("bytes accessed", 0.0))
+    trip_ratio = (per_dev_flops / xla_flops) if xla_flops > 0 else 1.0
+    per_dev_bytes = xla_bytes * max(trip_ratio, 1.0)
+    if per_dev_bytes == 0.0:
+        per_dev_bytes = float(cen.memory_bytes)
+    per_dev_coll = float(cen.collective_bytes)
+
+    # MODEL_FLOPS: 6*N_active*D for train, 2*N_active*D for inference
+    n_active = cfg.n_active_params()
+    factor = 6.0 if specs.kind == "train" else 2.0
+    model_flops = factor * n_active * specs.tokens_per_step
+
+    report = RooflineReport(
+        hlo_flops=per_dev_flops * chips,
+        hlo_bytes=per_dev_bytes * chips,
+        collective_bytes=per_dev_coll * chips,
+        chips=chips,
+        model_flops=model_flops,
+    )
+
+    record = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": mesh_kind,
+        "status": "ok",
+        "kind": specs.kind,
+        "chips": chips,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes_per_device": mem.argument_size_in_bytes,
+            "output_bytes_per_device": mem.output_size_in_bytes,
+            "temp_bytes_per_device": mem.temp_size_in_bytes,
+            "alias_bytes_per_device": mem.alias_size_in_bytes,
+            "peak_bytes_per_device": (
+                mem.argument_size_in_bytes + mem.output_size_in_bytes
+                + mem.temp_size_in_bytes - mem.alias_size_in_bytes
+            ),
+            "fits_v5e_16gb": bool(
+                mem.argument_size_in_bytes + mem.output_size_in_bytes
+                + mem.temp_size_in_bytes - mem.alias_size_in_bytes < 16 * 2**30
+            ),
+        },
+        "cost": {
+            "per_device_flops": per_dev_flops,
+            "per_device_bytes": per_dev_bytes,
+            "per_device_collective_bytes": per_dev_coll,
+            "collective_ops": cen.collective_count_by_kind,
+            "collective_bytes_by_kind": cen.collective_bytes_by_kind,
+            "unknown_trip_whiles": cen.unknown_trip_whiles,
+            "census_instr_level_bytes": float(cen.memory_bytes),
+            "trip_ratio": trip_ratio,
+            # raw XLA numbers for comparison (loop bodies counted once):
+            "xla_cost_analysis_flops": float(cost.get("flops", 0.0)),
+            "xla_cost_analysis_bytes": float(cost.get("bytes accessed", 0.0)),
+        },
+        "roofline": report.as_dict(),
+        "n_params": cfg.n_params(),
+        "n_active_params": n_active,
+        "tokens_per_step": specs.tokens_per_step,
+        "dropped_shardings": len(rules.dropped),
+    }
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--mesh", choices=("single", "multi", "both"), default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--skip-existing", action="store_true")
+    # ---- perf-iteration knobs (§Perf hillclimb) ----
+    ap.add_argument("--remat", choices=("full", "dots", "none"), default=None)
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--attn-chunk", type=int, default=None)
+    ap.add_argument("--moe-groups", type=int, default=None)
+    ap.add_argument("--moe-capacity", type=float, default=None)
+    ap.add_argument("--ssm-chunk", type=int, default=None)
+    ap.add_argument("--tag", default="", help="suffix for perf-variant files")
+    args = ap.parse_args()
+
+    out = Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    meshes = ("single", "multi") if args.mesh == "both" else (args.mesh,)
+    cells = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in SHAPES:
+                for m in meshes:
+                    cells.append((a, s, m))
+    else:
+        assert args.arch and args.shape
+        cells = [(args.arch, args.shape, m) for m in meshes]
+
+    cfg_over = {}
+    if args.remat:
+        cfg_over["remat_policy"] = args.remat
+    if args.attn_chunk:
+        cfg_over["attn_chunk_threshold"] = args.attn_chunk
+    if args.moe_groups:
+        cfg_over["moe_groups"] = args.moe_groups
+    if args.moe_capacity:
+        cfg_over["moe_capacity_factor"] = args.moe_capacity
+    if args.ssm_chunk:
+        cfg_over["ssm_chunk"] = args.ssm_chunk
+    extra = {
+        "microbatch": args.microbatch,
+        "seq_parallel": args.seq_parallel,
+        "cfg": cfg_over,
+    }
+
+    failures = 0
+    for arch, shape, mesh_kind in cells:
+        tag = f"__{args.tag}" if args.tag else ""
+        path = out / f"{arch}__{shape}__{mesh_kind}{tag}.json"
+        if args.skip_existing and path.exists():
+            print(f"[skip-existing] {path}")
+            continue
+        print(f"=== {arch} × {shape} × {mesh_kind} {tag} ===", flush=True)
+        try:
+            rec = lower_cell(arch, shape, mesh_kind, extra=extra)
+            rec["variant"] = {"tag": args.tag, **extra}
+        except Exception as e:  # noqa: BLE001 — record the failure, keep going
+            traceback.print_exc()
+            rec = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                   "status": "error", "error": f"{type(e).__name__}: {e}"}
+            failures += 1
+        path.write_text(json.dumps(rec, indent=2, default=str))
+        if rec["status"] == "ok":
+            r = rec["roofline"]
+            print(f"  bound={r['bound']} compute={r['compute_s']:.4f}s "
+                  f"mem={r['memory_s']:.4f}s coll={r['collective_s']:.4f}s "
+                  f"fits={rec['memory']['fits_v5e_16gb']} "
+                  f"(lower {rec['lower_s']}s compile {rec['compile_s']}s)",
+                  flush=True)
+    print(f"done; {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,107 @@
+"""Serving launcher: batched prefill + greedy decode with a KV cache.
+
+CPU smoke example:
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
+      --batch 4 --prompt-len 16 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import ARCH_IDS, get_config
+from ..launch.mesh import make_mesh
+from ..launch.steps import make_serve_step
+from ..models import build_model
+from ..parallel.sharding import make_rules, use_rules
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="llama3.2-1b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=None)
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous batching: 2x requests stream through "
+                         "--batch decode slots (runtime/batcher.py)")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch + ("-smoke" if args.smoke else ""))
+    if cfg.model_kind == "encdec":
+        print("enc-dec serving: decoder decode against a fixed encoder memory")
+    model = build_model(cfg)
+    mesh = make_mesh((1, len(jax.devices())), ("data", "model"))
+    rules = make_rules(mesh, profile=cfg.parallelism)
+    max_len = args.max_len or (args.prompt_len + args.gen)
+
+    with use_rules(rules):
+        params = model.init(jax.random.PRNGKey(0))
+        B = args.batch
+        rng = np.random.default_rng(0)
+
+        if args.continuous and cfg.model_kind != "encdec":
+            from ..runtime.batcher import ContinuousBatcher, Request
+
+            batcher = ContinuousBatcher(model, params, batch_slots=B,
+                                        max_len=max_len)
+            n_req = 2 * B
+            t0 = time.time()
+            for i in range(n_req):
+                plen = int(rng.integers(2, args.prompt_len + 1))
+                batcher.submit(Request(
+                    rid=i,
+                    prompt=rng.integers(0, cfg.vocab, plen).astype(np.int32),
+                    max_new=args.gen,
+                ))
+            finished = batcher.run_to_completion()
+            wall = time.time() - t0
+            total = sum(len(r.prompt) + len(r.output) for r in finished.values())
+            print(f"continuous batching: {len(finished)} requests through "
+                  f"{B} slots; {total / wall:.1f} tok/s (CPU)")
+            for rid in sorted(finished)[:2]:
+                print(f"  req {rid}: {finished[rid].output[:8]}")
+            return 0
+
+        prompt = rng.integers(0, cfg.vocab, (B, args.prompt_len)).astype(np.int32)
+        cache = model.make_cache(B, max_len, mode="init")
+        serve = make_serve_step(model, cfg)
+        if cfg.model_kind == "encdec":
+            frames = jnp.asarray(
+                rng.standard_normal((B, 32, cfg.frontend_dim)), jnp.float32
+            ) * 0.1
+            enc_out = model.encode(params, frames)
+            step = jax.jit(lambda p, c, t, i: serve(p, c, t, i, enc_out))
+        else:
+            step = jax.jit(serve)
+
+        # prefill by stepping the prompt (decode-path prefill keeps one code
+        # path; bulk prefill is the prefill_step lowering in the dry-run)
+        t0 = time.time()
+        tok = None
+        for t in range(args.prompt_len):
+            logits, cache = step(params, cache, prompt[:, t : t + 1], t)
+        out_tokens = []
+        for t in range(args.prompt_len, args.prompt_len + args.gen):
+            tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+            out_tokens.append(np.asarray(tok))
+            logits, cache = step(params, cache, tok, t)
+        wall = time.time() - t0
+
+    gen = np.concatenate(out_tokens, axis=1)
+    total_tokens = B * (args.prompt_len + args.gen)
+    print(f"generated {gen.shape} tokens; "
+          f"{total_tokens / wall:.1f} tok/s (batch {B}, CPU)")
+    print("sample:", gen[0][:16].tolist())
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,162 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch × shape) cell.
+
+Nothing here allocates device memory: full-scale configs are exercised
+exclusively through abstract lowering (the contract's dry-run discipline).
+
+Sequence conventions (documented in DESIGN.md):
+  decoder LM   train/prefill: tokens (B, S)
+  VLM          frontend_tokens patch embeddings prefix + (S - P) text tokens
+  enc-dec      S/2 modality frames into the encoder + S/2 decoder tokens
+  decode       one token against a seq_len cache; enc-dec adds enc_out
+               (B, 4096, d_model) cross-attention memory
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig
+from ..configs.shapes import ShapePreset
+from ..models import build_model
+from ..optim.adamw import AdamW
+from ..parallel.sharding import AxisRules, tree_shardings
+
+ENC_LEN_DECODE = 4_096  # encoder memory length for enc-dec decode shapes
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+@dataclasses.dataclass
+class CellSpecs:
+    """Everything needed to lower one (arch, shape, mesh) cell."""
+
+    kind: str  # train | prefill | decode
+    args: Tuple[Any, ...]  # abstract args in step-function order
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...]
+    tokens_per_step: int  # for MODEL_FLOPS
+
+
+def _batch_specs(cfg: ArchConfig, preset: ShapePreset, rules: AxisRules,
+                 with_labels: bool):
+    B, S = preset.global_batch, preset.seq_len
+    dspec = lambda shape, axes: NamedSharding(rules.mesh, rules.spec(shape, axes))
+    batch: Dict[str, Any] = {}
+    shard: Dict[str, Any] = {}
+    if cfg.model_kind == "encdec":
+        se = S // 2
+        batch["frames"] = sds((B, se, cfg.frontend_dim), jnp.bfloat16)
+        shard["frames"] = dspec((B, se, cfg.frontend_dim), ("batch", None, None))
+        batch["tokens"] = sds((B, se), jnp.int32)
+        shard["tokens"] = dspec((B, se), ("batch", None))
+        if with_labels:
+            batch["labels"] = sds((B, se), jnp.int32)
+            shard["labels"] = shard["tokens"]
+        n_tok = B * se
+    elif cfg.frontend_dim:
+        Pfx = cfg.frontend_tokens
+        St = S - Pfx
+        batch["pixel_embeds"] = sds((B, Pfx, cfg.frontend_dim), jnp.bfloat16)
+        shard["pixel_embeds"] = dspec((B, Pfx, cfg.frontend_dim), ("batch", None, None))
+        batch["tokens"] = sds((B, St), jnp.int32)
+        shard["tokens"] = dspec((B, St), ("batch", None))
+        if with_labels:
+            batch["labels"] = sds((B, St), jnp.int32)
+            shard["labels"] = shard["tokens"]
+        n_tok = B * S
+    else:
+        batch["tokens"] = sds((B, S), jnp.int32)
+        shard["tokens"] = dspec((B, S), ("batch", None))
+        if with_labels:
+            batch["labels"] = sds((B, S), jnp.int32)
+            shard["labels"] = shard["tokens"]
+        n_tok = B * S
+    return batch, shard, n_tok
+
+
+def cell_specs(
+    cfg: ArchConfig,
+    preset: ShapePreset,
+    rules: AxisRules,
+    *,
+    param_dtype=jnp.bfloat16,
+    opt: Optional[AdamW] = None,
+) -> CellSpecs:
+    model = build_model(cfg)
+    aparams = model.abstract(param_dtype)
+    paxes = model.axes()
+    pshard = tree_shardings(rules, aparams, paxes)
+
+    if preset.kind == "train":
+        assert opt is not None
+        aopt = opt.abstract_init(aparams)
+        oaxes = opt.state_axes(paxes)
+        oshard = jax.tree.map(
+            lambda s, ax: NamedSharding(rules.mesh, rules.spec(s.shape, ax)),
+            aopt, oaxes,
+        )
+        batch, bshard, n_tok = _batch_specs(cfg, preset, rules, with_labels=True)
+        metrics_shard = None  # replicated scalars
+        return CellSpecs(
+            kind="train",
+            args=(aparams, aopt, batch),
+            in_shardings=(pshard, oshard, bshard),
+            out_shardings=(pshard, oshard, metrics_shard),
+            donate_argnums=(0, 1),
+            tokens_per_step=n_tok,
+        )
+
+    if preset.kind == "prefill":
+        batch, bshard, n_tok = _batch_specs(cfg, preset, rules, with_labels=False)
+        B = preset.global_batch
+        S = batch["tokens"].shape[1] + (cfg.frontend_tokens if cfg.frontend_dim and cfg.model_kind != "encdec" else 0)
+        logits_shard = NamedSharding(
+            rules.mesh, rules.spec((B, S, cfg.vocab), ("batch", None, "vocab"))
+        )
+        return CellSpecs(
+            kind="prefill",
+            args=(aparams, batch),
+            in_shardings=(pshard, bshard),
+            out_shardings=logits_shard,
+            donate_argnums=(),
+            tokens_per_step=n_tok,
+        )
+
+    # ---- decode ----
+    B, S = preset.global_batch, preset.seq_len
+    acache = model.make_cache(B, S, mode="abstract")
+    caxes = model.make_cache(B, S, mode="axes")
+    cshard = jax.tree.map(
+        lambda s, ax: NamedSharding(rules.mesh, rules.spec(s.shape, ax)),
+        acache, caxes,
+    )
+    token = sds((B, 1), jnp.int32)
+    tshard = NamedSharding(rules.mesh, rules.spec((B, 1), ("batch", None)))
+    index = sds((), jnp.int32)
+    ishard = NamedSharding(rules.mesh, P())
+    logits_shard = NamedSharding(
+        rules.mesh, rules.spec((B, 1, cfg.vocab), ("batch", None, "vocab"))
+    )
+    args = [aparams, acache, token, index]
+    in_sh = [pshard, cshard, tshard, ishard]
+    if cfg.model_kind == "encdec":
+        enc_out = sds((B, ENC_LEN_DECODE, cfg.d_model), jnp.bfloat16)
+        args.append(enc_out)
+        in_sh.append(
+            NamedSharding(rules.mesh, rules.spec(enc_out.shape, ("batch", None, None)))
+        )
+    return CellSpecs(
+        kind="decode",
+        args=tuple(args),
+        in_shardings=tuple(in_sh),
+        out_shardings=(logits_shard, cshard),
+        donate_argnums=(1,),
+        tokens_per_step=B,
+    )

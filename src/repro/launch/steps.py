@@ -1,0 +1,107 @@
+"""Step functions: train_step / prefill_step / serve_step builders.
+
+These are the functions the dry-run lowers and the launcher jits.  Forward
+dispatch handles the three model-input conventions (decoder LM, VLM with
+prefix embeddings, encoder-decoder)."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..optim.adamw import AdamW
+from ..parallel.sharding import constrain
+
+
+def forward(model, cfg, params, batch):
+    """Returns (logits, aux).  Logits cover only label positions."""
+    if cfg.model_kind == "encdec":
+        logits, aux = model(params, batch["frames"], batch["tokens"])
+    elif cfg.frontend_dim:
+        logits, aux = model(params, batch["tokens"], prefix_embeds=batch["pixel_embeds"])
+        logits = logits[:, cfg.frontend_tokens :, :]  # loss on text positions
+    else:
+        logits, aux = model(params, batch["tokens"])
+    return logits, aux
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean next-token CE; logits f32 (B, S, V), labels int (B, S)."""
+    logits = constrain(logits, ("batch", "seq", "vocab"))
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def make_train_step(model, cfg, opt: AdamW, *, microbatch: int = 1) -> Callable:
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    `microbatch > 1` enables gradient accumulation: the global batch is split
+    into `microbatch` slices scanned sequentially (activation memory /
+    collective burst relief at large scale)."""
+
+    def loss_fn(params, batch):
+        logits, aux = forward(model, cfg, params, batch)
+        loss = cross_entropy(logits, batch["labels"])
+        return loss + aux, {"loss": loss, "aux_loss": aux}
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if microbatch == 1:
+            (_, metrics), grads = grad_fn(params, batch)
+        else:
+            def slice_mb(i, t):
+                mb = t.shape[0] // microbatch
+                return jax.lax.dynamic_slice_in_dim(t, i * mb, mb, axis=0)
+
+            def mb_step(carry, i):
+                acc, = carry
+                mb_batch = jax.tree.map(functools.partial(slice_mb, i), batch)
+                (_, metrics), grads = grad_fn(params, mb_batch)
+                acc = jax.tree.map(jnp.add, acc, grads)
+                return (acc,), metrics
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (gsum,), metrics = jax.lax.scan(
+                mb_step, (zero,), jnp.arange(microbatch)
+            )
+            grads = jax.tree.map(lambda g: g / microbatch, gsum)
+            metrics = jax.tree.map(lambda m: m.mean(), metrics)
+        new_params, new_opt, opt_metrics = opt.update(grads, opt_state, params)
+        return new_params, new_opt, {**metrics, **opt_metrics}
+
+    return train_step
+
+
+def make_prefill_step(model, cfg) -> Callable:
+    """(params, batch) -> logits.  Inference prefill (full-sequence forward)."""
+
+    def prefill_step(params, batch):
+        logits, _ = forward(model, cfg, params, batch)
+        return logits
+
+    return prefill_step
+
+
+def make_serve_step(model, cfg) -> Callable:
+    """One-token decode against a seq_len KV cache / recurrent state.
+
+    Decoder LM: (params, cache, token, index) -> (logits, cache)
+    Enc-dec:    (params, cache, token, index, enc_out) -> (logits, cache)
+    """
+    if cfg.model_kind == "encdec":
+
+        def serve_step(params, cache, token, index, enc_out):
+            return model.decode_step(params, token, cache, index, enc_out=enc_out)
+
+        return serve_step
+
+    def serve_step(params, cache, token, index):
+        return model.decode_step(params, token, cache, index)
+
+    return serve_step

@@ -1,0 +1,14 @@
+"""Model stacks and layers."""
+from . import layers, modules, moe, ssm, transformer, xlstm
+from .transformer import DecoderLM, EncDecLM
+
+
+def build_model(cfg):
+    """ArchConfig -> model module."""
+    if cfg.model_kind == "encdec":
+        return EncDecLM(cfg)
+    return DecoderLM(cfg)
+
+
+__all__ = ["layers", "modules", "moe", "ssm", "transformer", "xlstm",
+           "DecoderLM", "EncDecLM", "build_model"]

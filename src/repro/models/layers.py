@@ -1,0 +1,329 @@
+"""Transformer building blocks: norms, RoPE, linear, embedding, GQA attention, MLP.
+
+All weight-times-activation contractions route through `repro.core.ops.matmul`
+(the MX dispatch), so the paper's kernel serves every architecture.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import ops
+from .modules import Builder, Module
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float = 1e4) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 1e4) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Linear / Embedding
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Linear(Module):
+    d_in: int
+    d_out: int
+    axes: Tuple[Optional[str], Optional[str]] = ("embed", "mlp")
+    bias: bool = False
+
+    def build(self, mk: Builder):
+        p = {"w": mk.param("w", (self.d_in, self.d_out), self.axes)}
+        if self.bias:
+            p["b"] = mk.param("b", (self.d_out,), (self.axes[1],), init="zeros")
+        return p
+
+    def __call__(self, p, x):
+        y = ops.matmul(x, p["w"], out_dtype=x.dtype)
+        if self.bias:
+            y = y + p["b"].astype(y.dtype)
+        return y
+
+
+@dataclasses.dataclass(frozen=True)
+class Embedding(Module):
+    vocab: int
+    d: int
+
+    def build(self, mk: Builder):
+        return {"table": mk.param("table", (self.vocab, self.d), ("vocab", "embed"), scale=0.02)}
+
+    def __call__(self, p, ids):
+        return p["table"][ids]
+
+    def attend(self, p, x):
+        """Tied LM head: logits = x @ table^T (f32)."""
+        return jnp.dot(x, p["table"].T, preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA) — full, chunked (long-seq), and cached-decode paths
+# ---------------------------------------------------------------------------
+
+
+def _repeat_kv(k: jax.Array, groups: int) -> jax.Array:
+    """(B, S, Hkv, D) -> (B, S, Hkv*groups, D)."""
+    if groups == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, groups, d)).reshape(
+        b, s, h * groups, d
+    )
+
+
+def full_attention(q, k, v, *, causal: bool, q_offset: int = 0) -> jax.Array:
+    """q: (B, Sq, H, D), k/v: (B, Sk, H, D).  Materializes (Sq, Sk) scores —
+    use only for moderate sequence lengths."""
+    d = q.shape[-1]
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32)
+    s = s / math.sqrt(d)
+    if causal:
+        sq, sk = q.shape[1], k.shape[1]
+        qpos = jnp.arange(sq)[:, None] + q_offset
+        kpos = jnp.arange(sk)[None, :]
+        s = jnp.where(qpos >= kpos, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v)
+
+
+def chunked_attention(
+    q, k, v, *, causal: bool, block_kv: int = 512, q_offset: int = 0
+) -> jax.Array:
+    """Flash-style online-softmax attention, scanning over KV blocks.
+
+    The (m, l, o) running statistics are the MX inter-k accumulator pattern on
+    the KV axis: partial results stay in the scan carry (registers/VMEM on
+    TPU) and HBM sees each KV block exactly once.  Peak memory is
+    O(Sq * block_kv) instead of O(Sq * Sk).
+    """
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    nblk = -(-sk // block_kv)
+    pad = nblk * block_kv - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(b, nblk, block_kv, h, d).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nblk, block_kv, h, d).transpose(1, 0, 2, 3, 4)
+    scale = 1.0 / math.sqrt(d)
+    qpos = jnp.arange(sq)[:, None] + q_offset
+
+    def step(carry, blk):
+        m, l, o = carry
+        kblk, vblk, idx = blk
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kblk, preferred_element_type=jnp.float32) * scale
+        kpos = idx * block_kv + jnp.arange(block_kv)[None, :]
+        valid = kpos < sk  # drop right padding
+        keep = (qpos >= kpos) & valid if causal else jnp.broadcast_to(valid, (sq, block_kv))
+        s = jnp.where(keep[None, None], s, -jnp.inf)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        # guard fully-masked blocks: m_new may still be -inf
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        p = jnp.exp(s - m_safe[..., None])  # exp(-inf - finite) == 0 for masked
+        l_new = l * alpha + p.sum(axis=-1)
+        o_new = o * alpha[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(q.dtype), vblk, preferred_element_type=jnp.float32
+        )
+        return (m_new, l_new, o_new), None
+
+    m0 = jnp.full((b, h, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    o0 = jnp.zeros((b, h, sq, d), jnp.float32)
+    # checkpoint each KV step: backward saves only the O(Sq) carries, never
+    # the O(Sq x block) score blocks (flash backward's recompute strategy)
+    (m, l, o), _ = jax.lax.scan(
+        jax.checkpoint(step), (m0, l0, o0), (kb, vb, jnp.arange(nblk))
+    )
+    o = o / jnp.maximum(l[..., None], 1e-30)
+    return o.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class Attention(Module):
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: Optional[int] = None
+    qkv_bias: bool = False
+    rope_theta: float = 1e4
+    causal: bool = True
+    chunked_threshold: int = 2048  # switch to online-softmax beyond this
+    use_rope: bool = True
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def build(self, mk: Builder):
+        hd = self.hd
+        p = {
+            "wq": mk.param("wq", (self.d_model, self.n_heads * hd), ("embed", "heads")),
+            "wk": mk.param("wk", (self.d_model, self.n_kv_heads * hd), ("embed", "heads")),
+            "wv": mk.param("wv", (self.d_model, self.n_kv_heads * hd), ("embed", "heads")),
+            "wo": mk.param("wo", (self.n_heads * hd, self.d_model), ("heads", "embed")),
+        }
+        if self.qkv_bias:
+            p["bq"] = mk.param("bq", (self.n_heads * hd,), ("heads",), init="zeros")
+            p["bk"] = mk.param("bk", (self.n_kv_heads * hd,), ("heads",), init="zeros")
+            p["bv"] = mk.param("bv", (self.n_kv_heads * hd,), ("heads",), init="zeros")
+        return p
+
+    def _qkv(self, p, x, positions):
+        b, s, _ = x.shape
+        hd = self.hd
+        q = ops.matmul(x, p["wq"], out_dtype=x.dtype)
+        k = ops.matmul(x, p["wk"], out_dtype=x.dtype)
+        v = ops.matmul(x, p["wv"], out_dtype=x.dtype)
+        if self.qkv_bias:
+            q, k, v = q + p["bq"].astype(q.dtype), k + p["bk"].astype(k.dtype), v + p["bv"].astype(v.dtype)
+        q = q.reshape(b, s, self.n_heads, hd)
+        k = k.reshape(b, s, self.n_kv_heads, hd)
+        v = v.reshape(b, s, self.n_kv_heads, hd)
+        if self.use_rope:
+            q = apply_rope(q, positions, self.rope_theta)
+            k = apply_rope(k, positions, self.rope_theta)
+        return q, k, v
+
+    def __call__(self, p, x, *, positions=None, kv=None):
+        """Self-attention over x: (B, S, D).  If kv=(k_ext, v_ext) is given,
+        attends over those instead (cross-attention; no causal mask)."""
+        b, s, _ = x.shape
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        q, k, v = self._qkv(p, x, positions)
+        if kv is not None:
+            k, v = kv
+            causal = False
+        else:
+            causal = self.causal
+        groups = self.n_heads // self.n_kv_heads
+        k = _repeat_kv(k, groups) if k.shape[2] != self.n_heads else k
+        v = _repeat_kv(v, groups) if v.shape[2] != self.n_heads else v
+        if k.shape[1] > self.chunked_threshold:
+            o = chunked_attention(q, k, v, causal=causal)
+        else:
+            o = full_attention(q, k, v, causal=causal)
+        o = o.reshape(b, s, self.n_heads * self.hd)
+        return ops.matmul(o, p["wo"], out_dtype=x.dtype)
+
+    # ---------------- KV-cache decode path ----------------
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        hd = self.hd
+        return {
+            "k": jnp.zeros((batch, max_len, self.n_kv_heads, hd), dtype),
+            "v": jnp.zeros((batch, max_len, self.n_kv_heads, hd), dtype),
+        }
+
+    def abstract_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        hd = self.hd
+        sh = (batch, max_len, self.n_kv_heads, hd)
+        return {"k": jax.ShapeDtypeStruct(sh, dtype), "v": jax.ShapeDtypeStruct(sh, dtype)}
+
+    def cache_axes(self):
+        ax = ("batch", "cache_seq", "kv_heads", "head_dim")
+        return {"k": ax, "v": ax}
+
+    def decode(self, p, x, cache, index):
+        """One decode step.  x: (B, 1, D); cache k/v: (B, Smax, Hkv, hd);
+        index: scalar position, or (B,) per-slot positions (continuous
+        batching — each slot decodes at its own depth).
+
+        The KV cache's sequence axis is shardable (context-parallel flash
+        decoding): softmax statistics reduce over the sharded axis via
+        GSPMD-inserted all-reduces — see parallel/sharding.py.
+        """
+        b = x.shape[0]
+        index = jnp.asarray(index)
+        idx_b = jnp.broadcast_to(index, (b,))  # per-slot positions
+        positions = idx_b[:, None]
+        q, k_new, v_new = self._qkv(p, x, positions)
+        if index.ndim == 0:
+            k_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k_new.astype(cache["k"].dtype), index, axis=1
+            )
+            v_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v_new.astype(cache["v"].dtype), index, axis=1
+            )
+        else:  # per-slot scatter (continuous batching)
+            rows = jnp.arange(b)
+            k_cache = cache["k"].at[rows, idx_b].set(
+                k_new[:, 0].astype(cache["k"].dtype)
+            )
+            v_cache = cache["v"].at[rows, idx_b].set(
+                v_new[:, 0].astype(cache["v"].dtype)
+            )
+        groups = self.n_heads // self.n_kv_heads
+        k = _repeat_kv(k_cache, groups)
+        v = _repeat_kv(v_cache, groups)
+        d = self.hd
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32)
+        s = s / math.sqrt(d)
+        kpos = jnp.arange(k.shape[1])[None, None, None, :]
+        s = jnp.where(kpos <= idx_b[:, None, None, None], s, -jnp.inf)
+        pr = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+        o = jnp.einsum("bhqk,bkhd->bqhd", pr, v)
+        o = o.reshape(b, 1, self.n_heads * d)
+        out = ops.matmul(o, p["wo"], out_dtype=x.dtype)
+        return out, {"k": k_cache, "v": v_cache}
+
+
+@dataclasses.dataclass(frozen=True)
+class MLP(Module):
+    d_model: int
+    d_ff: int
+    activation: str = "silu"  # "silu" => gated (SwiGLU); "gelu"/"relu" => plain
+
+    @property
+    def gated(self) -> bool:
+        return self.activation == "silu"
+
+    def build(self, mk: Builder):
+        p = {
+            "wi": mk.param("wi", (self.d_model, self.d_ff), ("embed", "mlp")),
+            "wo": mk.param("wo", (self.d_ff, self.d_model), ("mlp", "embed")),
+        }
+        if self.gated:
+            p["wg"] = mk.param("wg", (self.d_model, self.d_ff), ("embed", "mlp"))
+        return p
+
+    def __call__(self, p, x):
+        h = ops.matmul(x, p["wi"], out_dtype=x.dtype)
+        if self.gated:
+            g = ops.matmul(x, p["wg"], out_dtype=x.dtype)
+            h = jax.nn.silu(g) * h
+        elif self.activation == "gelu":
+            h = jax.nn.gelu(h)
+        else:
+            h = jax.nn.relu(h)
+        return ops.matmul(h, p["wo"], out_dtype=x.dtype)

@@ -1,0 +1,118 @@
+"""Minimal functional module system (no flax dependency).
+
+A module is a frozen dataclass of hyperparameters implementing
+
+    def build(self, mk: Builder) -> params-pytree
+
+where every leaf is created through `mk.param(name, shape, axes, ...)` and
+submodules through `mk.child(name, submodule)`.  One `build` definition
+serves three interpreters:
+
+    init_params(module, key)  -> real arrays (smoke tests / examples)
+    abstract_params(module)   -> jax.ShapeDtypeStruct tree (dry-run: NO
+                                 device allocation, per the contract)
+    param_axes(module)        -> same-structure tree of logical-axis tuples
+                                 (consumed by parallel/sharding.py)
+
+Logical axes are names like "embed", "heads", "mlp", "vocab", "expert",
+"layers"; parallel/sharding.py maps them onto mesh axes per-arch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _fold(key, *names: str):
+    h = int.from_bytes(
+        hashlib.md5("/".join(names).encode()).digest()[:4], "little"
+    )
+    return jax.random.fold_in(key, h)
+
+
+@dataclasses.dataclass
+class Builder:
+    mode: str  # "init" | "abstract" | "axes"
+    key: Optional[jax.Array] = None
+    dtype: Any = jnp.float32
+    path: Tuple[str, ...] = ()
+
+    def param(
+        self,
+        name: str,
+        shape: Sequence[int],
+        axes: Sequence[Optional[str]],
+        *,
+        init: str = "normal",
+        scale: Optional[float] = None,
+        dtype: Any = None,
+    ):
+        if len(shape) != len(axes):
+            raise ValueError(f"{self.path + (name,)}: shape {shape} vs axes {axes}")
+        dtype = dtype or self.dtype
+        if self.mode == "axes":
+            return tuple(axes)
+        if self.mode == "abstract":
+            return jax.ShapeDtypeStruct(tuple(shape), dtype)
+        k = _fold(self.key, *self.path, name)
+        if init == "zeros":
+            return jnp.zeros(shape, dtype)
+        if init == "ones":
+            return jnp.ones(shape, dtype)
+        if init == "normal":
+            s = scale if scale is not None else (1.0 / np.sqrt(shape[0]) if len(shape) >= 2 else 0.02)
+            return (jax.random.normal(k, tuple(shape)) * s).astype(dtype)
+        if init == "uniform":
+            s = scale if scale is not None else 0.02
+            return jax.random.uniform(k, tuple(shape), minval=-s, maxval=s).astype(dtype)
+        raise ValueError(f"unknown init {init!r}")
+
+    def child(self, name: str, module: "Module"):
+        sub = Builder(self.mode, self.key, self.dtype, self.path + (name,))
+        return module.build(sub)
+
+    def stacked(self, name: str, module: "Module", n: int):
+        """Parameters for `n` identical layers, stacked on a leading "layers"
+        axis — the representation `jax.lax.scan` consumes.  Init gives each
+        layer its own fold of the key."""
+        if self.mode in ("abstract", "axes"):
+            one = module.build(
+                Builder(self.mode, None, self.dtype, self.path + (name, "0"))
+            )
+            if self.mode == "abstract":
+                return jax.tree.map(
+                    lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), one
+                )
+            return jax.tree.map(
+                lambda a: ("layers",) + a, one, is_leaf=lambda x: isinstance(x, tuple)
+            )
+        layers = [
+            module.build(Builder("init", self.key, self.dtype, self.path + (name, str(i))))
+            for i in range(n)
+        ]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+
+
+class Module:
+    """Base class; subclasses are dataclasses implementing build()."""
+
+    def build(self, mk: Builder):
+        raise NotImplementedError
+
+    def init(self, key, dtype=jnp.float32):
+        return self.build(Builder("init", key, dtype))
+
+    def abstract(self, dtype=jnp.float32):
+        return self.build(Builder("abstract", None, dtype))
+
+    def axes(self):
+        return self.build(Builder("axes", None, None))
+
+
+def param_count(params) -> int:
+    return sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))

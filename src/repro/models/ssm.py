@@ -1,0 +1,206 @@
+"""Mamba-2 (SSD) block — matmul-dominated linear-time sequence mixing.
+
+The chunked SSD algorithm is three MXU matmuls per chunk plus an O(1) carried
+state: structurally identical to the MX inter-k-buffering pattern (the time
+axis plays the role of K; the state is the near-compute accumulator).  The
+Pallas kernel `kernels/ssd_scan.py` implements the single-head inner loop;
+this module provides the batched/headed jnp formulation (used under the
+"xla" MX backend, e.g. for the sharded dry-run) plus decode stepping.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import ops
+from .layers import rms_norm
+from .modules import Builder, Module
+
+
+def ssd_chunked(x, a_log, b, c, chunk: int = 128):
+    """Batched chunked SSD.
+
+    x:     (B, L, H, P)    per-head inputs (already dt-scaled)
+    a_log: (B, L, H)       log decay per step (<= 0)
+    b:     (B, L, H, S)    input->state (broadcast from groups upstream)
+    c:     (B, L, H, S)    state->output
+    returns y: (B, L, H, P)
+    """
+    B, L, H, P = x.shape
+    S = b.shape[-1]
+    pad = (-L) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a_log = jnp.pad(a_log, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Lp = x.shape[1]
+    nc = Lp // chunk
+
+    def reshape_chunks(t):
+        return t.reshape(B, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    xc, ac, bc, cc = map(reshape_chunks, (x, a_log, b, c))
+    # f32 math inside the scan
+    xc, ac, bc, cc = (t.astype(jnp.float32) for t in (xc, ac, bc, cc))
+
+    def step(h, inp):
+        xq, aq, bq, cq = inp  # (B, Q, H, ...)
+        acum = jnp.cumsum(aq, axis=1)  # (B, Q, H) inclusive
+        # decay[t, s] = exp(acum_t - acum_s), lower-triangular
+        delta = acum[:, :, None, :] - acum[:, None, :, :]  # (B, Q, Q, H)
+        q = xq.shape[1]
+        tri = jnp.tril(jnp.ones((q, q), bool))[None, :, :, None]
+        decay = jnp.where(tri, jnp.exp(jnp.where(tri, delta, 0.0)), 0.0)
+        g = jnp.einsum("blhs,bmhs->blmh", cq, bq)  # (B, Q, Q, H)
+        y = jnp.einsum("blmh,bmhp->blhp", g * decay, xq)
+        pcum = jnp.exp(acum)  # (B, Q, H)
+        y += pcum[..., None] * jnp.einsum("blhs,bhsp->blhp", cq, h)
+        p_last = jnp.exp(acum[:, -1:, :])  # (B, 1, H)
+        scale = jnp.exp(acum[:, -1:, :] - acum)  # (B, Q, H)
+        h_new = p_last[:, 0, :, None, None] * h + jnp.einsum(
+            "blhs,blhp->bhsp", bq * scale[..., None], xq
+        )
+        return h_new, y
+
+    h0 = jnp.zeros((B, H, S, P), jnp.float32)
+    _, yc = jax.lax.scan(step, h0, (xc, ac, bc, cc))
+    y = yc.swapaxes(0, 1).reshape(B, Lp, H, P)[:, :L]
+    return y.astype(x.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2Block(Module):
+    d_model: int
+    d_state: int = 64
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    chunk: int = 128
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_channels(self) -> int:
+        return self.d_inner + 2 * self.n_groups * self.d_state
+
+    def build(self, mk: Builder):
+        di, g, s, h = self.d_inner, self.n_groups, self.d_state, self.n_heads
+        d_in_proj = 2 * di + 2 * g * s + h  # z, x, B, C, dt
+        return {
+            "ln": mk.param("ln", (self.d_model,), ("embed",), init="ones"),
+            "in_proj": mk.param("in_proj", (self.d_model, d_in_proj), ("embed", "mlp")),
+            "conv_w": mk.param("conv_w", (self.d_conv, self.conv_channels), (None, "mlp"), scale=0.5),
+            "conv_b": mk.param("conv_b", (self.conv_channels,), ("mlp",), init="zeros"),
+            "a_log": mk.param("a_log", (h,), ("heads",), init="zeros"),
+            "dt_bias": mk.param("dt_bias", (h,), ("heads",), init="zeros"),
+            "d_skip": mk.param("d_skip", (h,), ("heads",), init="ones"),
+            "norm_w": mk.param("norm_w", (di,), ("mlp",), init="ones"),
+            "out_proj": mk.param("out_proj", (di, self.d_model), ("mlp", "embed")),
+        }
+
+    def _split(self, zxbcdt):
+        di, g, s, h = self.d_inner, self.n_groups, self.d_state, self.n_heads
+        z = zxbcdt[..., :di]
+        xbc = zxbcdt[..., di : di + self.conv_channels]
+        dt = zxbcdt[..., di + self.conv_channels :]
+        return z, xbc, dt
+
+    def _conv(self, p, xbc):
+        """Depthwise causal conv1d over (B, L, C)."""
+        w = p["conv_w"].astype(xbc.dtype)  # (K, C)
+        K = self.d_conv
+        pad = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+        out = sum(
+            pad[:, i : i + xbc.shape[1], :] * w[i] for i in range(K)
+        )
+        return jax.nn.silu(out + p["conv_b"].astype(xbc.dtype))
+
+    def _ssm_inputs(self, p, xbc_conv, dt):
+        di, g, s, h = self.d_inner, self.n_groups, self.d_state, self.n_heads
+        B_, L = xbc_conv.shape[0], xbc_conv.shape[1]
+        xs = xbc_conv[..., :di].reshape(B_, L, h, self.head_dim)
+        b = xbc_conv[..., di : di + g * s].reshape(B_, L, g, s)
+        c = xbc_conv[..., di + g * s :].reshape(B_, L, g, s)
+        rep = h // g
+        b = jnp.repeat(b, rep, axis=2)
+        c = jnp.repeat(c, rep, axis=2)
+        dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+        a = -jnp.exp(p["a_log"].astype(jnp.float32))  # (h,) < 0
+        a_log_step = a * dt  # (B, L, h)
+        return xs, dt, a_log_step, b, c
+
+    def __call__(self, p, x):
+        """x: (B, L, D) -> (B, L, D). Pre-norm residual block (chunked SSD)."""
+        B_, L, _ = x.shape
+        res = x
+        x = rms_norm(x, p["ln"])
+        zxbcdt = ops.matmul(x, p["in_proj"], out_dtype=x.dtype)
+        z, xbc, dt = self._split(zxbcdt)
+        xbc = self._conv(p, xbc)
+        xs, dt_act, a_log, b, c = self._ssm_inputs(p, xbc, dt)
+        x_in = xs * dt_act[..., None].astype(xs.dtype)
+        y = ssd_chunked(x_in, a_log, b, c, chunk=self.chunk)
+        y = y + xs * p["d_skip"].astype(xs.dtype)[None, None, :, None]
+        y = y.reshape(B_, L, self.d_inner)
+        y = rms_norm(y * jax.nn.silu(z), p["norm_w"])
+        return res + ops.matmul(y, p["out_proj"], out_dtype=x.dtype)
+
+    # ---------------- decode (recurrent) path ----------------
+
+    def init_state(self, batch: int, dtype=jnp.float32):
+        return {
+            "conv": jnp.zeros((batch, self.d_conv - 1, self.conv_channels), dtype),
+            "ssm": jnp.zeros((batch, self.n_heads, self.d_state, self.head_dim), jnp.float32),
+        }
+
+    def abstract_state(self, batch: int, dtype=jnp.float32):
+        return {
+            "conv": jax.ShapeDtypeStruct((batch, self.d_conv - 1, self.conv_channels), dtype),
+            "ssm": jax.ShapeDtypeStruct(
+                (batch, self.n_heads, self.d_state, self.head_dim), jnp.float32
+            ),
+        }
+
+    def state_axes(self):
+        return {
+            "conv": ("batch", None, "mlp"),
+            "ssm": ("batch", "heads", None, None),
+        }
+
+    def decode(self, p, x, state):
+        """One token. x: (B, 1, D) -> (y, new_state)."""
+        B_ = x.shape[0]
+        res = x
+        x = rms_norm(x, p["ln"])
+        zxbcdt = ops.matmul(x, p["in_proj"], out_dtype=x.dtype)
+        z, xbc, dt = self._split(zxbcdt)
+        # rolling conv state
+        conv_in = jnp.concatenate([state["conv"].astype(xbc.dtype), xbc], axis=1)
+        w = p["conv_w"].astype(xbc.dtype)
+        out = sum(conv_in[:, i : i + 1, :] * w[i] for i in range(self.d_conv))
+        xbc_conv = jax.nn.silu(out + p["conv_b"].astype(xbc.dtype))
+        new_conv = conv_in[:, 1:, :]
+        xs, dt_act, a_log, b, c = self._ssm_inputs(p, xbc_conv, dt)
+        # recurrent state update: h = exp(a_log) h + b^T (dt*x)
+        a = jnp.exp(a_log[:, 0, :])  # (B, h)
+        x_in = (xs * dt_act[..., None].astype(xs.dtype))[:, 0]  # (B, h, P)
+        h = state["ssm"] * a[..., None, None] + jnp.einsum(
+            "bhs,bhp->bhsp", b[:, 0].astype(jnp.float32), x_in.astype(jnp.float32)
+        )
+        y = jnp.einsum("bhs,bhsp->bhp", c[:, 0].astype(jnp.float32), h)
+        y = y.astype(xs.dtype) + xs[:, 0] * p["d_skip"].astype(xs.dtype)[None, :, None]
+        y = y.reshape(B_, 1, self.d_inner)
+        y = rms_norm(y * jax.nn.silu(z), p["norm_w"])
+        out = res + ops.matmul(y, p["out_proj"], out_dtype=x.dtype)
+        return out, {"conv": new_conv, "ssm": h}

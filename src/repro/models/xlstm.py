@@ -1,0 +1,299 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM (scalar
+memory, strictly recurrent).
+
+The chunkwise mLSTM is GEMM-dominated (q kᵀ ⊙ decay matmuls + state update),
+so the MX technique applies to it exactly as to SSD.  The sLSTM cell has no
+matmul inner loop (elementwise gates + per-head recurrent mixing) — this is
+the one assigned-arch component where MX is *inapplicable* at the cell level
+(DESIGN.md §5); its input/output projections still route through MX.
+
+Stabilized exponential gating follows the xLSTM paper (Beck et al., 2024):
+running max m_t guards exp() overflow; the chunkwise form below is exact
+w.r.t. the recurrent oracle (tests/test_xlstm.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import ops
+from .layers import rms_norm
+from .modules import Builder, Module
+
+
+def mlstm_chunkwise(q, k, v, i_pre, f_pre, chunk: int = 128):
+    """Chunkwise-parallel stabilized mLSTM.
+
+    q,k,v: (B, L, H, D);  i_pre,f_pre: (B, L, H) gate pre-activations.
+    Returns (B, L, H, D).
+
+    Derivation (per head): with lf = logsigmoid(f), bcum_t = cumsum(lf),
+    w_s = i_s - bcum_s, M_t = max(m_prev, cummax_s<=t w_s):
+      D[t,s]  = exp(w_s - M_t) for s<=t,
+      num_t   = (q kᵀ/√d ⊙ D) v + exp(m_prev - M_t) * (q @ C_prev)
+      den_t   = rowsum(q kᵀ/√d ⊙ D) + exp(m_prev - M_t) * (q·n_prev)
+      y_t     = num_t / max(|den_t|, exp(-(bcum_t + M_t)))
+    State carries (C, n, m) exactly as the recurrent form.
+    """
+    B, L, H, D = q.shape
+    pad = (-L) % chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        i_pre = jnp.pad(i_pre, ((0, 0), (0, pad), (0, 0)), constant_values=-1e9)
+        f_pre = jnp.pad(f_pre, ((0, 0), (0, pad), (0, 0)))
+    Lp = q.shape[1]
+    nc = Lp // chunk
+
+    def rc(t):
+        return t.reshape(B, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc = rc(q.astype(jnp.float32)), rc(k.astype(jnp.float32)), rc(v.astype(jnp.float32))
+    ic, fc = rc(i_pre.astype(jnp.float32)), rc(f_pre.astype(jnp.float32))
+    scale = 1.0 / (D**0.5)
+
+    def step(carry, inp):
+        C, n, m_prev = carry  # (B,H,D,D), (B,H,D), (B,H)
+        qq, kk, vv, ii, ff = inp  # (B,Q,...)
+        Q = qq.shape[1]
+        lf = jax.nn.log_sigmoid(ff)  # (B,Q,H)
+        bcum = jnp.cumsum(lf, axis=1)
+        w = ii - bcum  # (B,Q,H)
+        Mt = jnp.maximum(m_prev[:, None, :], jax.lax.cummax(w, axis=1))  # (B,Q,H)
+        dmat = jnp.exp(w[:, None, :, :] - Mt[:, :, None, :])  # (B,t,s,H)
+        tri = jnp.tril(jnp.ones((Q, Q), bool))[None, :, :, None]
+        dmat = jnp.where(tri, dmat, 0.0)
+        s_mat = jnp.einsum("blhd,bmhd->blmh", qq, kk) * scale * dmat
+        num = jnp.einsum("blmh,bmhd->blhd", s_mat, vv)
+        state_w = jnp.exp(m_prev[:, None, :] - Mt)  # (B,Q,H)
+        num += state_w[..., None] * jnp.einsum("blhd,bhde->blhe", qq * scale, C)
+        den = s_mat.sum(axis=2)  # (B,Q,H)
+        den += state_w * jnp.einsum("blhd,bhd->blh", qq * scale, n)
+        m_t = bcum + Mt
+        y = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+        # ---- state update ----
+        MQ = Mt[:, -1, :]  # (B,H)
+        coef = jnp.exp(w - MQ[:, None, :])  # (B,Q,H)
+        C_new = jnp.exp(m_prev - MQ)[..., None, None] * C + jnp.einsum(
+            "blhd,blhe->bhde", kk * coef[..., None], vv
+        )
+        n_new = jnp.exp(m_prev - MQ)[..., None] * n + (kk * coef[..., None]).sum(1)
+        m_new = bcum[:, -1, :] + MQ
+        return (C_new, n_new, m_new), y
+
+    C0 = jnp.zeros((B, H, D, D), jnp.float32)
+    n0 = jnp.zeros((B, H, D), jnp.float32)
+    m0 = jnp.full((B, H), -1e30, jnp.float32)
+    _, yc = jax.lax.scan(step, (C0, n0, m0), (qc, kc, vc, ic, fc))
+    y = yc.swapaxes(0, 1).reshape(B, Lp, H, D)[:, :L]
+    return y.astype(v.dtype)
+
+
+def mlstm_recurrent_step(C, n, m, q, k, v, i_pre, f_pre):
+    """One stabilized recurrent step (decode path / oracle).
+    C: (B,H,D,D), n: (B,H,D), m: (B,H); q,k,v: (B,H,D); gates: (B,H)."""
+    D = q.shape[-1]
+    scale = 1.0 / (D**0.5)
+    lf = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))
+    li = i_pre.astype(jnp.float32)
+    m_new = jnp.maximum(lf + m, li)
+    fp = jnp.exp(lf + m - m_new)
+    ip = jnp.exp(li - m_new)
+    k32, v32, q32 = (t.astype(jnp.float32) for t in (k, v, q))
+    C_new = fp[..., None, None] * C + ip[..., None, None] * jnp.einsum(
+        "bhd,bhe->bhde", k32, v32
+    )
+    n_new = fp[..., None] * n + ip[..., None] * k32
+    num = jnp.einsum("bhd,bhde->bhe", q32 * scale, C_new)
+    den = jnp.maximum(
+        jnp.abs(jnp.einsum("bhd,bhd->bh", q32 * scale, n_new)), jnp.exp(-m_new)
+    )
+    y = num / den[..., None]
+    return C_new, n_new, m_new, y.astype(v.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class MLSTMBlock(Module):
+    """mLSTM block: up-proj (x2), mLSTM mixing, gated skip, down-proj."""
+
+    d_model: int
+    n_heads: int
+    proj_factor: int = 2
+    chunk: int = 128
+
+    @property
+    def d_inner(self) -> int:
+        return self.proj_factor * self.d_model
+
+    @property
+    def hd(self) -> int:
+        return self.d_inner // self.n_heads
+
+    def build(self, mk: Builder):
+        d, di, h = self.d_model, self.d_inner, self.n_heads
+        return {
+            "ln": mk.param("ln", (d,), ("embed",), init="ones"),
+            "up": mk.param("up", (d, 2 * di), ("embed", "mlp")),
+            "wq": mk.param("wq", (di, di), ("mlp", "heads")),
+            "wk": mk.param("wk", (di, di), ("mlp", "heads")),
+            "wv": mk.param("wv", (di, di), ("mlp", "heads")),
+            "wif": mk.param("wif", (di, 2 * h), ("mlp", "heads"), scale=0.02),
+            "bif": mk.param("bif", (2 * h,), ("heads",), init="zeros"),
+            "norm_w": mk.param("norm_w", (di,), ("mlp",), init="ones"),
+            "down": mk.param("down", (di, d), ("mlp", "embed")),
+        }
+
+    def _gates_qkv(self, p, xu):
+        B, L, _ = xu.shape
+        h, hd = self.n_heads, self.hd
+        q = ops.matmul(xu, p["wq"], out_dtype=xu.dtype).reshape(B, L, h, hd)
+        k = ops.matmul(xu, p["wk"], out_dtype=xu.dtype).reshape(B, L, h, hd)
+        v = ops.matmul(xu, p["wv"], out_dtype=xu.dtype).reshape(B, L, h, hd)
+        if_pre = jnp.dot(xu, p["wif"].astype(xu.dtype)) + p["bif"].astype(xu.dtype)
+        i_pre, f_pre = if_pre[..., :h], if_pre[..., h:] + 3.0  # f-bias init trick
+        return q, k, v, i_pre, f_pre
+
+    def __call__(self, p, x):
+        B, L, _ = x.shape
+        res = x
+        x = rms_norm(x, p["ln"])
+        up = ops.matmul(x, p["up"], out_dtype=x.dtype)
+        xu, z = up[..., : self.d_inner], up[..., self.d_inner :]
+        q, k, v, i_pre, f_pre = self._gates_qkv(p, xu)
+        y = mlstm_chunkwise(q, k, v, i_pre, f_pre, chunk=self.chunk)
+        y = y.reshape(B, L, self.d_inner)
+        y = rms_norm(y, p["norm_w"]) * jax.nn.silu(z)
+        return res + ops.matmul(y, p["down"], out_dtype=x.dtype)
+
+    def init_state(self, batch: int):
+        h, hd = self.n_heads, self.hd
+        return {
+            "C": jnp.zeros((batch, h, hd, hd), jnp.float32),
+            "n": jnp.zeros((batch, h, hd), jnp.float32),
+            "m": jnp.full((batch, h), -1e30, jnp.float32),
+        }
+
+    def abstract_state(self, batch: int):
+        h, hd = self.n_heads, self.hd
+        return {
+            "C": jax.ShapeDtypeStruct((batch, h, hd, hd), jnp.float32),
+            "n": jax.ShapeDtypeStruct((batch, h, hd), jnp.float32),
+            "m": jax.ShapeDtypeStruct((batch, h), jnp.float32),
+        }
+
+    def state_axes(self):
+        return {
+            "C": ("batch", "heads", None, None),
+            "n": ("batch", "heads", None),
+            "m": ("batch", "heads"),
+        }
+
+    def decode(self, p, x, state):
+        B = x.shape[0]
+        res = x
+        x = rms_norm(x, p["ln"])
+        up = ops.matmul(x, p["up"], out_dtype=x.dtype)
+        xu, z = up[..., : self.d_inner], up[..., self.d_inner :]
+        q, k, v, i_pre, f_pre = self._gates_qkv(p, xu)
+        C, n, m, y = mlstm_recurrent_step(
+            state["C"], state["n"], state["m"],
+            q[:, 0], k[:, 0], v[:, 0], i_pre[:, 0], f_pre[:, 0],
+        )
+        y = y.reshape(B, 1, self.d_inner)
+        y = rms_norm(y, p["norm_w"]) * jax.nn.silu(z)
+        return res + ops.matmul(y, p["down"], out_dtype=x.dtype), {"C": C, "n": n, "m": m}
+
+
+@dataclasses.dataclass(frozen=True)
+class SLSTMBlock(Module):
+    """sLSTM block: scalar-memory recurrent cell with per-head recurrent
+    mixing.  Strictly sequential over time (lax.scan) — MX inapplicable to
+    the cell (no matmul inner loop); projections still use MX."""
+
+    d_model: int
+    n_heads: int
+
+    @property
+    def hd(self) -> int:
+        return self.d_model // self.n_heads
+
+    def build(self, mk: Builder):
+        d, h, hd = self.d_model, self.n_heads, self.hd
+        return {
+            "ln": mk.param("ln", (d,), ("embed",), init="ones"),
+            "w_in": mk.param("w_in", (d, 4 * d), ("embed", "mlp")),  # i,f,z,o
+            "r": mk.param("r", (h, hd, 4 * hd), ("heads", None, None), scale=0.02),
+            "b": mk.param("b", (4 * d,), ("mlp",), init="zeros"),
+            "norm_w": mk.param("norm_w", (d,), ("embed",), init="ones"),
+            "out": mk.param("out", (d, d), ("embed", "embed")),
+        }
+
+    def _cell(self, p, pre, state):
+        """pre: (B, H, 4*hd) input pre-activations; state dict of (B,H,hd)+m,n."""
+        h_prev, c_prev, n_prev, m_prev = state
+        rec = jnp.einsum("bhd,hde->bhe", h_prev, p["r"].astype(h_prev.dtype))
+        z_all = (pre + rec).astype(jnp.float32)
+        hd = self.hd
+        i_pre, f_pre, z_pre, o_pre = jnp.split(z_all, 4, axis=-1)
+        lf = jax.nn.log_sigmoid(f_pre)
+        m_new = jnp.maximum(lf + m_prev, i_pre)
+        ip = jnp.exp(i_pre - m_new)
+        fp = jnp.exp(lf + m_prev - m_new)
+        z = jnp.tanh(z_pre)
+        o = jax.nn.sigmoid(o_pre)
+        c_new = fp * c_prev + ip * z
+        n_new = fp * n_prev + ip
+        h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+        return h_new, c_new, n_new, m_new
+
+    def __call__(self, p, x):
+        B, L, d = x.shape
+        res = x
+        x = rms_norm(x, p["ln"])
+        h, hd = self.n_heads, self.hd
+        pre = (ops.matmul(x, p["w_in"], out_dtype=x.dtype) + p["b"].astype(x.dtype))
+        pre = pre.reshape(B, L, h, 4 * hd).swapaxes(0, 1)  # (L, B, H, 4hd)
+
+        def step(state, pre_t):
+            h_new, c, n, m = self._cell(p, pre_t, state)
+            return (h_new, c, n, m), h_new
+
+        z = jnp.zeros((B, h, hd), jnp.float32)
+        m0 = jnp.full((B, h, hd), -1e30, jnp.float32)
+        (_, _, _, _), hs = jax.lax.scan(step, (z, z, z, m0), pre)
+        y = hs.swapaxes(0, 1).reshape(B, L, d).astype(x.dtype)
+        y = rms_norm(y, p["norm_w"])
+        return res + ops.matmul(y, p["out"], out_dtype=x.dtype)
+
+    def init_state(self, batch: int):
+        h, hd = self.n_heads, self.hd
+        z = jnp.zeros((batch, h, hd), jnp.float32)
+        return {"h": z, "c": z, "n": z, "m": jnp.full((batch, h, hd), -1e30, jnp.float32)}
+
+    def abstract_state(self, batch: int):
+        h, hd = self.n_heads, self.hd
+        sh = jax.ShapeDtypeStruct((batch, h, hd), jnp.float32)
+        return {"h": sh, "c": sh, "n": sh, "m": sh}
+
+    def state_axes(self):
+        ax = ("batch", "heads", None)
+        return {"h": ax, "c": ax, "n": ax, "m": ax}
+
+    def decode(self, p, x, state):
+        B = x.shape[0]
+        res = x
+        x = rms_norm(x, p["ln"])
+        h, hd = self.n_heads, self.hd
+        pre = (ops.matmul(x, p["w_in"], out_dtype=x.dtype) + p["b"].astype(x.dtype))
+        pre = pre.reshape(B, h, 4 * hd)
+        h_new, c, n, m = self._cell(
+            p, pre, (state["h"], state["c"], state["n"], state["m"])
+        )
+        y = h_new.reshape(B, 1, self.d_model).astype(x.dtype)
+        y = rms_norm(y, p["norm_w"])
+        y = res + ops.matmul(y, p["out"], out_dtype=x.dtype)
+        return y, {"h": h_new, "c": c, "n": n, "m": m}

@@ -1,0 +1,88 @@
+"""AdamW with decoupled weight decay, f32 moments, bf16-safe updates.
+
+Pure-JAX (no optax dependency).  Moments are stored in f32 regardless of
+param dtype and are sharded exactly like their parameters (see
+parallel/sharding.py — FSDP shards them over the data axis for big archs,
+the ZeRO trick)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    count: jax.Array  # ()
+    m: Any  # f32 pytree like params
+    v: Any  # f32 pytree like params
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jax.Array], jax.Array] | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip_norm: Optional[float] = 1.0
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(
+            count=jnp.zeros((), jnp.int32),
+            m=jax.tree.map(zeros, params),
+            v=jax.tree.map(zeros, params),
+        )
+
+    def abstract_init(self, abstract_params) -> AdamWState:
+        z = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+        return AdamWState(
+            count=jax.ShapeDtypeStruct((), jnp.int32),
+            m=jax.tree.map(z, abstract_params),
+            v=jax.tree.map(z, abstract_params),
+        )
+
+    def state_axes(self, param_axes) -> AdamWState:
+        """Moments share their parameter's logical axes (ZeRO sharding)."""
+        is_axes = lambda x: isinstance(x, tuple)
+        return AdamWState(
+            count=(),
+            m=jax.tree.map(lambda a: a, param_axes, is_leaf=is_axes),
+            v=jax.tree.map(lambda a: a, param_axes, is_leaf=is_axes),
+        )
+
+    def update(
+        self, grads, state: AdamWState, params
+    ) -> Tuple[Any, AdamWState, dict]:
+        count = state.count + 1
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        gnorm = global_norm(g32)
+        metrics = {"grad_norm": gnorm}
+        if self.grad_clip_norm is not None:
+            scale = jnp.minimum(1.0, self.grad_clip_norm / (gnorm + 1e-9))
+            g32 = jax.tree.map(lambda g: g * scale, g32)
+        b1c = 1.0 - self.b1 ** count.astype(jnp.float32)
+        b2c = 1.0 - self.b2 ** count.astype(jnp.float32)
+        m = jax.tree.map(lambda m_, g: self.b1 * m_ + (1 - self.b1) * g, state.m, g32)
+        v = jax.tree.map(lambda v_, g: self.b2 * v_ + (1 - self.b2) * g * g, state.v, g32)
+        lr = self.lr(count) if callable(self.lr) else jnp.float32(self.lr)
+
+        def upd(p, m_, v_):
+            mhat = m_ / b1c
+            vhat = v_ / b2c
+            step = mhat / (jnp.sqrt(vhat) + self.eps)
+            if self.weight_decay:
+                step = step + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        metrics["lr"] = lr
+        return new_params, AdamWState(count, m, v), metrics
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )

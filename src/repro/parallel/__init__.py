@@ -1,0 +1,2 @@
+from .sharding import AxisRules, constrain, make_rules, tree_shardings, tree_specs, use_rules
+__all__ = ["AxisRules", "constrain", "make_rules", "tree_shardings", "tree_specs", "use_rules"]

@@ -1,0 +1,169 @@
+"""Logical-axis sharding rules: DP / FSDP(ZeRO) / TP / EP / SP on one mesh.
+
+Model code annotates every parameter (and activation constraint point) with
+*logical* axes ("embed", "heads", "vocab", "expert", "batch", ...).  This
+module maps them to mesh axes with per-dimension divisibility checks — an
+axis that does not divide evenly is left unsharded (replicated) and the drop
+is recorded, which is what makes one rule set work across all 10 assigned
+archs (e.g. qwen2's 14 heads on a 16-way model axis).
+
+Key rules (see DESIGN.md §4):
+  batch     -> ("pod", "data")   data parallelism (pod axis = DP by default)
+  heads/mlp/vocab/expert -> "model"   tensor / expert parallelism
+  embed     -> "data" when cfg.fsdp  (ZeRO-3: 2-D param sharding data x model)
+  cache_seq -> "model"           context-parallel flash decoding
+  seq       -> "model" when SP   sequence parallelism for norm/residual work
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisVal = Union[None, str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass
+class AxisRules:
+    mesh: Mesh
+    rules: Dict[str, AxisVal]
+    dropped: list = dataclasses.field(default_factory=list)
+
+    def _axis_size(self, mesh_axes: AxisVal) -> int:
+        if mesh_axes is None:
+            return 1
+        if isinstance(mesh_axes, str):
+            mesh_axes = (mesh_axes,)
+        return int(np.prod([self.mesh.shape[a] for a in mesh_axes]))
+
+    def spec(self, shape: Sequence[int], axes: Sequence[Optional[str]]) -> P:
+        """PartitionSpec for `shape` annotated with logical `axes`.
+
+        Drops (replicates) any dim whose size is not divisible by the mapped
+        mesh-axis product, and never uses a mesh axis twice in one spec."""
+        used: set = set()
+        out = []
+        for dim, ax in zip(shape, axes):
+            mesh_axes = self.rules.get(ax) if ax is not None else None
+            if mesh_axes is None:
+                out.append(None)
+                continue
+            tpl = (mesh_axes,) if isinstance(mesh_axes, str) else tuple(mesh_axes)
+            tpl = tuple(a for a in tpl if a not in used and a in self.mesh.shape)
+            # progressive fallback: drop trailing axes until the product divides
+            while tpl and dim % int(np.prod([self.mesh.shape[a] for a in tpl])) != 0:
+                self.dropped.append((tuple(shape), ax, tpl[-1], dim))
+                tpl = tpl[:-1]
+            if not tpl:
+                out.append(None)
+                continue
+            used.update(tpl)
+            out.append(tpl[0] if len(tpl) == 1 else tpl)
+        while out and out[-1] is None:
+            out.pop()
+        return P(*out)
+
+    def sharding(self, shape, axes) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(shape, axes))
+
+
+_state = threading.local()
+
+
+def current_rules() -> Optional[AxisRules]:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[AxisRules]):
+    prev = getattr(_state, "rules", None)
+    _state.rules = rules
+    try:
+        yield rules
+    finally:
+        _state.rules = prev
+
+
+def constrain(x: jax.Array, axes: Sequence[Optional[str]]) -> jax.Array:
+    """with_sharding_constraint by logical axes; no-op outside a rules ctx."""
+    r = current_rules()
+    if r is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(r.mesh, r.spec(x.shape, axes)))
+
+
+def make_rules(mesh: Mesh, *, profile: str = "tp", fsdp: bool = False,
+               seq_parallel: bool = False,
+               expert_data_shard: bool = False) -> AxisRules:
+    """Parallelism profiles:
+      "tp"  — megatron-style TP on "model" + DP on ("pod","data") [+FSDP]
+      "dp"  — small-model profile: pure DP, only the vocab/cache_seq dims use
+              the model axis (qwen2-0.5b / xlstm-125m class)
+    """
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    if profile == "dp":
+        rules: Dict[str, AxisVal] = {
+            # small models spread the batch over every axis (1 seq/device at
+            # 256 chips); progressive fallback drops "model" when it doesn't
+            # divide (e.g. global_batch 256 on the 512-chip multi-pod mesh)
+            "batch": data_axes + ("model",),
+            "heads": None,
+            "kv_heads": None,
+            "mlp": None,
+            "vocab": "model",
+            "expert": "model",
+            "embed": None,
+            "cache_seq": "model",
+            "seq": None,
+            "expert_cap": None,
+            "layers": None,
+            "head_dim": None,
+        }
+        return AxisRules(mesh, rules)
+    rules = {
+        "batch": data_axes if data_axes else None,
+        "heads": "model",
+        "kv_heads": "model",
+        "mlp": "model",
+        "vocab": "model",
+        "expert": ("model", "data") if expert_data_shard else "model",
+        "embed": (data_axes if fsdp else None),
+        "cache_seq": "model",  # context-parallel decode
+        "seq": ("model" if seq_parallel else None),
+        "expert_cap": None,
+        "layers": None,
+        "head_dim": None,
+    }
+    return AxisRules(mesh, rules)
+
+
+# ---------------------------------------------------------------------------
+# Tree-level helpers
+# ---------------------------------------------------------------------------
+
+
+def _is_axes_leaf(x) -> bool:
+    return isinstance(x, tuple) and all(a is None or isinstance(a, str) for a in x)
+
+
+def tree_specs(rules: AxisRules, abstract_tree, axes_tree):
+    """PartitionSpec tree from abstract shapes + logical-axes trees."""
+    return jax.tree.map(
+        lambda s, ax: rules.spec(s.shape, ax),
+        abstract_tree,
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct) or _is_axes_leaf(x),
+    )
+
+
+def tree_shardings(rules: AxisRules, abstract_tree, axes_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(rules.mesh, s),
+        tree_specs(rules, abstract_tree, axes_tree),
+        is_leaf=lambda x: isinstance(x, P),
+    )

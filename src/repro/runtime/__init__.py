@@ -1,0 +1,5 @@
+from . import elastic
+from .fault import DeviceFailure, FaultInjector, StragglerDetector, TrainLoop
+__all__ = ["DeviceFailure", "FaultInjector", "StragglerDetector", "TrainLoop", "elastic"]
+from .batcher import ContinuousBatcher, Request  # noqa: E402
+__all__ += ["ContinuousBatcher", "Request"]

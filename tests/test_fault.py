@@ -1,0 +1,144 @@
+"""Fault tolerance: failure/restart loop, straggler detection, elastic
+re-mesh, determinism of the data pipeline under seek()."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import get_config
+from repro.data.pipeline import Prefetcher, SyntheticLM
+from repro.launch.steps import make_train_step
+from repro.models import build_model
+from repro.optim.adamw import AdamW
+from repro.runtime.fault import (
+    DeviceFailure, FaultInjector, StragglerDetector, TrainLoop,
+)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("llama3.2-1b-smoke")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = AdamW(lr=1e-3)
+    opt_state = opt.init(params)
+    step = jax.jit(make_train_step(model, cfg, opt))
+    return cfg, params, opt_state, step
+
+
+def test_recovery_from_injected_failure(setup, tmp_path):
+    cfg, params, opt_state, step = setup
+    data = SyntheticLM(cfg, seq_len=16, global_batch=2)
+    ckpt = CheckpointManager(tmp_path)
+    loop = TrainLoop(
+        train_step=step, ckpt=ckpt, checkpoint_every=4,
+        fault_injector=FaultInjector(fail_at_steps=(6,)),
+    )
+    p, o, hist = loop.run(params, opt_state, data, total_steps=10)
+    assert hist["restarts"] == 1
+    # steps 4..5 re-run after restore from the step-4 checkpoint
+    assert hist["steps_run"] == 12
+    assert ckpt.latest_step() == 10
+
+
+def test_failure_before_first_checkpoint(setup, tmp_path):
+    cfg, params, opt_state, step = setup
+    data = SyntheticLM(cfg, seq_len=16, global_batch=2)
+    ckpt = CheckpointManager(tmp_path)
+    loop = TrainLoop(
+        train_step=step, ckpt=ckpt, checkpoint_every=100,
+        fault_injector=FaultInjector(fail_at_steps=(2,)),
+    )
+    p, o, hist = loop.run(params, opt_state, data, total_steps=5)
+    assert hist["restarts"] == 1
+    assert ckpt.latest_step() == 5  # final checkpoint at total_steps
+
+
+def test_too_many_failures_raises(setup, tmp_path):
+    cfg, params, opt_state, step = setup
+    data = SyntheticLM(cfg, seq_len=16, global_batch=2)
+
+    class AlwaysFail(FaultInjector):
+        def check(self, s):
+            raise DeviceFailure("permafail")
+
+    loop = TrainLoop(train_step=step, ckpt=CheckpointManager(tmp_path),
+                     fault_injector=AlwaysFail(), max_restarts=2)
+    with pytest.raises(DeviceFailure):
+        loop.run(params, opt_state, data, total_steps=5)
+
+
+def test_straggler_detection():
+    det = StragglerDetector(z_threshold=3.0, min_steps=5, abs_floor_s=0.0)
+    for i in range(20):
+        assert not det.observe(i, 0.10 + 0.001 * (i % 3))
+    assert det.observe(20, 0.5)  # 5x outlier
+    assert det.flagged == [20]
+    assert not det.observe(21, 0.10)  # stats not poisoned by the outlier
+
+
+def test_data_pipeline_seek_determinism():
+    cfg = get_config("llama3.2-1b-smoke")
+    d1 = SyntheticLM(cfg, seq_len=16, global_batch=4, seed=3)
+    batches = [d1.next_batch() for _ in range(5)]
+    d1.seek(2)
+    again = d1.next_batch()
+    np.testing.assert_array_equal(batches[2]["tokens"], again["tokens"])
+
+
+def test_data_pipeline_host_sharding():
+    cfg = get_config("llama3.2-1b-smoke")
+    h0 = SyntheticLM(cfg, seq_len=16, global_batch=4, host_id=0, host_count=2)
+    h1 = SyntheticLM(cfg, seq_len=16, global_batch=4, host_id=1, host_count=2)
+    b0, b1 = h0.next_batch(), h1.next_batch()
+    assert b0["tokens"].shape == (2, 16)
+    assert not np.array_equal(b0["tokens"], b1["tokens"])
+
+
+def test_prefetcher():
+    cfg = get_config("llama3.2-1b-smoke")
+    src = SyntheticLM(cfg, seq_len=16, global_batch=2)
+    pf = Prefetcher(src, depth=2)
+    try:
+        batches = [pf.next_batch() for _ in range(4)]
+        assert all(b["tokens"].shape == (2, 16) for b in batches)
+    finally:
+        pf.close()
+
+
+def test_elastic_rescale(tmp_path):
+    """Save during a run, then resume on a different mesh shape."""
+    from repro.launch.mesh import make_mesh
+    from repro.runtime.elastic import rescale
+
+    cfg = get_config("llama3.2-1b-smoke")
+    model = build_model(cfg)
+    opt = AdamW(lr=1e-3)
+    params = model.init(jax.random.PRNGKey(0))
+    opt_state = opt.init(params)
+    ckpt = CheckpointManager(tmp_path)
+    ckpt.save(42, {"params": params, "opt": opt_state, "step": 42}, blocking=True)
+
+    new_mesh = make_mesh((1, 1), ("data", "model"))  # "rescaled" mesh
+    p2, o2, step, rules = rescale(ckpt, model, opt, cfg, new_mesh, jnp.float32)
+    assert step == 42
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_nan_loss_raises(setup, tmp_path):
+    """A diverged run surfaces immediately instead of training on NaNs."""
+    from repro.runtime.fault import NanLossError
+
+    cfg, params, opt_state, _ = setup
+
+    def nan_step(params, opt_state, batch):
+        return params, opt_state, {"loss": jnp.float32(float("nan"))}
+
+    data = SyntheticLM(cfg, seq_len=16, global_batch=2)
+    loop = TrainLoop(train_step=nan_step, ckpt=CheckpointManager(tmp_path))
+    with pytest.raises(NanLossError, match="non-finite"):
+        loop.run(params, opt_state, data, total_steps=3)

@@ -1,0 +1,59 @@
+"""Full-stack MX integration: a whole model forward pass runs through the
+Pallas MX kernel path (interpret mode) and matches the XLA path — the
+"paper's technique as a first-class framework feature" claim, end to end."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.ops import MXPolicy, use_policy
+from repro.models import build_model
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "xlstm-125m"])
+def test_model_forward_through_pallas_mx(arch):
+    cfg = get_config(arch + "-smoke")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 16), 0, cfg.vocab)
+
+    with use_policy(MXPolicy(backend="xla")):
+        ref, _ = model(params, toks)
+    with use_policy(MXPolicy(backend="pallas_mx", bm=16, bn=32, bk=16,
+                             interpret=True)):
+        got, _ = model(params, toks)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_model_forward_through_pallas_baseline():
+    """The control kernel also integrates (same numerics at f32)."""
+    cfg = get_config("qwen2-0.5b-smoke")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 8), 0, cfg.vocab)
+    with use_policy(MXPolicy(backend="xla")):
+        ref, _ = model(params, toks)
+    with use_policy(MXPolicy(backend="pallas_baseline", bm=16, bn=32, bk=16,
+                             interpret=True)):
+        got, _ = model(params, toks)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_policy_tile_plan_respects_budget():
+    """Without explicit blocks, the policy consults the paper's tile
+    calculus — and the resulting kernel still matches the oracle."""
+    from repro.core.ops import matmul
+
+    a = jax.random.normal(jax.random.PRNGKey(0), (256, 384))
+    b = jax.random.normal(jax.random.PRNGKey(1), (384, 512))
+    pol = MXPolicy(backend="pallas_mx", interpret=True,
+                   vmem_budget=2 * 1024 * 1024)
+    plan = pol.plan(256, 512, 384, 4)
+    assert plan.vmem_bytes <= 2 * 1024 * 1024
+    with use_policy(pol):
+        got = matmul(a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(a @ b),
+                               rtol=1e-4, atol=1e-4)

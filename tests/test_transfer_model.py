@@ -1,0 +1,118 @@
+"""The paper's §II math: exact reproduction of Table IV's analytic columns
+plus hypothesis properties of the transfer-count model."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import paper_data
+from repro.core.transfer_model import (
+    BaselineKernel, GemmProblem, MXKernel, PallasGemmTiling,
+    buf_to_fpu, mem_to_vrf, vrf_to_buf,
+)
+
+
+def _kernel(row):
+    if row.config == "baseline":
+        return BaselineKernel(*row.tile)
+    return MXKernel(*row.tile, *row.subtile)
+
+
+@pytest.mark.parametrize("row", paper_data.TABLE4,
+                         ids=lambda r: f"{r.cluster}-{r.config}-{r.size}-{r.tile}")
+def test_table4_mem_vrf_transfers_exact(row):
+    """'Mem-VRF Transfers' reproduced EXACTLY for 23/24 Table IV rows.
+    The 24th (baseline 16^3 (4,32,1), where the 32-wide vector exceeds
+    N=16) deviates from the paper's OWN Table II closed form — see
+    paper_data.KNOWN_DISCREPANCIES."""
+    p = GemmProblem(row.size, row.size, row.size, row.elem_bytes)
+    got = _kernel(row).mem_to_vrf(p).total
+    if row.formula_deviates:
+        # the closed form gives 1536 for this row; the paper prints 1408
+        assert got == 1536 and row.mem_vrf_transfers == 1408
+        return
+    assert got == row.mem_vrf_transfers, (
+        f"{row}: model says {got}, paper says {row.mem_vrf_transfers}"
+    )
+
+
+@pytest.mark.parametrize("row", paper_data.TABLE4,
+                         ids=lambda r: f"{r.cluster}-{r.config}-{r.size}-{r.tile}")
+def test_table4_arithmetic_intensity_exact(row):
+    """Arithmetic-intensity column matches to the paper's printed precision
+    (except the one formula-deviating row — see KNOWN_DISCREPANCIES)."""
+    if row.formula_deviates:
+        pytest.skip("row deviates from the paper's own closed form")
+    p = GemmProblem(row.size, row.size, row.size, row.elem_bytes)
+    ai = _kernel(row).arithmetic_intensity(p)
+    assert ai == pytest.approx(row.arithmetic_intensity, abs=0.005)
+
+
+def test_mx_vrf_access_reduction_factor():
+    """§III-B.6: MX reduces VRF accesses on the output operand by ~K/k'."""
+    p = GemmProblem(64, 64, 64, 8)
+    base = BaselineKernel(4, 32, 1)
+    mx = MXKernel(8, 16, 4, 8, 4, 4)
+    red = mx.vrf_access_reduction_vs(base, p)
+    assert red > 2.0  # the dual-core Fig. 3 shows -53.5% VRF power
+
+
+def test_simd_ratio_ordering():
+    """MX raises ops-per-instruction by >= 2x over the baseline (Table IV
+    shows 16/32 -> 33-66; our instruction accounting preserves ordering)."""
+    p = GemmProblem(64, 64, 64, 8)
+    base = BaselineKernel(4, 32, 1)
+    mx = MXKernel(8, 16, 4, 8, 4, 4)
+    assert mx.simd_ratio(p) >= 1.5 * base.simd_ratio(p)
+
+
+dims = st.sampled_from([16, 32, 48, 64, 128, 256])
+tile = st.sampled_from([4, 8, 16])
+
+
+@settings(max_examples=40, deadline=None)
+@given(M=dims, N=dims, K=dims, m=tile, n=tile, k=tile)
+def test_inter_k_buffering_never_increases_traffic(M, N, K, m, n, k):
+    """Inter-k-buffering (paper §II-C-a) can only reduce MEM<->VRF traffic."""
+    p = GemmProblem(M, N, K, 8)
+    plain = mem_to_vrf(p, m, n, k, inter_k_buffering=False)
+    buffered = mem_to_vrf(p, m, n, k, inter_k_buffering=True)
+    assert buffered.total <= plain.total
+    # input terms are identical; only the output round-trips change
+    assert buffered.a_down == plain.a_down and buffered.b_down == plain.b_down
+
+
+@settings(max_examples=40, deadline=None)
+@given(M=dims, N=dims, K=dims, m=tile, n=tile, k=tile)
+def test_c_reset_removes_only_the_c_load(M, N, K, m, n, k):
+    p = GemmProblem(M, N, K, 8)
+    with_c = mem_to_vrf(p, m, n, k, c_is_zero=False)
+    reset = mem_to_vrf(p, m, n, k, c_is_zero=True)
+    assert reset.cd_down < with_c.cd_down
+    assert reset.d_up == with_c.d_up
+
+
+@settings(max_examples=40, deadline=None)
+@given(M=dims, N=dims, K=dims,
+       bm=st.sampled_from([8, 16, 32]), bn=st.sampled_from([8, 16, 32]),
+       bk=st.sampled_from([8, 16, 32]))
+def test_pallas_tiling_accumulate_beats_baseline(M, N, K, bm, bn, bk):
+    """The TPU mapping: VMEM accumulation strictly reduces HBM bytes
+    whenever the K loop has more than one step."""
+    p = GemmProblem(M, N, K, 2)
+    mx = PallasGemmTiling(bm, bn, bk, accumulate_in_vmem=True)
+    base = PallasGemmTiling(bm, bn, bk, accumulate_in_vmem=False)
+    if -(-K // bk) > 1:
+        assert mx.hbm_bytes(p) < base.hbm_bytes(p)
+    else:
+        assert mx.hbm_bytes(p) == base.hbm_bytes(p)
+
+
+@settings(max_examples=30, deadline=None)
+@given(M=dims, N=dims, K=dims)
+def test_hierarchy_traffic_grows_downward(M, N, K):
+    """Kung's balance principle: traffic grows as you approach the compute
+    (Table I: FPU-level >= BUF-level >= MEM-level for matched tiles)."""
+    p = GemmProblem(M, N, K, 8)
+    t1 = mem_to_vrf(p, 8, 8, 8, inter_k_buffering=True)
+    t2 = vrf_to_buf(p, 8, 8, 8, 8, 4, 4, inter_k_buffering_vrf=True)
+    t3 = buf_to_fpu(p, 8, 4, 4, t_a=4, t_b=4)
+    assert t3.total >= t2.total >= t1.total
