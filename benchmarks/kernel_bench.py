@@ -1,9 +1,21 @@
 """Timed kernel micro-benchmarks (CPU): MX Pallas (interpret), baseline
-Pallas (interpret), and the XLA path, plus the tile-planner itself.
+Pallas (interpret), and the XLA path, plus the tile-planner itself and the
+fused-epilogue / grouped-matmul engines.
 
 interpret-mode timings measure Python-level kernel-body execution — they
 validate the traffic/semantics, NOT TPU speed (that's §Roofline's job) —
 but the XLA-path numbers are real CPU wall times for the dispatch layer.
+
+Every iteration blocks on its output: without the per-iteration
+`block_until_ready`, jax's async dispatch queues all iters and the loop
+measures enqueue time, not execution (observed ~10x skew on the XLA rows).
+
+The fusion rows also report *structural* evidence for the epilogue win:
+  - kernel-launch census from the jaxpr: the fused Pallas path issues ONE
+    pallas_call where the unfused XLA graph issues a dot plus >= 2
+    elementwise ops;
+  - the transfer-model's epilogue credit: the 2*M*N bytes/op of eliminated
+    HBM round-trips (`TilePlan.epilogue_saved_bytes`).
 """
 from __future__ import annotations
 
@@ -12,18 +24,48 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core.ops import MXPolicy, matmul, use_policy
+from repro.core.ops import (
+    MXPolicy,
+    grouped_matmul,
+    linear,
+    matmul,
+    plan_cache_clear,
+    plan_cache_info,
+)
 from repro.core.tiling import plan_matmul_tiles
 from repro.core.transfer_model import GemmProblem
 
 
 def _time(fn, *args, iters=3):
     fn(*args).block_until_ready()  # compile + warm
-    t0 = time.perf_counter()
+    total = 0.0
     for _ in range(iters):
-        out = fn(*args)
-    out.block_until_ready()
-    return (time.perf_counter() - t0) / iters * 1e6  # us
+        t0 = time.perf_counter()
+        fn(*args).block_until_ready()  # block EVERY iteration (async dispatch)
+        total += time.perf_counter() - t0
+    return total / iters * 1e6  # us
+
+
+def _jaxpr_census(fn, *args) -> dict:
+    """Count op kinds in the jaxpr — the 'how many kernels / ops' evidence."""
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    counts: dict = {}
+
+    def walk(jx):
+        for eqn in jx.eqns:
+            counts[eqn.primitive.name] = counts.get(eqn.primitive.name, 0) + 1
+            for sub in eqn.params.values():
+                if hasattr(sub, "jaxpr"):
+                    walk(sub.jaxpr)
+
+    walk(jaxpr.jaxpr)
+    return counts
+
+
+_ELEMENTWISE = {
+    "add", "mul", "max", "tanh", "logistic", "erf", "div", "sub",
+    "integer_pow", "exp",
+}
 
 
 def run() -> list[tuple[str, float, str]]:
@@ -31,6 +73,9 @@ def run() -> list[tuple[str, float, str]]:
     M = K = N = 256
     a = jax.random.normal(jax.random.PRNGKey(0), (M, K), jnp.float32)
     b = jax.random.normal(jax.random.PRNGKey(1), (K, N), jnp.float32)
+    bias = jax.random.normal(jax.random.PRNGKey(2), (N,), jnp.float32)
+    res = jax.random.normal(jax.random.PRNGKey(3), (M, N), jnp.float32)
+    flops = 2 * M * N * K
 
     for backend in ("xla", "pallas_mx", "pallas_baseline"):
         pol = MXPolicy(backend=backend, bm=128, bn=128, bk=64, interpret=True)
@@ -39,13 +84,83 @@ def run() -> list[tuple[str, float, str]]:
             return matmul(x, y, policy=pol)
 
         us = _time(f, a, b)
-        flops = 2 * M * N * K
         rows.append((f"kernel_{backend}_256", us, f"{flops / us / 1e3:.1f}MFLOP/s_cpu"))
 
-    # tile planner latency + its decision for a llama-shaped GEMM
+    # ---- fused linear: act(x@w + b) + res in ONE write-back ----
+    pol_mx = MXPolicy(backend="pallas_mx", bm=128, bn=128, bk=64, interpret=True)
+    pol_xla = MXPolicy(backend="xla")
+
+    def fused(x, y):
+        return linear(x, y, bias, activation="gelu", residual=res, policy=pol_mx)
+
+    def unfused(x, y):
+        return linear(x, y, bias, activation="gelu", residual=res, policy=pol_xla)
+
+    rows.append(("fused_linear_pallas_256", _time(fused, a, b), "gelu+bias+res"))
+    rows.append(("unfused_linear_xla_256", _time(unfused, a, b), "gelu+bias+res"))
+
+    # structural census: fused = one kernel; unfused = dot + elementwise ops
+    cf = _jaxpr_census(fused, a, b)
+    cu = _jaxpr_census(unfused, a, b)
+    n_pallas = cf.get("pallas_call", 0)
+    n_dot = cu.get("dot_general", 0)
+    n_elem = sum(v for k, v in cu.items() if k in _ELEMENTWISE)
+    rows.append((
+        "fusion_census",
+        float(n_pallas),
+        f"fused:{n_pallas}xpallas_call_vs_unfused:{n_dot}xdot+{n_elem}xelemwise",
+    ))
+    assert n_pallas == 1, f"fused path must be one kernel, got {cf}"
+    assert n_dot >= 1 and n_elem >= 2, f"unfused path should show the epilogue ops, got {cu}"
+
+    # transfer-model credit: eliminated M*N epilogue round-trips
+    ep_plan = pol_mx.plan(M, N, K, 4, fused_epilogue_ops=3)  # bias+gelu+res
+    rows.append((
+        "epilogue_traffic_saved_256",
+        float(ep_plan.epilogue_saved_bytes),
+        f"bytes_saved={ep_plan.epilogue_saved_bytes}"
+        f"_vs_gemm={ep_plan.hbm_bytes}",
+    ))
+
+    # ---- grouped (MoE) matmul: all experts in one launch ----
+    G, C, D, F = 8, 64, 128, 256
+    xg = jax.random.normal(jax.random.PRNGKey(4), (G * C, D), jnp.float32)
+    wg = jax.random.normal(jax.random.PRNGKey(5), (G, D, F), jnp.float32) * 0.05
+    sizes = jnp.full((G,), C, jnp.int32)
+
+    def grouped_pallas(x, w):
+        return grouped_matmul(x, w, sizes, policy=pol_mx)
+
+    def grouped_loop(x, w):
+        outs = [matmul(x[g * C:(g + 1) * C], w[g], policy=pol_mx) for g in range(G)]
+        return jnp.concatenate(outs)
+
+    rows.append(("grouped_matmul_1launch", _time(grouped_pallas, xg, wg),
+                 f"{G}experts_x{C}rows"))
+    rows.append(("grouped_matmul_Glaunches", _time(grouped_loop, xg, wg),
+                 f"{G}experts_loop"))
+    cg = _jaxpr_census(grouped_pallas, xg, wg)
+    cl = _jaxpr_census(grouped_loop, xg, wg)
+    rows.append(("grouped_launch_census", float(cg.get("pallas_call", 0)),
+                 f"one_launch:{cg.get('pallas_call', 0)}_vs_loop:{cl.get('pallas_call', 0)}"))
+
+    # ---- tile planner: latency, decision, and the LRU cache ----
+    plan_cache_clear()
     t0 = time.perf_counter()
     plan = plan_matmul_tiles(GemmProblem(4096, 53248, 16384, 2))
     us = (time.perf_counter() - t0) * 1e6
     rows.append(("tile_planner_llama_mlp", us,
                  f"bm{plan.bm}_bn{plan.bn}_bk{plan.bk}_AI{plan.arithmetic_intensity:.0f}"))
+
+    pol = MXPolicy(backend="pallas_mx")
+    t0 = time.perf_counter()
+    pol.plan(4096, 53248, 16384, 2)
+    cold = (time.perf_counter() - t0) * 1e6
+    t0 = time.perf_counter()
+    for _ in range(100):
+        pol.plan(4096, 53248, 16384, 2)
+    warm = (time.perf_counter() - t0) / 100 * 1e6
+    info = plan_cache_info()
+    rows.append(("tile_planner_cached", warm,
+                 f"cold{cold:.0f}us_warm{warm:.2f}us_hits{info.hits}"))
     return rows

@@ -96,6 +96,15 @@ class CensusResult:
         }
 
 
+def normalize_cost_analysis(cost) -> dict:
+    """Version-skew shim: `compiled.cost_analysis()` returns a dict on new
+    jax but a one-element list of dicts on older releases.  Normalize to a
+    dict (like the CompilerParams / shard_map shims, one site owns this)."""
+    if isinstance(cost, list):
+        return cost[0] if cost else {}
+    return cost or {}
+
+
 _COMMENT_RE = re.compile(r"/\*.*?\*/")
 
 

@@ -2,37 +2,88 @@
 
 `MXPolicy` is the software surface of the paper's `msettile`/`mx*` ISA: it
 selects the kernel backend and the tile plan.  Model code calls
-`ops.matmul(a, b)`; which physical kernel runs is a deployment decision:
+`ops.matmul(a, b)` / `ops.linear(x, w, b, activation=...)` /
+`ops.grouped_matmul(x, w, sizes)`; which physical kernel runs is a
+deployment decision:
 
   - "pallas_mx"        — the paper-faithful TPU kernel (VMEM accumulator,
-                         C-reset, plan from core.tiling).  TPU, or CPU via
-                         interpret=True (tests).
+                         C-reset, plan from core.tiling, fused epilogue).
+                         TPU, or CPU via interpret=True (tests).
   - "pallas_baseline"  — the paper's baseline traffic pattern (no inter-k
-                         buffering), for A/B comparisons.
-  - "xla"              — plain jnp.dot.  Used for dry-run lowering (Pallas
+                         buffering, unfused epilogue), for A/B comparisons.
+  - "xla"              — plain jnp ops.  Used for dry-run lowering (Pallas
                          TPU kernels cannot lower on the CPU backend) and CPU
                          smoke tests.  On real TPU, XLA's own matmul already
                          implements MX-style accumulation internally — the
                          Pallas kernels exist to *control* the tiling with
                          the paper's calculus and to fuse beyond what XLA
                          picks (see EXPERIMENTS.md §Perf).
+
+Tile plans are cached per unique (policy, M, N, K, elem_bytes): the
+planner's O(candidates³) search would otherwise rerun on every un-jitted
+call (`plan_cache_info()` exposes hit/miss counters for tests/benchmarks).
 """
 from __future__ import annotations
 
 import contextlib
 import dataclasses
+import functools
 import threading
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from ..kernels.baseline_matmul import baseline_matmul
-from ..kernels.mx_matmul import mx_matmul
+from ..kernels.mx_grouped_matmul import (
+    grouped_matmul_reference,
+    mx_grouped_matmul,
+)
+from ..kernels.mx_matmul import Epilogue, apply_activation, mx_matmul_fused
 from .tiling import DEFAULT_VMEM_BUDGET, TilePlan, plan_matmul_tiles
 from .transfer_model import GemmProblem
 
 BACKENDS = ("xla", "pallas_mx", "pallas_baseline")
+
+
+@functools.lru_cache(maxsize=1024)
+def _cached_plan(
+    policy: "MXPolicy", M: int, N: int, K: int, elem_bytes: int,
+    fused_epilogue_ops: int,
+) -> TilePlan:
+    """The planner runs once per unique (policy, M, N, K, elem_bytes) key;
+    MXPolicy is a frozen dataclass, so it hashes by value."""
+    if policy.bm and policy.bn and policy.bk:
+        from .transfer_model import PallasGemmTiling
+
+        t = PallasGemmTiling(policy.bm, policy.bn, policy.bk,
+                             accumulate_in_vmem=policy.backend != "pallas_baseline",
+                             fused_epilogue_ops=fused_epilogue_ops)
+        p = GemmProblem(M, N, K, elem_bytes)
+        return TilePlan(
+            policy.bm, policy.bn, policy.bk,
+            hbm_bytes=t.hbm_bytes(p),
+            vmem_bytes=t.vmem_bytes(p),
+            arithmetic_intensity=t.arithmetic_intensity(p),
+            grid_steps=t.grid_steps(p),
+            accumulate_in_vmem=t.accumulate_in_vmem,
+            epilogue_saved_bytes=t.epilogue_saved_bytes(p),
+        )
+    return plan_matmul_tiles(
+        GemmProblem(M, N, K, elem_bytes),
+        vmem_budget=policy.vmem_budget,
+        accumulate_in_vmem=policy.backend != "pallas_baseline",
+        fused_epilogue_ops=fused_epilogue_ops,
+    )
+
+
+def plan_cache_info():
+    """(hits, misses, maxsize, currsize) of the tile-plan cache."""
+    return _cached_plan.cache_info()
+
+
+def plan_cache_clear() -> None:
+    _cached_plan.cache_clear()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,26 +100,11 @@ class MXPolicy:
         if self.backend not in BACKENDS:
             raise ValueError(f"unknown backend {self.backend!r}; one of {BACKENDS}")
 
-    def plan(self, M: int, N: int, K: int, elem_bytes: int) -> TilePlan:
-        if self.bm and self.bn and self.bk:
-            from .transfer_model import PallasGemmTiling
-
-            t = PallasGemmTiling(self.bm, self.bn, self.bk,
-                                 accumulate_in_vmem=self.backend != "pallas_baseline")
-            p = GemmProblem(M, N, K, elem_bytes)
-            return TilePlan(
-                self.bm, self.bn, self.bk,
-                hbm_bytes=t.hbm_bytes(p),
-                vmem_bytes=t.vmem_bytes(p),
-                arithmetic_intensity=t.arithmetic_intensity(p),
-                grid_steps=t.grid_steps(p),
-                accumulate_in_vmem=t.accumulate_in_vmem,
-            )
-        return plan_matmul_tiles(
-            GemmProblem(M, N, K, elem_bytes),
-            vmem_budget=self.vmem_budget,
-            accumulate_in_vmem=self.backend != "pallas_baseline",
-        )
+    def plan(
+        self, M: int, N: int, K: int, elem_bytes: int,
+        fused_epilogue_ops: int = 0,
+    ) -> TilePlan:
+        return _cached_plan(self, M, N, K, elem_bytes, fused_epilogue_ops)
 
 
 _state = threading.local()
@@ -88,6 +124,11 @@ def use_policy(policy: MXPolicy):
         _state.policy = prev
 
 
+def _flatten_leading(a: jax.Array) -> Tuple[jax.Array, Tuple[int, ...]]:
+    lead = a.shape[:-2] if a.ndim > 2 else ()
+    return a.reshape(-1, a.shape[-1]), lead
+
+
 def matmul(
     a: jax.Array,
     b: jax.Array,
@@ -101,15 +142,14 @@ def matmul(
     if policy.backend == "xla":
         return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(out_dtype)
 
-    lead = a.shape[:-2] if a.ndim > 2 else ()
-    a2 = a.reshape(-1, a.shape[-1])
+    a2, lead = _flatten_leading(a)
     M, K = a2.shape
     N = b.shape[-1]
     plan = policy.plan(M, N, K, a.dtype.itemsize)
     kw = dict(bm=plan.bm, bn=plan.bn, bk=plan.bk, out_dtype=out_dtype,
               interpret=policy.interpret)
     if policy.backend == "pallas_mx":
-        out = mx_matmul(a2, b, **kw)
+        out = mx_matmul_fused(a2, b, **kw)
     else:
         out = baseline_matmul(a2, b, **kw)
     if a.ndim > 2:
@@ -117,17 +157,175 @@ def matmul(
     return out
 
 
+def linear(
+    x: jax.Array,
+    w: jax.Array,
+    b: Optional[jax.Array] = None,
+    *,
+    activation: str = "none",
+    w_gate: Optional[jax.Array] = None,
+    residual: Optional[jax.Array] = None,
+    out_scale: Optional[float] = None,
+    policy: Optional[MXPolicy] = None,
+    out_dtype=None,
+) -> jax.Array:
+    """y = act(x @ w + b) [+ residual] [* out_scale] — the fused-epilogue
+    entry point.  x: (..., M, K), w: (K, N), b: (N,), residual broadcastable
+    to (..., M, N).  activation "swiglu" gates with `w_gate` (K, N):
+    y = silu(x @ w_gate) * (x @ w + b).
+
+    On the pallas_mx backend the whole epilogue happens inside the kernel's
+    final-k write-back (one M*N store, zero intermediate round-trips); the
+    other backends compute the same math unfused (the A/B reference).
+    """
+    policy = policy or current_policy()
+    out_dtype = out_dtype or x.dtype
+    if (activation == "swiglu") != (w_gate is not None):
+        raise ValueError(
+            "w_gate must be given iff activation='swiglu' "
+            f"(got activation={activation!r}, w_gate={'set' if w_gate is not None else None})"
+        )
+
+    if policy.backend == "pallas_mx":
+        x2, lead = _flatten_leading(x)
+        M, K = x2.shape
+        N = w.shape[-1]
+        ep = Epilogue(
+            activation=activation,
+            bias=b is not None,
+            residual=residual is not None,
+            out_scale=out_scale,
+        )
+        plan = policy.plan(M, N, K, x.dtype.itemsize,
+                           fused_epilogue_ops=ep.n_fused_ops)
+        res2 = None
+        if residual is not None:
+            res2 = jnp.broadcast_to(
+                residual, (*lead, x.shape[-2], N) if lead else (M, N)
+            ).reshape(M, N)
+        out = mx_matmul_fused(
+            x2, w, epilogue=ep, b_gate=w_gate, bias=b, residual=res2,
+            bm=plan.bm, bn=plan.bn, bk=plan.bk,
+            out_dtype=out_dtype, interpret=policy.interpret,
+        )
+        if x.ndim > 2:
+            out = out.reshape(*lead, x.shape[-2], N)
+        return out
+
+    # Unfused reference composition (xla / pallas_baseline): each epilogue
+    # step is its own op — the M*N round-trips the fused path eliminates.
+    y = matmul(x, w, policy=policy, out_dtype=jnp.float32)
+    if b is not None:
+        y = y + b.astype(jnp.float32)
+    if activation == "swiglu":
+        g = matmul(x, w_gate, policy=policy, out_dtype=jnp.float32)
+        y = jax.nn.silu(g) * y
+    else:
+        y = apply_activation(y, activation)
+    if residual is not None:
+        y = y + residual.astype(jnp.float32)
+    if out_scale is not None:
+        y = y * jnp.float32(out_scale)
+    return y.astype(out_dtype)
+
+
+def grouped_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    group_sizes: jax.Array,
+    *,
+    activation: str = "none",
+    w_gate: Optional[jax.Array] = None,
+    policy: Optional[MXPolicy] = None,
+    out_dtype=None,
+) -> jax.Array:
+    """Ragged grouped GEMM: out[t] = act(x[t] @ w[g(t)]) for rows sorted by
+    group.  x: (T, K), w: (G, K, N), group_sizes: (G,).  One kernel launch
+    for all groups on the Pallas path (vs a Python loop of per-group GEMMs).
+    """
+    policy = policy or current_policy()
+    out_dtype = out_dtype or x.dtype
+    if policy.backend in ("xla", "pallas_baseline"):
+        return grouped_matmul_reference(
+            x, w, group_sizes, w_gate=w_gate, activation=activation,
+            out_dtype=out_dtype,
+        )
+    T, K = x.shape
+    N = w.shape[-1]
+    # Plan for the average per-group problem; the kernel's grid covers the
+    # ragged total with the same block shapes.  Credit the fused activation
+    # through the same accounting linear() uses.
+    G = max(int(w.shape[0]), 1)
+    n_fused = Epilogue(activation=activation).n_fused_ops
+    plan = policy.plan(max(T // G, 1), N, K, x.dtype.itemsize,
+                       fused_epilogue_ops=n_fused)
+    return mx_grouped_matmul(
+        x, w, group_sizes, w_gate=w_gate, activation=activation,
+        bm=plan.bm, bn=plan.bn, bk=plan.bk,
+        out_dtype=out_dtype, interpret=policy.interpret,
+    )
+
+
+# ---------------------------------------------------------------------------
+# einsum routing
+# ---------------------------------------------------------------------------
+
+
+def _parse_matmul_subscripts(
+    subscripts: str, lhs_ndim: int, rhs_ndim: int
+) -> Optional[str]:
+    """Structural check: does this einsum reduce to (..., M, K) @ (K, N)?
+
+    Returns the contraction letter when the spec is
+        lhs = <leading...> + [k],  rhs = [k, n],  out = <leading...> + [n]
+    with no repeated/summed-out leading letters and no ellipsis — i.e. any
+    real model contraction like "bsd,df->bsf" or "mk,kn->mn", not just the
+    literal "mk,kn" spelling.  Arrow-less specs get einsum's implicit
+    output (letters appearing once, alphabetical) before the same check.
+    """
+    if "." in subscripts:
+        return None
+    spec = subscripts.replace(" ", "")
+    try:
+        if "->" in spec:
+            ins, out = spec.split("->")
+        else:  # implicit output: once-only letters, alphabetical order
+            ins = spec
+            counts = {}
+            for ch in ins.replace(",", ""):
+                counts[ch] = counts.get(ch, 0) + 1
+            out = "".join(sorted(ch for ch, c in counts.items() if c == 1))
+        lhs, rhs = ins.split(",")
+    except ValueError:
+        return None
+    # lhs must be at least (M, K): a 1-D lhs would come back from matmul
+    # with a phantom leading dim of 1 instead of the einsum contract's rank.
+    if len(lhs) < 2 or len(lhs) != lhs_ndim or len(rhs) != rhs_ndim or len(rhs) != 2:
+        return None
+    if len(set(lhs)) != len(lhs) or len(set(rhs)) != len(rhs):
+        return None
+    k, n = rhs[0], rhs[1]
+    if not lhs.endswith(k) or k in out or n in lhs:
+        return None
+    if out != lhs[:-1] + n:
+        return None
+    return k
+
+
 def einsum(subscripts: str, *operands, policy: Optional[MXPolicy] = None, **kw):
-    """Einsum that routes plain contractions through `matmul`; everything
-    else falls back to jnp.einsum (still counted by the roofline from HLO)."""
+    """Einsum that routes matmul-shaped contractions through `matmul`;
+    everything else falls back to jnp.einsum (still counted by the roofline
+    from HLO).  Only `preferred_element_type` is honored on the routed path
+    (it becomes the out_dtype; the MX kernel always accumulates in f32);
+    any other einsum kwarg (e.g. `precision`) forces the jnp fallback
+    rather than being silently dropped."""
     policy = policy or current_policy()
     if policy.backend == "xla" or len(operands) != 2:
         return jnp.einsum(subscripts, *operands, **kw)
-    # Only the canonical "...mk,kn->...mn" form hits the Pallas path.
-    try:
-        lhs, rhs = subscripts.split("->")[0].split(",")
-        if lhs.endswith("mk") and rhs == "kn":
-            return matmul(*operands, policy=policy)
-    except ValueError:
-        pass
+    if not set(kw) <= {"preferred_element_type"}:
+        return jnp.einsum(subscripts, *operands, **kw)
+    lhs_op, rhs_op = operands
+    if _parse_matmul_subscripts(subscripts, lhs_op.ndim, rhs_op.ndim):
+        return matmul(lhs_op, rhs_op, policy=policy,
+                      out_dtype=kw.get("preferred_element_type"))
     return jnp.einsum(subscripts, *operands, **kw)

@@ -30,7 +30,14 @@ _SUBLANE = {2: 16, 4: 8, 8: 8}  # min second-minor tile per element size
 
 @dataclasses.dataclass(frozen=True)
 class TilePlan:
-    """A chosen (bm, bn, bk) with provenance for reporting."""
+    """A chosen (bm, bn, bk) with provenance for reporting.
+
+    ``epilogue_saved_bytes`` is the HBM traffic the plan's fused epilogue
+    eliminates versus the unfused op graph (2*M*N per fused elementwise op —
+    see transfer_model.PallasGemmTiling.epilogue_saved_bytes); 0 for a plain
+    GEMM.  ``hbm_bytes`` is the fused kernel's own traffic, so roofline
+    consumers credit the fusion as  unfused = hbm_bytes + epilogue_saved.
+    """
 
     bm: int
     bn: int
@@ -40,6 +47,7 @@ class TilePlan:
     arithmetic_intensity: float
     grid_steps: int
     accumulate_in_vmem: bool = True
+    epilogue_saved_bytes: int = 0
 
     def block_shapes(self) -> Tuple[Tuple[int, int], Tuple[int, int], Tuple[int, int]]:
         return (self.bm, self.bk), (self.bk, self.bn), (self.bm, self.bn)
@@ -67,6 +75,7 @@ def plan_matmul_tiles(
     accumulate_in_vmem: bool = True,
     max_block: int = 4096,
     acc_bytes: int = 4,
+    fused_epilogue_ops: int = 0,
 ) -> TilePlan:
     """Search (bm, bn, bk) minimizing HBM traffic under the VMEM budget.
 
@@ -74,6 +83,12 @@ def plan_matmul_tiles(
     the objective is the Table I ref. 1) total with inter-k buffering
     (MX) or without (baseline), and the constraint is the lower-level
     capacity (VMEM here, the 256 B buffer there).
+
+    ``fused_epilogue_ops`` > 0 records how many elementwise ops ride the
+    final-k write-back; the returned plan carries the resulting
+    ``epilogue_saved_bytes`` credit.  The savings are tile-shape independent
+    (2*M*N per op), so they don't perturb the search ordering — they change
+    what the roofline reports, not which tiles win.
 
     Tie-breaks (in order): fewer grid steps (higher "SIMD ratio" — the
     paper's instruction-amortization argument), larger bk (longer
@@ -90,7 +105,8 @@ def plan_matmul_tiles(
         for bn in bn_cands:
             for bk in bk_cands:
                 tiling = PallasGemmTiling(
-                    bm, bn, bk, accumulate_in_vmem=accumulate_in_vmem
+                    bm, bn, bk, accumulate_in_vmem=accumulate_in_vmem,
+                    fused_epilogue_ops=fused_epilogue_ops,
                 )
                 # Double-buffered inputs: Pallas pipelines the next (A, B)
                 # block DMA while the MXU consumes the current one.
@@ -117,6 +133,7 @@ def plan_matmul_tiles(
                         arithmetic_intensity=tiling.arithmetic_intensity(p),
                         grid_steps=tiling.grid_steps(p),
                         accumulate_in_vmem=accumulate_in_vmem,
+                        epilogue_saved_bytes=tiling.epilogue_saved_bytes(p),
                     )
     if best_plan is None:
         raise ValueError(

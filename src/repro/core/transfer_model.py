@@ -296,6 +296,14 @@ class PallasGemmTiling:
     persists across the bk grid axis and the output block is written exactly
     once.  With it off (the baseline kernel), the output block is re-read and
     re-written on every k step — the partial-sum round trip the paper kills.
+
+    ``fused_epilogue_ops`` extends the single-writeback calculus one level up
+    the op graph: each elementwise epilogue op (bias-add, activation,
+    residual-add, scale) that is fused into the final-k store would, unfused,
+    re-read and re-write the M*N output through HBM once.  The fused kernel
+    still writes M*N exactly once, so each fused op saves a full 2*M*N
+    round-trip (epilogue *operand* loads — bias N, residual M*N — happen in
+    both versions and are not credited).
     """
 
     bm: int
@@ -303,6 +311,7 @@ class PallasGemmTiling:
     bk: int
     accumulate_in_vmem: bool = True
     c_is_zero: bool = True
+    fused_epilogue_ops: int = 0
 
     def hbm_transfers(self, p: GemmProblem) -> Transfers:
         return mem_to_vrf(
@@ -329,6 +338,19 @@ class PallasGemmTiling:
             + self.bk * self.bn * p.elem_bytes
             + self.bm * self.bn * acc_bytes
         )
+
+    def epilogue_saved_bytes(self, p: GemmProblem, out_bytes: Optional[int] = None) -> int:
+        """HBM bytes the fused epilogue eliminates vs the unfused op graph:
+        2 * M * N (one read + one write of the output) per fused op."""
+        ob = p.elem_bytes if out_bytes is None else out_bytes
+        return self.fused_epilogue_ops * 2 * p.M * p.N * ob
+
+    def unfused_chain_bytes(self, p: GemmProblem, out_bytes: Optional[int] = None) -> int:
+        """Total HBM traffic of the equivalent *unfused* graph: the GEMM's
+        own traffic plus one M*N round-trip per epilogue op.  The roofline's
+        memory term for the fused kernel is plain ``hbm_bytes``; the delta is
+        the credit the fusion earns."""
+        return self.hbm_bytes(p, out_bytes) + self.epilogue_saved_bytes(p, out_bytes)
 
     def arithmetic_intensity(self, p: GemmProblem) -> float:
         return p.flops / self.hbm_bytes(p)

@@ -2,7 +2,18 @@
 from . import ref
 from .baseline_matmul import baseline_matmul
 from .mx_flash_attention import mx_flash_attention
-from .mx_matmul import mx_matmul
+from .mx_grouped_matmul import grouped_matmul_reference, mx_grouped_matmul
+from .mx_matmul import Epilogue, mx_matmul, mx_matmul_fused
 from .ssd_scan import ssd_scan
 
-__all__ = ["ref", "baseline_matmul", "mx_flash_attention", "mx_matmul", "ssd_scan"]
+__all__ = [
+    "ref",
+    "baseline_matmul",
+    "mx_flash_attention",
+    "mx_matmul",
+    "mx_matmul_fused",
+    "Epilogue",
+    "mx_grouped_matmul",
+    "grouped_matmul_reference",
+    "ssd_scan",
+]

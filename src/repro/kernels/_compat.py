@@ -1,0 +1,12 @@
+"""Version-skew shims for `jax.experimental.pallas.tpu`.
+
+The class carrying Mosaic compiler options was renamed across jax releases
+(`TPUCompilerParams` -> `CompilerParams`).  Kernels import the alias from
+here so a single site absorbs the skew (the same class of breakage as the
+`jax.sharding.AxisType` guard in launch/mesh.py).
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams

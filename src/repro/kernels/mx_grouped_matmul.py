@@ -1,0 +1,300 @@
+"""Grouped (ragged) MX matmul: all experts of an MoE layer in ONE kernel.
+
+Problem: out[t] = x[t] @ w[g(t)]  where rows of x are sorted by group
+(expert) and group g owns `group_sizes[g]` contiguous rows.  A Python loop
+of per-expert matmuls launches E kernels and re-reads the activations; this
+kernel walks every (group, row-tile) pair in a single Pallas launch.
+
+Ragged sizes are handled with *group-offset scalar prefetch* (the
+megablocks/ragged-dot construction): the wrapper computes, per logical grid
+step, which group and which global row-tile it works on, and ships those
+maps to SMEM via `pltpu.PrefetchScalarGridSpec` so the BlockSpec index maps
+can steer the A/W/out DMAs before the kernel body runs.  A row-tile that
+straddles a group boundary is visited once per group with complementary row
+masks — the two visits are consecutive in the grid, so the output block
+stays resident in VMEM between them (no extra HBM round-trip).
+
+The MX structure is unchanged from mx_matmul: f32 VMEM accumulator across
+the innermost k axis, `@pl.when(k == 0)` reset, single masked write-back at
+k == nk-1 — with an optional fused activation epilogue applied in VMEM.
+
+Grid: (n_tiles, logical_row_tiles, k_tiles); the logical axis has static
+length  ceil(Tp/bm) + G  (every group can add at most one straddled tile).
+Unused trailing slots replay the last real (group, tile) pair — idempotent,
+since they store the same masked result again.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ._compat import CompilerParams
+from .mx_matmul import apply_activation
+
+
+def make_group_metadata(
+    group_sizes: jax.Array, bm: int, num_slots: int, n_tiles: int
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Per-logical-slot steering arrays (all shape (num_slots,) except the
+    per-group starts): slot -> (group id, global row-tile id, first-writer
+    flag).  Computed with jnp so traced (data-dependent) group sizes work;
+    the results ride to SMEM as scalar-prefetch operands.
+
+    Trailing dummy slots are steered at the row-tiles *no* group owns
+    (everything past sum(sizes)): their row mask is empty, so with the
+    first-writer flag set the kernel zero-fills those tiles in the same
+    launch — no post-kernel masking pass over the output.  Dummies left
+    over after that sweep pin to the last tile with first=0 (a no-op
+    rewrite of the still-resident block).
+
+    Group ranges are clamped to the padded row count (`n_tiles * bm`):
+    oversubscribed group_sizes (sum > T, a caller arithmetic bug) degrade
+    to dropping the nonexistent rows instead of steering the BlockSpec
+    index maps to out-of-bounds tiles (a silent OOB DMA on real TPU).
+    """
+    t_padded = n_tiles * bm
+    sizes_raw = group_sizes.astype(jnp.int32)
+    ends_raw = jnp.cumsum(sizes_raw)
+    starts = jnp.minimum(ends_raw - sizes_raw, t_padded)
+    ends = jnp.minimum(ends_raw, t_padded)
+    sizes = ends - starts
+    nonempty = sizes > 0
+    t0 = jnp.where(nonempty, starts // bm, 0)
+    t1 = jnp.where(nonempty, (ends - 1) // bm, -1)
+    ng = jnp.where(nonempty, t1 - t0 + 1, 0)  # row-tiles visited per group
+    slot_start = jnp.cumsum(ng) - ng
+    total_slots = jnp.sum(ng)
+
+    slots = jnp.arange(num_slots, dtype=jnp.int32)
+    # Which group does slot i belong to?  searchsorted over the cumulative
+    # slot counts skips empty groups (their cumsum is flat).
+    grp = jnp.searchsorted(jnp.cumsum(ng), slots, side="right").astype(jnp.int32)
+    is_real = slots < total_slots
+    grp = jnp.where(is_real, grp, 0)
+    tile = t0[grp] + (slots - slot_start[grp])
+    # Dummy slots sweep the uncovered tail tiles (zero-fill), then pin to
+    # the last tile.  An uncovered tile's rows are >= sum(sizes), so any
+    # group id gives an all-false row mask there; grp 0 is as good as any.
+    total_rows = jnp.sum(sizes)
+    covered_end = jnp.where(total_rows > 0, (total_rows - 1) // bm, -1)
+    raw = covered_end + 1 + (slots - total_slots)
+    tile_dummy = jnp.clip(raw, 0, max(n_tiles - 1, 0))
+    zero_fill = (~is_real) & (raw < n_tiles)
+    tile = jnp.where(is_real, tile, tile_dummy).astype(jnp.int32)
+    # First-writer flag: first real slot of a tile, or a zero-fill dummy.
+    prev_tile = jnp.concatenate([jnp.array([-1], jnp.int32), tile[:-1]])
+    first = ((is_real & (tile != prev_tile)) | zero_fill).astype(jnp.int32)
+    return grp, tile, first, starts.astype(jnp.int32), sizes
+
+
+def _grouped_kernel(
+    # scalar-prefetch refs (SMEM):
+    grp_ref, tile_ref, first_ref, starts_ref, sizes_ref,
+    # tensor refs:
+    *refs,
+    nk: int,
+    bm: int,
+    out_dtype,
+    activation: str,
+    has_gate: bool,
+):
+    it = iter(refs)
+    x_ref = next(it)
+    w_ref = next(it)
+    wg_ref = next(it) if has_gate else None
+    o_ref = next(it)
+    acc_ref = next(it)
+    accg_ref = next(it) if has_gate else None
+
+    l = pl.program_id(1)
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        if accg_ref is not None:
+            accg_ref[...] = jnp.zeros_like(accg_ref)
+
+    x_blk = x_ref[...]
+    acc_ref[...] += jnp.dot(x_blk, w_ref[0], preferred_element_type=jnp.float32)
+    if accg_ref is not None:
+        accg_ref[...] += jnp.dot(
+            x_blk, wg_ref[0], preferred_element_type=jnp.float32
+        )
+
+    @pl.when(k == nk - 1)
+    def _store():
+        g = grp_ref[l]
+        t = tile_ref[l]
+        rows = t * bm + jax.lax.broadcasted_iota(jnp.int32, acc_ref.shape, 0)
+        start = starts_ref[g]
+        valid = (rows >= start) & (rows < start + sizes_ref[g])
+        acc = acc_ref[...]
+        if accg_ref is not None:
+            acc = jax.nn.silu(accg_ref[...]) * acc
+        else:
+            acc = apply_activation(acc, activation)
+        acc = acc.astype(out_dtype)
+        # A straddled row-tile is finished by consecutive slots: the first
+        # writer zero-fills its complement, later writers merge with the
+        # still-resident block (= the paper's single write-back per tile;
+        # the merge never leaves VMEM).
+        prev = jnp.where(first_ref[l] == 1, jnp.zeros_like(acc), o_ref[...])
+        o_ref[...] = jnp.where(valid, acc, prev)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("activation", "bm", "bn", "bk", "out_dtype", "interpret"),
+)
+def mx_grouped_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    group_sizes: jax.Array,
+    *,
+    w_gate: Optional[jax.Array] = None,
+    activation: str = "none",
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    out_dtype=None,
+    interpret: bool = False,
+) -> jax.Array:
+    """out[t] = act(x[t] @ w[g(t)]):  x: (T, K) rows sorted by group,
+    w: (G, K, N), group_sizes: (G,) ints with sum <= T.  Rows beyond
+    sum(group_sizes) are zero in the output.  activation == "swiglu" gates
+    with a second weight set `w_gate` (G, K, N), fused in VMEM.
+    """
+    if x.ndim != 2 or w.ndim != 3:
+        raise ValueError(f"expected x (T, K), w (G, K, N); got {x.shape}, {w.shape}")
+    T, K = x.shape
+    G, K2, N = w.shape
+    assert K == K2, (x.shape, w.shape)
+    if group_sizes.shape != (G,):
+        raise ValueError(
+            f"group_sizes must have shape ({G},) to match w's leading dim; "
+            f"got {group_sizes.shape}"
+        )
+    has_gate = activation == "swiglu"
+    if has_gate != (w_gate is not None):
+        raise ValueError("w_gate must be given iff activation=='swiglu'")
+    out_dtype = out_dtype or x.dtype
+
+    bm_, bn_, bk_ = min(bm, T), min(bn, N), min(bk, K)
+    # pad rows *after* the data (group layout must keep row t at index t)
+    x_p = jnp.pad(x, ((0, (-T) % bm_), (0, (-K) % bk_)))
+    w_p = jnp.pad(w, ((0, 0), (0, (-K) % bk_), (0, (-N) % bn_)))
+    Tp, Kp = x_p.shape
+    Np = w_p.shape[2]
+    nk = Kp // bk_
+    num_slots = Tp // bm_ + G  # static upper bound on (group, tile) pairs
+    grid = (Np // bn_, num_slots, nk)
+
+    grp, tile, first, starts, sizes = make_group_metadata(
+        group_sizes, bm_, num_slots, Tp // bm_
+    )
+
+    in_specs = [
+        # x block follows the slot's global row-tile; w follows its group.
+        pl.BlockSpec((bm_, bk_), lambda j, l, k, grp, tile, first, st, sz: (tile[l], k)),
+        pl.BlockSpec(
+            (1, bk_, bn_), lambda j, l, k, grp, tile, first, st, sz: (grp[l], k, j)
+        ),
+    ]
+    operands = [x_p, w_p]
+    scratch = [pltpu.VMEM((bm_, bn_), jnp.float32)]
+    if has_gate:
+        wg_p = jnp.pad(w_gate, ((0, 0), (0, (-K) % bk_), (0, (-N) % bn_)))
+        in_specs.append(
+            pl.BlockSpec(
+                (1, bk_, bn_), lambda j, l, k, grp, tile, first, st, sz: (grp[l], k, j)
+            )
+        )
+        operands.append(wg_p)
+        scratch.append(pltpu.VMEM((bm_, bn_), jnp.float32))
+
+    kernel = functools.partial(
+        _grouped_kernel,
+        nk=nk,
+        bm=bm_,
+        out_dtype=out_dtype,
+        activation=activation,
+        has_gate=has_gate,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=5,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec(
+                (bm_, bn_), lambda j, l, k, grp, tile, first, st, sz: (tile[l], j)
+            ),
+            scratch_shapes=scratch,
+        ),
+        out_shape=jax.ShapeDtypeStruct((Tp, Np), out_dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(grp, tile, first, starts, sizes, *operands)
+    # Rows not owned by any group (beyond sum(sizes)) are zero-filled INSIDE
+    # the launch: the metadata steers spare dummy slots at the uncovered
+    # tail tiles with an empty row mask + first-writer flag, so no
+    # post-kernel masking pass (an extra M*N round-trip) is needed.
+    return out[:T, :N]
+
+
+def _ragged_dot_f32(x: jax.Array, w: jax.Array, group_sizes: jax.Array) -> jax.Array:
+    """Memory-safe ragged dot: `lax.ragged_dot` when available, else a
+    per-group masked-GEMM loop.  Never materializes a (T, K, N) per-row
+    weight gather (which would be terabytes at real MoE sizes)."""
+    gs = group_sizes.astype(jnp.int32)
+    if hasattr(jax.lax, "ragged_dot"):
+        return jax.lax.ragged_dot(
+            x, w, gs, preferred_element_type=jnp.float32
+        )
+    T = x.shape[0]
+    ends = jnp.cumsum(gs)
+    starts = ends - gs
+    rows = jnp.arange(T, dtype=jnp.int32)
+    out = jnp.zeros((T, w.shape[-1]), jnp.float32)
+    for g in range(w.shape[0]):  # G is static; each step is one dense GEMM
+        mask = (rows >= starts[g]) & (rows < ends[g])
+        out += jnp.where(
+            mask[:, None],
+            jnp.dot(x, w[g], preferred_element_type=jnp.float32),
+            0.0,
+        )
+    return out
+
+
+def grouped_matmul_reference(
+    x: jax.Array,
+    w: jax.Array,
+    group_sizes: jax.Array,
+    *,
+    w_gate: Optional[jax.Array] = None,
+    activation: str = "none",
+    out_dtype=None,
+) -> jax.Array:
+    """XLA reference semantics for the grouped matmul.  Used by the xla
+    backend of ops.grouped_matmul and by the numerics tests."""
+    T = x.shape[0]
+    G = w.shape[0]
+    out_dtype = out_dtype or x.dtype
+    gs = group_sizes.astype(jnp.int32)
+    h = _ragged_dot_f32(x, w, gs)
+    if activation == "swiglu":
+        g = _ragged_dot_f32(x, w_gate, gs)
+        h = jax.nn.silu(g) * h
+    else:
+        h = apply_activation(h, activation)
+    total = jnp.sum(gs) if G else jnp.int32(0)
+    valid = jnp.arange(T, dtype=jnp.int32) < total
+    return jnp.where(valid[:, None], h, 0).astype(out_dtype)

@@ -1,11 +1,12 @@
-"""MX-ready Pallas matmul: the paper's technique, TPU-native.
+"""MX-ready Pallas matmul: the paper's technique, TPU-native — now with a
+declarative fused epilogue.
 
 The paper's near-FPU tile buffer accumulates an m'×n' output sub-tile across
 the k' reduction, writing the result to the VRF once instead of
 read-modify-writing it every step (inter-k-buffering, §II-C-a), and resets
 instead of loading when C == 0 (§II-C-b).
 
-TPU mapping (DESIGN.md §2):
+TPU mapping (README §Design):
   - the output block's f32 accumulator lives in a VMEM scratch that persists
     across the innermost (k) grid dimension;
   - `@pl.when(k == 0)` zero-init  == C-tile reset (no C load);
@@ -15,12 +16,20 @@ TPU mapping (DESIGN.md §2):
     (i, k) is independent of j, so Pallas's pipeline keeps it resident while
     j advances: that is the broadcast-engine reuse of the A tile.
 
+Epilogue fusion extends the same single-writeback argument one level up the
+op graph: bias-add, residual-add, activation, and output scaling happen
+*inside* the final-k store, so the GEMM result leaves VMEM exactly once —
+instead of the unfused graph's matmul-store + per-elementwise-op M*N
+round-trips through HBM.  The general GEMM of Eq. 1 (the C operand) is the
+special case `Epilogue(residual=True)`.
+
 Block shapes come from `core.tiling.plan_matmul_tiles` (the `msettile`
 analogue).  The grid iterates (m, n, k) with k innermost ("arbitrary"
 semantics — the accumulator carries a dependence), m/n parallel.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Optional
 
@@ -29,38 +38,120 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import CompilerParams
 
-def _mx_matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, nk: int, out_dtype):
+ACTIVATIONS = ("none", "relu", "gelu", "silu", "swiglu")
+
+
+def apply_activation(x: jax.Array, activation: str) -> jax.Array:
+    """Elementwise activations usable both inside Pallas kernels and as the
+    XLA reference path (identical primitives => comparable numerics)."""
+    if activation == "none":
+        return x
+    if activation == "relu":
+        return jax.nn.relu(x)
+    if activation == "gelu":
+        return jax.nn.gelu(x)
+    if activation == "silu":
+        return jax.nn.silu(x)
+    raise ValueError(f"unknown activation {activation!r}; one of {ACTIVATIONS}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Epilogue:
+    """Declarative spec of what happens to the output tile at the final-k
+    write-back, while it is still resident in VMEM.
+
+    Semantics (in application order, all in f32):
+        acc  = A @ B                       (+ gate accumulator if swiglu)
+        acc += bias                        [bias]
+        acc  = act(acc)  or  silu(gate_acc) * acc   [swiglu]
+        acc += residual                    [residual]
+        acc *= out_scale                   [out_scale]
+        out  = acc.astype(out_dtype)       (the ONE write-back)
+
+    ``swiglu`` pairs the main GEMM with a second GEMM against a gate weight
+    (same shape as B) accumulated in a second VMEM scratch; the gating
+    multiply happens at the write-back, so the intermediate up/gate
+    projections never exist in HBM at all.
+    """
+
+    activation: str = "none"
+    bias: bool = False
+    residual: bool = False
+    out_scale: Optional[float] = None
+
+    def __post_init__(self):
+        if self.activation not in ACTIVATIONS:
+            raise ValueError(
+                f"unknown activation {self.activation!r}; one of {ACTIVATIONS}"
+            )
+
+    @property
+    def has_gate(self) -> bool:
+        return self.activation == "swiglu"
+
+    @property
+    def n_fused_ops(self) -> int:
+        """How many elementwise HBM round-trips the fusion eliminates
+        (consumed by core.transfer_model's epilogue accounting)."""
+        n = 0
+        if self.bias:
+            n += 1
+        if self.activation == "swiglu":
+            n += 2  # silu(gate) and the gating multiply
+        elif self.activation != "none":
+            n += 1
+        if self.residual:
+            n += 1
+        if self.out_scale is not None:
+            n += 1
+        return n
+
+
+def _fused_kernel(*refs, nk: int, out_dtype, epilogue: Epilogue):
+    """Kernel body.  refs layout (inputs, outputs, scratch):
+    a, b, [b_gate], [bias], [residual], o, acc, [acc_gate]."""
+    it = iter(refs)
+    a_ref = next(it)
+    b_ref = next(it)
+    bg_ref = next(it) if epilogue.has_gate else None
+    bias_ref = next(it) if epilogue.bias else None
+    res_ref = next(it) if epilogue.residual else None
+    o_ref = next(it)
+    acc_ref = next(it)
+    accg_ref = next(it) if epilogue.has_gate else None
+
     k = pl.program_id(2)
 
     @pl.when(k == 0)
-    def _zero():  # C-tile reset: initialize the near-compute accumulator
+    def _zero():  # C-tile reset: initialize the near-compute accumulator(s)
         acc_ref[...] = jnp.zeros_like(acc_ref)
+        if accg_ref is not None:
+            accg_ref[...] = jnp.zeros_like(accg_ref)
 
     # mxfmacc: one systolic-tile FMA chain into the resident accumulator.
-    acc_ref[...] += jnp.dot(
-        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
-    )
+    a_blk = a_ref[...]
+    acc_ref[...] += jnp.dot(a_blk, b_ref[...], preferred_element_type=jnp.float32)
+    if accg_ref is not None:
+        accg_ref[...] += jnp.dot(
+            a_blk, bg_ref[...], preferred_element_type=jnp.float32
+        )
 
     @pl.when(k == nk - 1)
-    def _store():  # single write-back of the finished output tile (D up once)
-        o_ref[...] = acc_ref[...].astype(out_dtype)
-
-
-def _bias_matmul_kernel(a_ref, b_ref, c_ref, o_ref, acc_ref, *, nk: int, out_dtype):
-    k = pl.program_id(2)
-
-    @pl.when(k == 0)
-    def _init():  # general GEMM (Eq. 1): load C once instead of resetting
-        acc_ref[...] = c_ref[...].astype(jnp.float32)
-
-    acc_ref[...] += jnp.dot(
-        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
-    )
-
-    @pl.when(k == nk - 1)
-    def _store():
-        o_ref[...] = acc_ref[...].astype(out_dtype)
+    def _store():  # single write-back, with the epilogue applied in VMEM
+        acc = acc_ref[...]
+        if bias_ref is not None:
+            acc = acc + bias_ref[...].astype(jnp.float32)
+        if epilogue.has_gate:
+            acc = jax.nn.silu(accg_ref[...]) * acc
+        else:
+            acc = apply_activation(acc, epilogue.activation)
+        if res_ref is not None:
+            acc = acc + res_ref[...].astype(jnp.float32)
+        if epilogue.out_scale is not None:
+            acc = acc * jnp.float32(epilogue.out_scale)
+        o_ref[...] = acc.astype(out_dtype)
 
 
 def _pad_to(x: jax.Array, m0: int, m1: int) -> jax.Array:
@@ -73,26 +164,34 @@ def _pad_to(x: jax.Array, m0: int, m1: int) -> jax.Array:
 
 @functools.partial(
     jax.jit,
-    static_argnames=("bm", "bn", "bk", "out_dtype", "interpret"),
+    static_argnames=("epilogue", "bm", "bn", "bk", "out_dtype", "interpret"),
 )
-def mx_matmul(
+def mx_matmul_fused(
     a: jax.Array,
     b: jax.Array,
-    c: Optional[jax.Array] = None,
     *,
+    epilogue: Epilogue = Epilogue(),
+    b_gate: Optional[jax.Array] = None,
+    bias: Optional[jax.Array] = None,
+    residual: Optional[jax.Array] = None,
     bm: int = 128,
     bn: int = 128,
     bk: int = 128,
     out_dtype=None,
     interpret: bool = False,
 ) -> jax.Array:
-    """D = A @ B (+ C), MX-style: f32 VMEM accumulator across the K grid.
-
-    a: (M, K), b: (K, N), optional c: (M, N).  Inputs are padded up to block
-    multiples (the wrapper-level analogue of the paper's ceil-div tiling).
+    """D = epilogue(A @ B), with the epilogue fused into the single final-k
+    write-back.  a: (M, K), b: (K, N); bias: (N,); residual: (M, N);
+    b_gate: (K, N) when epilogue.activation == "swiglu".
     """
     if a.ndim != 2 or b.ndim != 2:
         raise ValueError(f"mx_matmul expects 2-D operands, got {a.shape}, {b.shape}")
+    if epilogue.has_gate != (b_gate is not None):
+        raise ValueError("b_gate must be given iff epilogue.activation=='swiglu'")
+    if epilogue.bias != (bias is not None):
+        raise ValueError("bias operand must match epilogue.bias")
+    if epilogue.residual != (residual is not None):
+        raise ValueError("residual operand must match epilogue.residual")
     M, K = a.shape
     K2, N = b.shape
     assert K == K2, (a.shape, b.shape)
@@ -111,24 +210,57 @@ def mx_matmul(
         pl.BlockSpec((bk_, bn_), lambda i, j, k: (k, j)),  # mld.b
     ]
     operands = [a_p, b_p]
-    if c is not None:
-        c_p = _pad_to(c, bm_, bn_)
+    scratch = [pltpu.VMEM((bm_, bn_), jnp.float32)]  # the tile buffer
+    if epilogue.has_gate:
+        in_specs.append(pl.BlockSpec((bk_, bn_), lambda i, j, k: (k, j)))
+        operands.append(_pad_to(b_gate, bk_, bn_))
+        scratch.append(pltpu.VMEM((bm_, bn_), jnp.float32))
+    if epilogue.bias:
+        # (N,) -> (1, N): the bias block rides along with the (i, j) tile and
+        # is consumed only at the final-k store.
+        in_specs.append(pl.BlockSpec((1, bn_), lambda i, j, k: (0, j)))
+        operands.append(_pad_to(bias.reshape(1, -1), 1, bn_))
+    if epilogue.residual:
         in_specs.append(pl.BlockSpec((bm_, bn_), lambda i, j, k: (i, j)))
-        operands.append(c_p)
-        kernel = functools.partial(_bias_matmul_kernel, nk=nk, out_dtype=out_dtype)
-    else:
-        kernel = functools.partial(_mx_matmul_kernel, nk=nk, out_dtype=out_dtype)
+        operands.append(_pad_to(residual, bm_, bn_))
 
+    kernel = functools.partial(
+        _fused_kernel, nk=nk, out_dtype=out_dtype, epilogue=epilogue
+    )
     out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=in_specs,
         out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, k: (i, j)),  # mst.c
         out_shape=jax.ShapeDtypeStruct((Mp, Np), out_dtype),
-        scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.float32)],  # the tile buffer
-        compiler_params=pltpu.CompilerParams(
+        scratch_shapes=scratch,
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
     )(*operands)
     return out[:M, :N]
+
+
+def mx_matmul(
+    a: jax.Array,
+    b: jax.Array,
+    c: Optional[jax.Array] = None,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    out_dtype=None,
+    interpret: bool = False,
+) -> jax.Array:
+    """D = A @ B (+ C), MX-style: f32 VMEM accumulator across the K grid.
+
+    The general GEMM's C operand (Eq. 1) is the `residual` epilogue: with no
+    activation, adding C at the final write-back equals loading it into the
+    accumulator at k == 0 (both happen in f32), and keeps one kernel body.
+    """
+    ep = Epilogue(residual=c is not None)
+    return mx_matmul_fused(
+        a, b, epilogue=ep, residual=c,
+        bm=bm, bn=bn, bk=bk, out_dtype=out_dtype, interpret=interpret,
+    )

@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs import ARCH_IDS, SHAPES, cell_applicable, get_config
+from ..core import hlo_census as census_mod
 from ..core.hlo_census import census
 from ..core.roofline import (
     HBM_BW, ICI_BW, PEAK_FLOPS_BF16, RooflineReport, parse_collective_bytes,
@@ -90,7 +91,7 @@ def lower_cell(arch: str, shape: str, mesh_kind: str, *, extra: dict | None = No
 
     mem = compiled.memory_analysis()
     print(mem)  # proves it fits (per-device bytes)
-    cost = compiled.cost_analysis() or {}
+    cost = census_mod.normalize_cost_analysis(compiled.cost_analysis())
     print({k: v for k, v in cost.items() if k in ("flops", "bytes accessed")})
     hlo = compiled.as_text()
 

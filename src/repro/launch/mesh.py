@@ -10,13 +10,23 @@ from __future__ import annotations
 
 import jax
 import numpy as np
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+try:  # jax >= 0.4.34 exposes explicit axis types
+    from jax.sharding import AxisType
+except ImportError:  # older jax: positional Mesh construction only
+    AxisType = None
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    if AxisType is not None:
+        return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    if hasattr(jax, "make_mesh"):
+        return jax.make_mesh(shape, axes)
+    n = int(np.prod(shape))
+    return Mesh(np.array(jax.devices()[:n]).reshape(shape), axes)
 
 
 def make_mesh(shape, axes) -> Mesh:

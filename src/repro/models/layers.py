@@ -63,10 +63,9 @@ class Linear(Module):
         return p
 
     def __call__(self, p, x):
-        y = ops.matmul(x, p["w"], out_dtype=x.dtype)
-        if self.bias:
-            y = y + p["b"].astype(y.dtype)
-        return y
+        # bias rides the kernel's final-k write-back on the Pallas path
+        return ops.linear(x, p["w"], p["b"] if self.bias else None,
+                          out_dtype=x.dtype)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,7 +80,12 @@ class Embedding(Module):
         return p["table"][ids]
 
     def attend(self, p, x):
-        """Tied LM head: logits = x @ table^T (f32)."""
+        """Tied LM head: logits = x @ table^T (f32).
+
+        Stays on jnp.dot deliberately: XLA folds the transpose into the
+        dot_general's dimension numbers, whereas routing through the Pallas
+        path would materialize a full (D, V) copy of the table per call.
+        """
         return jnp.dot(x, p["table"].T, preferred_element_type=jnp.float32)
 
 
@@ -201,11 +205,12 @@ class Attention(Module):
     def _qkv(self, p, x, positions):
         b, s, _ = x.shape
         hd = self.hd
-        q = ops.matmul(x, p["wq"], out_dtype=x.dtype)
-        k = ops.matmul(x, p["wk"], out_dtype=x.dtype)
-        v = ops.matmul(x, p["wv"], out_dtype=x.dtype)
-        if self.qkv_bias:
-            q, k, v = q + p["bq"].astype(q.dtype), k + p["bk"].astype(k.dtype), v + p["bv"].astype(v.dtype)
+        bq = p["bq"] if self.qkv_bias else None
+        bk = p["bk"] if self.qkv_bias else None
+        bv = p["bv"] if self.qkv_bias else None
+        q = ops.linear(x, p["wq"], bq, out_dtype=x.dtype)
+        k = ops.linear(x, p["wk"], bk, out_dtype=x.dtype)
+        v = ops.linear(x, p["wv"], bv, out_dtype=x.dtype)
         q = q.reshape(b, s, self.n_heads, hd)
         k = k.reshape(b, s, self.n_kv_heads, hd)
         v = v.reshape(b, s, self.n_kv_heads, hd)
@@ -214,9 +219,11 @@ class Attention(Module):
             k = apply_rope(k, positions, self.rope_theta)
         return q, k, v
 
-    def __call__(self, p, x, *, positions=None, kv=None):
+    def __call__(self, p, x, *, positions=None, kv=None, residual=None):
         """Self-attention over x: (B, S, D).  If kv=(k_ext, v_ext) is given,
-        attends over those instead (cross-attention; no causal mask)."""
+        attends over those instead (cross-attention; no causal mask).
+        `residual` (broadcastable to the output) is fused into the output
+        projection's write-back on the Pallas path."""
         b, s, _ = x.shape
         if positions is None:
             positions = jnp.broadcast_to(jnp.arange(s), (b, s))
@@ -234,7 +241,7 @@ class Attention(Module):
         else:
             o = full_attention(q, k, v, causal=causal)
         o = o.reshape(b, s, self.n_heads * self.hd)
-        return ops.matmul(o, p["wo"], out_dtype=x.dtype)
+        return ops.linear(o, p["wo"], residual=residual, out_dtype=x.dtype)
 
     # ---------------- KV-cache decode path ----------------
 
@@ -254,7 +261,7 @@ class Attention(Module):
         ax = ("batch", "cache_seq", "kv_heads", "head_dim")
         return {"k": ax, "v": ax}
 
-    def decode(self, p, x, cache, index):
+    def decode(self, p, x, cache, index, *, residual=None):
         """One decode step.  x: (B, 1, D); cache k/v: (B, Smax, Hkv, hd);
         index: scalar position, or (B,) per-slot positions (continuous
         batching — each slot decodes at its own depth).
@@ -294,7 +301,7 @@ class Attention(Module):
         pr = jax.nn.softmax(s, axis=-1).astype(q.dtype)
         o = jnp.einsum("bhqk,bkhd->bqhd", pr, v)
         o = o.reshape(b, 1, self.n_heads * d)
-        out = ops.matmul(o, p["wo"], out_dtype=x.dtype)
+        out = ops.linear(o, p["wo"], residual=residual, out_dtype=x.dtype)
         return out, {"k": k_cache, "v": v_cache}
 
 
@@ -317,13 +324,15 @@ class MLP(Module):
             p["wg"] = mk.param("wg", (self.d_model, self.d_ff), ("embed", "mlp"))
         return p
 
-    def __call__(self, p, x):
-        h = ops.matmul(x, p["wi"], out_dtype=x.dtype)
+    def __call__(self, p, x, *, residual=None):
+        """Fused path: silu(x@wg) * (x@wi) is ONE kernel (two accumulators,
+        gating at the write-back); the down-projection fuses the residual
+        add.  Intermediates never round-trip HBM between matmul and
+        consumer."""
         if self.gated:
-            g = ops.matmul(x, p["wg"], out_dtype=x.dtype)
-            h = jax.nn.silu(g) * h
-        elif self.activation == "gelu":
-            h = jax.nn.gelu(h)
+            h = ops.linear(x, p["wi"], w_gate=p["wg"], activation="swiglu",
+                           out_dtype=x.dtype)
         else:
-            h = jax.nn.relu(h)
-        return ops.matmul(h, p["wo"], out_dtype=x.dtype)
+            act = self.activation if self.activation in ("gelu", "relu") else "relu"
+            h = ops.linear(x, p["wi"], activation=act, out_dtype=x.dtype)
+        return ops.linear(h, p["wo"], residual=residual, out_dtype=x.dtype)

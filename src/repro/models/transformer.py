@@ -87,19 +87,21 @@ class TransformerBlock(Module):
 
     def __call__(self, p, x, *, enc_kv=None):
         attn = self._attn()
-        x = x + attn(p["attn"], rms_norm(x, p["ln1"]))
+        # residual adds fuse into the output-projection write-backs
+        x = attn(p["attn"], rms_norm(x, p["ln1"]), residual=x)
         if self.cross_attention:
             assert enc_kv is not None
             xa = self._xattn_module()
-            x = x + xa(p["xattn"], rms_norm(x, p["ln_x"]), kv=enc_kv)
+            x = xa(p["xattn"], rms_norm(x, p["ln_x"]), kv=enc_kv, residual=x)
         ffn = self._ffn()
         aux = jnp.float32(0.0)
         h = rms_norm(x, p["ln2"])
         if self.use_moe:
             y, aux = ffn(p["ffn"], h)
+            x = x + y
         else:
-            y = ffn(p["ffn"], h)
-        return x + y, aux
+            x = ffn(p["ffn"], h, residual=x)
+        return x, aux
 
     def _xattn_module(self):
         return Attention(self.d_model, self.n_heads, self.n_kv_heads,
@@ -118,18 +120,19 @@ class TransformerBlock(Module):
 
     def decode(self, p, x, cache, index, *, enc_kv=None):
         attn = self._attn()
-        o, cache = attn.decode(p["attn"], rms_norm(x, p["ln1"]), cache, index)
-        x = x + o
+        x, cache = attn.decode(p["attn"], rms_norm(x, p["ln1"]), cache, index,
+                               residual=x)
         if self.cross_attention:
             xa = self._xattn_module()
-            x = x + xa(p["xattn"], rms_norm(x, p["ln_x"]), kv=enc_kv)
+            x = xa(p["xattn"], rms_norm(x, p["ln_x"]), kv=enc_kv, residual=x)
         ffn = self._ffn()
         h = rms_norm(x, p["ln2"])
         if self.use_moe:
             y, _ = ffn(p["ffn"], h)
+            x = x + y
         else:
-            y = ffn(p["ffn"], h)
-        return x + y, cache
+            x = ffn(p["ffn"], h, residual=x)
+        return x, cache
 
 
 def _wrap_state_block(block):
@@ -289,7 +292,7 @@ class DecoderLM(Module):
         if cfg.tie_embeddings:
             logits = Embedding(cfg.vocab, cfg.d_model).attend(p["embed"], x)
         else:
-            logits = jnp.dot(x, p["lm_head"], preferred_element_type=jnp.float32)
+            logits = ops.matmul(x, p["lm_head"], out_dtype=jnp.float32)
         return logits, aux
 
     # ---------------- decode ----------------
@@ -389,7 +392,7 @@ class DecoderLM(Module):
         if cfg.tie_embeddings:
             logits = Embedding(cfg.vocab, cfg.d_model).attend(p["embed"], x)
         else:
-            logits = jnp.dot(x, p["lm_head"], preferred_element_type=jnp.float32)
+            logits = ops.matmul(x, p["lm_head"], out_dtype=jnp.float32)
         return logits, new_cache
 
 

@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ..parallel.sharding import shard_map
+
 
 def quantize(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
     """Symmetric per-tensor int8. Returns (q, scale)."""
@@ -59,7 +61,7 @@ def compressed_grad_sync(grads: Any, err_state: Any, mesh, axis: str = "pod"):
             return total / n, new_err
 
         spec = P()  # leaf replicated over `axis`; other axes untouched here
-        return jax.shard_map(
+        return shard_map(
             inner, mesh=mesh,
             in_specs=(spec, spec), out_specs=(spec, spec),
             check_vma=False,

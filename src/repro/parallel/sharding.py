@@ -28,6 +28,18 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 AxisVal = Union[None, str, Tuple[str, ...]]
 
 
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """Version-skew shim: `jax.shard_map(..., check_vma=...)` on new jax,
+    `jax.experimental.shard_map.shard_map(..., check_rep=...)` on old."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _sm
+
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma)
+
+
 @dataclasses.dataclass
 class AxisRules:
     mesh: Mesh

@@ -1,0 +1,110 @@
+"""Test-environment shims.
+
+The container may lack `hypothesis` (we cannot pip-install inside it).  When
+the real package is absent we register a minimal, deterministic stand-in that
+supports exactly the subset these tests use — `@given` with keyword
+strategies, `@settings(max_examples=..., deadline=...)`, and the
+`sampled_from` / `floats` / `integers` / `booleans` strategies.  Sampling is
+seeded from the test name, so runs are reproducible; it is NOT a property
+testing engine (no shrinking, no coverage guidance) — just enough to keep the
+property tests meaningful as randomized regression tests.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+
+
+def _install_hypothesis_fallback() -> None:
+    hyp = types.ModuleType("hypothesis")
+    st = types.ModuleType("hypothesis.strategies")
+    hyp.__fallback__ = True
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng: random.Random):
+            return self._draw(rng)
+
+    def sampled_from(seq):
+        items = list(seq)
+        return _Strategy(lambda rng: items[rng.randrange(len(items))])
+
+    def floats(min_value=0.0, max_value=1.0, **_kw):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    def integers(min_value=0, max_value=2**31 - 1, **_kw):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+    st.sampled_from = sampled_from
+    st.floats = floats
+    st.integers = integers
+    st.booleans = booleans
+
+    _MAX_EXAMPLES_CAP = 20  # keep CPU suite time bounded
+
+    class _Rejected(Exception):
+        """Raised by assume(False): the example is discarded, not a failure."""
+
+    def given(**strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                # honor @settings applied either outside or inside @given
+                cfg = getattr(wrapper, "_fallback_settings", None) or getattr(
+                    fn, "_fallback_settings", {}
+                )
+                n = min(int(cfg.get("max_examples", 10)), _MAX_EXAMPLES_CAP)
+                rng = random.Random(fn.__qualname__)
+                for _ in range(n):
+                    drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                    try:
+                        fn(*args, **kwargs, **drawn)
+                    except _Rejected:
+                        continue  # assume() rejected this draw
+
+            # pytest must not see the drawn parameters as fixture requests:
+            # hide the wrapped signature (real hypothesis does the same).
+            del wrapper.__wrapped__
+            wrapper.__signature__ = inspect.Signature()
+            wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)
+            return wrapper
+
+        return deco
+
+    def settings(*args, **kwargs):
+        if args and callable(args[0]):  # bare @settings
+            return args[0]
+
+        def deco(fn):
+            fn._fallback_settings = kwargs
+            return fn
+
+        return deco
+
+    def assume(condition):
+        if not condition:
+            raise _Rejected()
+
+    hyp.given = given
+    hyp.settings = settings
+    hyp.assume = assume
+    hyp.strategies = st
+    hyp.HealthCheck = types.SimpleNamespace(
+        too_slow=None, data_too_large=None, filter_too_much=None
+    )
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st
+
+
+try:  # pragma: no cover - depends on the environment
+    import hypothesis  # noqa: F401
+except ImportError:  # pragma: no cover
+    _install_hypothesis_fallback()
