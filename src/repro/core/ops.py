@@ -39,11 +39,12 @@ from ..kernels.mx_grouped_matmul import (
     grouped_matmul_reference,
     mx_grouped_matmul,
 )
-from ..kernels.mx_matmul import Epilogue, apply_activation, mx_matmul_fused
+from ..kernels.mx_matmul import Epilogue, apply_epilogue, mx_matmul_fused
 from .tiling import DEFAULT_VMEM_BUDGET, TilePlan, plan_matmul_tiles
 from .transfer_model import GemmProblem
 
 BACKENDS = ("xla", "pallas_mx", "pallas_baseline")
+TP_MODES = ("allgather", "reduce_scatter")
 
 
 @functools.lru_cache(maxsize=1024)
@@ -157,6 +158,118 @@ def matmul(
     return out
 
 
+def _collective_linear(
+    x, w, b, *, activation, w_gate, residual, out_scale, policy, out_dtype,
+    tp_mode, coll,
+):
+    """Route one linear through the overlapped ring collective matmul.
+
+    Returns None when the problem is not eligible (ring size 1, shapes not
+    divisible, gated reduce-scatter) — the caller then falls back to the
+    serialized path.  Per-shard tile plans come from the same LRU cache as
+    the single-device dispatch (keyed on the *chunk* problem)."""
+    from ..kernels.mx_collective_matmul import ChunkCompute
+    from jax.sharding import PartitionSpec as P
+
+    P_ = coll.axis_size
+    if P_ <= 1:
+        return None
+    ax = coll.axis
+    x2, lead = _flatten_leading(x)
+    M, K = x2.shape
+    N = w.shape[-1]
+    ep = Epilogue(
+        activation=activation, bias=b is not None,
+        residual=residual is not None, out_scale=out_scale,
+    )
+    if tp_mode == "allgather":
+        # x M-sharded, w/bias N-sharded; output full-M, N-sharded.
+        if M % P_ or N % P_:
+            return None
+        m_loc, n_loc, k_loc = M // P_, N // P_, K
+        x_spec, w_spec = P(ax, None), P(None, ax)
+        b_spec, r_spec = P(ax), P(None, ax)
+    else:
+        # x K-sharded, w K-sharded; output M-sharded (reduce-scattered).
+        if ep.has_gate or M % P_ or K % P_:
+            return None
+        m_loc, n_loc, k_loc = M // P_, N, K // P_
+        x_spec, w_spec = P(None, ax), P(ax, None)
+        b_spec, r_spec = P(None), P(ax, None)
+    direction = coll.direction
+    if direction == "bidir" and m_loc % 2:
+        direction = "fwd"  # odd chunk rows cannot split into two half-rings
+
+    # the per-*chunk* GEMM plan, LRU-cached like every other dispatch
+    plan = policy.plan(m_loc, n_loc, k_loc, x.dtype.itemsize,
+                       fused_epilogue_ops=ep.n_fused_ops)
+    cc = ChunkCompute(
+        backend="pallas_mx" if policy.backend == "pallas_mx" else "xla",
+        bm=plan.bm, bn=plan.bn, bk=plan.bk, interpret=policy.interpret,
+    )
+    res2 = None
+    if residual is not None:
+        res2 = jnp.broadcast_to(
+            residual, (*lead, x.shape[-2], N) if lead else (M, N)
+        ).reshape(M, N)
+
+    in_specs, operands = [x_spec, w_spec], [x2, w]
+    if b is not None:
+        in_specs.append(b_spec)
+        operands.append(b)
+    if w_gate is not None:
+        in_specs.append(w_spec)  # gate weight shards exactly like w
+        operands.append(w_gate)
+    if res2 is not None:
+        in_specs.append(r_spec)
+        operands.append(res2)
+    has_bias, has_gate, has_res = (
+        b is not None, w_gate is not None, res2 is not None)
+    out_spec = P(None, ax) if tp_mode == "allgather" else P(ax, None)
+    caller = _ring_caller(
+        coll.mesh, ax, P_, direction, cc, ep, tp_mode,
+        has_bias, has_gate, has_res, jnp.dtype(out_dtype).name,
+        tuple(in_specs), out_spec,
+    )
+    out = caller(*operands)
+    if x.ndim > 2:
+        out = out.reshape(*lead, x.shape[-2], N)
+    return out
+
+
+@functools.lru_cache(maxsize=256)
+def _ring_caller(mesh, ax, P_, direction, cc, ep, tp_mode,
+                 has_bias, has_gate, has_res, out_dtype_name,
+                 in_specs, out_spec):
+    """Jitted shard_map wrapper for one ring configuration, cached so that
+    repeated layers (and eager test calls) reuse one compiled executable
+    instead of re-tracing an eager 8-device ring per call."""
+    from ..kernels.mx_collective_matmul import (
+        ring_allgather_matmul,
+        ring_matmul_reduce_scatter,
+    )
+    from ..parallel.sharding import shard_map as _shard_map
+
+    out_dtype = jnp.dtype(out_dtype_name)
+
+    def shard_fn(x_s, w_s, *rest):
+        it = iter(rest)
+        b_s = next(it) if has_bias else None
+        g_s = next(it) if has_gate else None
+        r_s = next(it) if has_res else None
+        kw = dict(axis_name=ax, axis_size=P_, compute=cc, epilogue=ep,
+                  bias=b_s, residual=r_s, out_dtype=out_dtype,
+                  direction=direction)
+        if tp_mode == "allgather":
+            return ring_allgather_matmul(x_s, w_s, b_gate=g_s, **kw)
+        return ring_matmul_reduce_scatter(x_s, w_s, **kw)
+
+    return jax.jit(_shard_map(
+        shard_fn, mesh=mesh, in_specs=in_specs,
+        out_specs=out_spec, check_vma=False,
+    ))
+
+
 def linear(
     x: jax.Array,
     w: jax.Array,
@@ -168,6 +281,7 @@ def linear(
     out_scale: Optional[float] = None,
     policy: Optional[MXPolicy] = None,
     out_dtype=None,
+    tp_mode: Optional[str] = None,
 ) -> jax.Array:
     """y = act(x @ w + b) [+ residual] [* out_scale] — the fused-epilogue
     entry point.  x: (..., M, K), w: (K, N), b: (N,), residual broadcastable
@@ -177,6 +291,15 @@ def linear(
     On the pallas_mx backend the whole epilogue happens inside the kernel's
     final-k write-back (one M*N store, zero intermediate round-trips); the
     other backends compute the same math unfused (the A/B reference).
+
+    ``tp_mode`` declares how this projection shards under tensor
+    parallelism: "allgather" (x sharded on rows, w on columns — qkv/up) or
+    "reduce_scatter" (x and w sharded on the contraction — out/down).  When
+    a `parallel.sharding.collective_policy` context is active and the
+    shapes divide over the ring, the GEMM runs as a communication-
+    overlapped ring collective matmul (kernels/mx_collective_matmul)
+    instead of a serialized collective around a local GEMM; otherwise the
+    flag is inert.
     """
     policy = policy or current_policy()
     out_dtype = out_dtype or x.dtype
@@ -185,6 +308,20 @@ def linear(
             "w_gate must be given iff activation='swiglu' "
             f"(got activation={activation!r}, w_gate={'set' if w_gate is not None else None})"
         )
+    if tp_mode is not None:
+        if tp_mode not in TP_MODES:
+            raise ValueError(f"unknown tp_mode {tp_mode!r}; one of {TP_MODES}")
+        from ..parallel.sharding import current_collectives
+
+        coll = current_collectives()
+        if coll is not None:
+            out = _collective_linear(
+                x, w, b, activation=activation, w_gate=w_gate,
+                residual=residual, out_scale=out_scale, policy=policy,
+                out_dtype=out_dtype, tp_mode=tp_mode, coll=coll,
+            )
+            if out is not None:
+                return out
 
     if policy.backend == "pallas_mx":
         x2, lead = _flatten_leading(x)
@@ -215,18 +352,12 @@ def linear(
     # Unfused reference composition (xla / pallas_baseline): each epilogue
     # step is its own op — the M*N round-trips the fused path eliminates.
     y = matmul(x, w, policy=policy, out_dtype=jnp.float32)
-    if b is not None:
-        y = y + b.astype(jnp.float32)
-    if activation == "swiglu":
-        g = matmul(x, w_gate, policy=policy, out_dtype=jnp.float32)
-        y = jax.nn.silu(g) * y
-    else:
-        y = apply_activation(y, activation)
-    if residual is not None:
-        y = y + residual.astype(jnp.float32)
-    if out_scale is not None:
-        y = y * jnp.float32(out_scale)
-    return y.astype(out_dtype)
+    gate = (matmul(x, w_gate, policy=policy, out_dtype=jnp.float32)
+            if activation == "swiglu" else None)
+    ep = Epilogue(activation=activation, bias=b is not None,
+                  residual=residual is not None, out_scale=out_scale)
+    return apply_epilogue(y, ep, bias=b, gate=gate, residual=residual,
+                          out_dtype=out_dtype)
 
 
 def grouped_matmul(

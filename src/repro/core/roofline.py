@@ -157,6 +157,32 @@ class RooflineReport:
         return self.collective_bytes / (self.chips * self.ici_bw)
 
     @property
+    def exposed_collective_s(self) -> float:
+        """Comm time left exposed IF every collective overlapped compute
+        (the ring collective-matmul schedule): max(0, comm - compute).
+
+        This graph-level aggregate is an OPTIMISTIC bound: it assumes all
+        collective bytes can hide behind all compute, which holds for the
+        TP ring GEMMs but not e.g. a DP gradient all-reduce serialized
+        after backward.  The honest per-layer numbers come from
+        `transfer_model.RingCollectiveGemm.exposed_comm_s` (surfaced as
+        dryrun's `collective_gemms` records); the true step bound lies
+        between `overlapped_step_lb_s` and `step_time_lower_bound_s`."""
+        return max(0.0, self.collective_s - self.compute_s)
+
+    @property
+    def overlapped_step_lb_s(self) -> float:
+        """Step-time lower bound with full comm/compute overlap credited
+        (see `exposed_collective_s` for why this is the optimistic end)."""
+        return max(self.compute_s, self.memory_s, self.exposed_collective_s)
+
+    @property
+    def overlap_credit_s(self) -> float:
+        """Maximum step time the overlapped schedule can save vs the
+        serialized three-term bound (upper bound on the hiding)."""
+        return self.step_time_lower_bound_s - self.overlapped_step_lb_s
+
+    @property
     def bound(self) -> str:
         terms = {
             "compute": self.compute_s,
@@ -197,8 +223,11 @@ class RooflineReport:
             "compute_s": self.compute_s,
             "memory_s": self.memory_s,
             "collective_s": self.collective_s,
+            "exposed_collective_s": self.exposed_collective_s,
             "bound": self.bound,
             "step_lb_s": self.step_time_lower_bound_s,
+            "overlapped_step_lb_s": self.overlapped_step_lb_s,
+            "overlap_credit_s": self.overlap_credit_s,
             "model_flops": self.model_flops,
             "useful_flops_ratio": self.useful_flops_ratio,
             "roofline_fraction": self.roofline_fraction,

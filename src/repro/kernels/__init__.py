@@ -1,6 +1,13 @@
 """Pallas TPU kernels (validated on CPU via interpret=True) + jnp oracles."""
 from . import ref
 from .baseline_matmul import baseline_matmul
+from .mx_collective_matmul import (
+    ChunkCompute,
+    ring_allgather_matmul,
+    ring_matmul_reduce_scatter,
+    serialized_allgather_matmul,
+    serialized_matmul_psum,
+)
 from .mx_flash_attention import mx_flash_attention
 from .mx_grouped_matmul import grouped_matmul_reference, mx_grouped_matmul
 from .mx_matmul import Epilogue, mx_matmul, mx_matmul_fused
@@ -16,4 +23,9 @@ __all__ = [
     "mx_grouped_matmul",
     "grouped_matmul_reference",
     "ssd_scan",
+    "ChunkCompute",
+    "ring_allgather_matmul",
+    "ring_matmul_reduce_scatter",
+    "serialized_allgather_matmul",
+    "serialized_matmul_psum",
 ]

@@ -1,0 +1,356 @@
+"""Communication-overlapped sharded MX GEMM: ring collective matmuls.
+
+The paper's headline multi-core result (56% gain on the 64-core cluster,
+§IV) comes from keeping every FPU busy while operands move.  On the jax
+device mesh the analogue of the cluster interconnect is the ICI ring, and
+the analogue of the paper's double-buffered operand streaming is a
+*collective matmul*: decompose the sharded GEMM into one chunk per ring
+step, run the resident chunk through the fused-epilogue MX kernel while
+`ppermute` moves the next chunk to the neighbor.  The serialized pattern
+(all-gather, THEN matmul; or matmul, THEN psum) leaves the GEMM engine
+idle for the whole collective; the ring leaves exposed only
+``max(0, comm_step - compute_step)`` per step (see
+``core.transfer_model.RingCollectiveGemm``).
+
+Two decompositions, matching the two tensor-parallel projection kinds:
+
+  ``ring_allgather_matmul``  — all-gather ⊗ matmul.  x is sharded on M
+      (rows / sequence), w on N (qkv / up projections).  Each step
+      matmuls the currently-resident M-chunk of x against the local w
+      shard and writes that chunk's output rows; the chunk then moves on
+      around the ring.  Every output row-block is written exactly once,
+      so the epilogue (bias / activation / residual / scale) fuses into
+      each chunk's final-k write-back exactly as in the single-device
+      kernel.
+
+  ``ring_matmul_reduce_scatter`` — matmul ⊗ reduce-scatter.  x is
+      sharded on K (features), w on K (out / down projections); partial
+      products must be summed over the ring axis.  The partial
+      accumulator for chunk j travels the ring, gaining each device's
+      contribution, and arrives fully-summed at its owner on the last
+      step — the ring step IS the paper's inter-k accumulation lifted to
+      the cluster level.  The epilogue is applied exactly once, on the
+      final (fully-summed) step; when the epilogue has no activation the
+      incoming partial rides the MX kernel's fused residual slot, so
+      even the cross-device accumulation happens at the write-back.
+
+Both support bidirectional rings: the local shard splits in half and the
+halves circulate in opposite directions, using both directions of the
+ICI ring each step (per-link bytes halved — the paper's dual-channel
+TCDM argument).  All functions here are *per-shard* bodies meant to run
+inside ``shard_map``; `core.ops._collective_linear` does the wrapping.
+
+Serialized references (``serialized_allgather_matmul``,
+``serialized_matmul_psum``) implement the unoverlapped pattern for A/B
+numerics and latency comparisons (tests, benchmarks/collective_bench).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .mx_matmul import Epilogue, apply_epilogue, mx_matmul_fused
+
+DIRECTIONS = ("fwd", "bwd", "bidir")
+
+
+def ring_perm(axis_size: int, *, reverse: bool = False) -> List[Tuple[int, int]]:
+    """ppermute pairs for a unidirectional ring over `axis_size` devices."""
+    if reverse:
+        return [(i, (i - 1) % axis_size) for i in range(axis_size)]
+    return [(i, (i + 1) % axis_size) for i in range(axis_size)]
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkCompute:
+    """How each ring step's chunk GEMM runs: the same dispatch choice as
+    `core.ops` (pallas_mx = fused-epilogue MX kernel; anything else = the
+    unfused XLA reference), with the per-shard tile plan baked in."""
+
+    backend: str = "xla"
+    bm: int = 128
+    bn: int = 128
+    bk: int = 128
+    interpret: bool = True
+
+    def raw(self, a: jax.Array, b: jax.Array) -> jax.Array:
+        """Plain chunk GEMM, f32 accumulator, no epilogue (partial sums)."""
+        if self.backend == "pallas_mx":
+            return mx_matmul_fused(
+                a, b, bm=self.bm, bn=self.bn, bk=self.bk,
+                out_dtype=jnp.float32, interpret=self.interpret,
+            )
+        return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+    def fused(
+        self,
+        a: jax.Array,
+        b: jax.Array,
+        *,
+        epilogue: Epilogue,
+        bias: Optional[jax.Array] = None,
+        residual: Optional[jax.Array] = None,
+        b_gate: Optional[jax.Array] = None,
+        out_dtype=None,
+    ) -> jax.Array:
+        """Chunk GEMM with the epilogue applied in the final-k write-back
+        (pallas_mx) or as the equivalent unfused op chain (reference)."""
+        out_dtype = out_dtype or a.dtype
+        if self.backend == "pallas_mx":
+            return mx_matmul_fused(
+                a, b, epilogue=epilogue, b_gate=b_gate, bias=bias,
+                residual=residual, bm=self.bm, bn=self.bn, bk=self.bk,
+                out_dtype=out_dtype, interpret=self.interpret,
+            )
+        y = jnp.dot(a, b, preferred_element_type=jnp.float32)
+        gate = (jnp.dot(a, b_gate, preferred_element_type=jnp.float32)
+                if epilogue.has_gate else None)
+        return apply_epilogue(y, epilogue, bias=bias, gate=gate,
+                              residual=residual, out_dtype=out_dtype)
+
+
+def _check_direction(direction: str) -> None:
+    if direction not in DIRECTIONS:
+        raise ValueError(f"unknown ring direction {direction!r}; one of {DIRECTIONS}")
+
+
+# ---------------------------------------------------------------------------
+# all-gather ⊗ matmul
+# ---------------------------------------------------------------------------
+
+
+def ring_allgather_matmul(
+    x_shard: jax.Array,
+    w_shard: jax.Array,
+    *,
+    axis_name: str,
+    axis_size: int,
+    compute: ChunkCompute = ChunkCompute(),
+    epilogue: Epilogue = Epilogue(),
+    bias: Optional[jax.Array] = None,
+    residual: Optional[jax.Array] = None,
+    b_gate: Optional[jax.Array] = None,
+    out_dtype=None,
+    direction: str = "bidir",
+) -> jax.Array:
+    """Per-shard body: out = epilogue(all_gather_M(x) @ w_shard).
+
+    x_shard: (m_loc, K) — this device's M-rows.  w_shard: (K, n_loc).
+    residual: (P*m_loc, n_loc) — full-M rows of this device's N-shard.
+    Returns (P*m_loc, n_loc).  Each ring step computes the resident
+    chunk's output rows while ppermute streams the next chunk in; the
+    epilogue is fused into each chunk's write-back (each output element
+    is produced exactly once).
+    """
+    _check_direction(direction)
+    P = axis_size
+    m_loc, _ = x_shard.shape
+    n_loc = w_shard.shape[1]
+    out_dtype = out_dtype or x_shard.dtype
+    idx = lax.axis_index(axis_name)
+    out = jnp.zeros((P * m_loc, n_loc), out_dtype)
+
+    def res_rows(start, rows):
+        if residual is None:
+            return None
+        return lax.dynamic_slice(residual, (start, 0), (rows, n_loc))
+
+    if direction == "bidir" and P > 1 and m_loc % 2 == 0:
+        half = m_loc // 2
+        fwd, bwd = x_shard[:half], x_shard[half:]
+        perm_f = ring_perm(P)
+        perm_b = ring_perm(P, reverse=True)
+        for step in range(P):
+            src_f = (idx - step) % P  # owner of the forward-moving half
+            src_b = (idx + step) % P  # owner of the backward-moving half
+            if step < P - 1:  # issue sends first: overlap with this chunk's GEMM
+                nxt_f = lax.ppermute(fwd, axis_name, perm_f)
+                nxt_b = lax.ppermute(bwd, axis_name, perm_b)
+            rf = src_f * m_loc
+            rb = src_b * m_loc + half
+            res = None
+            if residual is not None:
+                res = jnp.concatenate([res_rows(rf, half), res_rows(rb, half)])
+            y = compute.fused(
+                jnp.concatenate([fwd, bwd]), w_shard, epilogue=epilogue,
+                bias=bias, residual=res, b_gate=b_gate, out_dtype=out_dtype,
+            )
+            out = lax.dynamic_update_slice(out, y[:half], (rf, 0))
+            out = lax.dynamic_update_slice(out, y[half:], (rb, 0))
+            if step < P - 1:
+                fwd, bwd = nxt_f, nxt_b
+        return out
+
+    perm = ring_perm(P, reverse=(direction == "bwd"))
+    chunk = x_shard
+    for step in range(P):
+        # with fwd sends (i -> i+1), after `step` hops we hold (idx - step)'s rows
+        src = ((idx - step) if direction != "bwd" else (idx + step)) % P
+        if step < P - 1:
+            nxt = lax.ppermute(chunk, axis_name, perm)
+        y = compute.fused(
+            chunk, w_shard, epilogue=epilogue, bias=bias,
+            residual=res_rows(src * m_loc, m_loc), b_gate=b_gate,
+            out_dtype=out_dtype,
+        )
+        out = lax.dynamic_update_slice(out, y, (src * m_loc, 0))
+        if step < P - 1:
+            chunk = nxt
+    return out
+
+
+def serialized_allgather_matmul(
+    x_shard: jax.Array,
+    w_shard: jax.Array,
+    *,
+    axis_name: str,
+    compute: ChunkCompute = ChunkCompute(),
+    epilogue: Epilogue = Epilogue(),
+    bias: Optional[jax.Array] = None,
+    residual: Optional[jax.Array] = None,
+    b_gate: Optional[jax.Array] = None,
+    out_dtype=None,
+) -> jax.Array:
+    """The unoverlapped reference: all-gather x over M, then one GEMM."""
+    x_full = lax.all_gather(x_shard, axis_name, axis=0, tiled=True)
+    return compute.fused(
+        x_full, w_shard, epilogue=epilogue, bias=bias, residual=residual,
+        b_gate=b_gate, out_dtype=out_dtype or x_shard.dtype,
+    )
+
+
+# ---------------------------------------------------------------------------
+# matmul ⊗ reduce-scatter
+# ---------------------------------------------------------------------------
+
+
+def ring_matmul_reduce_scatter(
+    x_shard: jax.Array,
+    w_shard: jax.Array,
+    *,
+    axis_name: str,
+    axis_size: int,
+    compute: ChunkCompute = ChunkCompute(),
+    epilogue: Epilogue = Epilogue(),
+    bias: Optional[jax.Array] = None,
+    residual: Optional[jax.Array] = None,
+    out_dtype=None,
+    direction: str = "bidir",
+) -> jax.Array:
+    """Per-shard body: out = epilogue(psum(x_shard @ w_shard))[own M-chunk].
+
+    x_shard: (M, k_loc) — full M rows, this device's K-columns.
+    w_shard: (k_loc, N).  residual: (M/P, N) — this device's output rows.
+    Returns (M/P, N): the fully-summed chunk this device owns.
+
+    The partial accumulator for chunk j starts at device (j+1) mod P and
+    travels the ring for P-1 hops, gaining each device's x@w contribution,
+    arriving fully-summed at device j on the final step — where the
+    epilogue is applied exactly once.  Gated epilogues (swiglu) need the
+    gate GEMM's full sum too and are not supported on this path.
+    """
+    _check_direction(direction)
+    if epilogue.has_gate:
+        raise ValueError("swiglu epilogue is not supported on the "
+                         "reduce-scatter path (gate needs the full sum)")
+    P = axis_size
+    M, k_loc = x_shard.shape
+    N = w_shard.shape[1]
+    if M % P:
+        raise ValueError(f"M={M} must divide over the ring size {P}")
+    m_loc = M // P
+    out_dtype = out_dtype or x_shard.dtype
+    idx = lax.axis_index(axis_name)
+
+    def finish(acc_f32, res):
+        """Epilogue on the fully-summed chunk — applied exactly once."""
+        return apply_epilogue(acc_f32, epilogue, bias=bias, residual=res,
+                              out_dtype=out_dtype)
+
+    def fused_final(x_rows, acc_in, res):
+        """Final step: my contribution + incoming partial + epilogue in ONE
+        chunk-GEMM write-back.  Valid when there is no activation: the MX
+        kernel's residual slot takes (acc_in [+ residual]), added in f32 at
+        the final-k store.  With an activation, act(full_sum) needs the sum
+        first, so the epilogue runs unfused after the raw GEMM."""
+        if epilogue.activation == "none":
+            extra = acc_in if res is None else acc_in + res.astype(jnp.float32)
+            ep = Epilogue(bias=bias is not None, residual=True,
+                          out_scale=epilogue.out_scale)
+            return compute.fused(x_rows, w_shard, epilogue=ep, bias=bias,
+                                 residual=extra, out_dtype=out_dtype)
+        return finish(compute.raw(x_rows, w_shard) + acc_in, res)
+
+    def x_rows(start, rows):
+        return lax.dynamic_slice(x_shard, (start, 0), (rows, k_loc))
+
+    if direction == "bidir" and P > 1 and m_loc % 2 == 0:
+        half = m_loc // 2
+        perm_f = ring_perm(P)
+        perm_b = ring_perm(P, reverse=True)
+        acc_f = acc_b = None
+        for step in range(P):
+            jf = (idx - step - 1) % P  # fwd ring: chunk jf's top half
+            jb = (idx + step + 1) % P  # bwd ring: chunk jb's bottom half
+            xa = x_rows(jf * m_loc, half)
+            xb = x_rows(jb * m_loc + half, half)
+            if step == P - 1:  # jf == jb == idx: fully summed, fuse epilogue
+                acc_in = jnp.concatenate([
+                    lax.ppermute(acc_f, axis_name, perm_f),
+                    lax.ppermute(acc_b, axis_name, perm_b),
+                ])
+                return fused_final(jnp.concatenate([xa, xb]), acc_in, residual)
+            y = compute.raw(jnp.concatenate([xa, xb]), w_shard)
+            if step == 0:
+                acc_f, acc_b = y[:half], y[half:]
+            else:
+                acc_f = y[:half] + lax.ppermute(acc_f, axis_name, perm_f)
+                acc_b = y[half:] + lax.ppermute(acc_b, axis_name, perm_b)
+
+    perm = ring_perm(P, reverse=(direction == "bwd"))
+    sgn = -1 if direction != "bwd" else 1
+    acc = None
+    for step in range(P):
+        j = (idx + sgn * (step + 1)) % P  # chunk handled this step
+        xr = x_rows(j * m_loc, m_loc)
+        if step == P - 1:  # j == idx
+            acc_in = (lax.ppermute(acc, axis_name, perm) if P > 1
+                      else jnp.zeros((m_loc, N), jnp.float32))
+            return fused_final(xr, acc_in, residual)
+        y = compute.raw(xr, w_shard)
+        acc = y if step == 0 else y + lax.ppermute(acc, axis_name, perm)
+    raise AssertionError("unreachable: the P-step loop returns at step P-1")
+
+
+def serialized_matmul_psum(
+    x_shard: jax.Array,
+    w_shard: jax.Array,
+    *,
+    axis_name: str,
+    axis_size: int,
+    compute: ChunkCompute = ChunkCompute(),
+    epilogue: Epilogue = Epilogue(),
+    bias: Optional[jax.Array] = None,
+    residual: Optional[jax.Array] = None,
+    out_dtype=None,
+) -> jax.Array:
+    """The unoverlapped reference: full partial GEMM, then psum, then
+    epilogue, then slice the own M-chunk (psum + slice == reduce-scatter)."""
+    if epilogue.has_gate:
+        raise ValueError("swiglu epilogue is not supported on the "
+                         "reduce-scatter path (gate needs the full sum)")
+    P = axis_size
+    M = x_shard.shape[0]
+    if M % P:
+        raise ValueError(f"M={M} must divide over the ring size {P}")
+    m_loc = M // P
+    idx = lax.axis_index(axis_name)
+    y = lax.psum(compute.raw(x_shard, w_shard), axis_name)
+    own = lax.dynamic_slice(y, (idx * m_loc, 0), (m_loc, y.shape[1]))
+    return apply_epilogue(own, epilogue, bias=bias, residual=residual,
+                          out_dtype=out_dtype or x_shard.dtype)

@@ -109,6 +109,37 @@ class Epilogue:
         return n
 
 
+def apply_epilogue(
+    y: jax.Array,
+    epilogue: Epilogue,
+    *,
+    bias: Optional[jax.Array] = None,
+    gate: Optional[jax.Array] = None,
+    residual: Optional[jax.Array] = None,
+    out_dtype=None,
+) -> jax.Array:
+    """Unfused reference application of an Epilogue to a f32 GEMM result,
+    in EXACTLY the order the fused kernel's final-k write-back uses:
+    bias -> activation/gating -> residual -> out_scale.  Every unfused
+    path (xla dispatch, ring collective final steps, serialized
+    references) must go through this one helper so epilogue semantics
+    cannot silently diverge from the kernel.  ``gate`` is the gate GEMM's
+    f32 result when ``epilogue.has_gate``."""
+    if epilogue.has_gate != (gate is not None):
+        raise ValueError("gate must be given iff epilogue.activation=='swiglu'")
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    if epilogue.has_gate:
+        y = jax.nn.silu(gate) * y
+    else:
+        y = apply_activation(y, epilogue.activation)
+    if residual is not None:
+        y = y + residual.astype(jnp.float32)
+    if epilogue.out_scale is not None:
+        y = y * jnp.float32(epilogue.out_scale)
+    return y if out_dtype is None else y.astype(out_dtype)
+
+
 def _fused_kernel(*refs, nk: int, out_dtype, epilogue: Epilogue):
     """Kernel body.  refs layout (inputs, outputs, scratch):
     a, b, [b_gate], [bias], [residual], o, acc, [acc_gate]."""

@@ -1,11 +1,15 @@
 import os
 
-os.environ["XLA_FLAGS"] = (
-    "--xla_force_host_platform_device_count=512 "
-    + os.environ.get("XLA_FLAGS", "")
+# MUST precede any jax import (jax locks the device count at first init).
+# The 512 placeholder host devices exist ONLY for this dry-run process.
+# Any inherited device-count flag (e.g. the CI 8-device matrix leg) is
+# stripped first: XLA resolves duplicate flags last-wins, so a leftover
+# "=8" after our 512 would silently shrink the production mesh.
+_inherited = [f for f in os.environ.get("XLA_FLAGS", "").split()
+              if not f.startswith("--xla_force_host_platform_device_count")]
+os.environ["XLA_FLAGS"] = " ".join(
+    ["--xla_force_host_platform_device_count=512"] + _inherited
 )
-# ^ MUST precede any jax import (jax locks the device count at first init).
-#   The 512 placeholder host devices exist ONLY for this dry-run process.
 
 """Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
 
@@ -36,6 +40,7 @@ from ..core.hlo_census import census
 from ..core.roofline import (
     HBM_BW, ICI_BW, PEAK_FLOPS_BF16, RooflineReport, parse_collective_bytes,
 )
+from ..core.transfer_model import GemmProblem, RingCollectiveGemm
 from ..launch.mesh import make_production_mesh
 from ..launch.specs import cell_specs
 from ..launch.steps import make_prefill_step, make_serve_step, make_train_step
@@ -43,6 +48,37 @@ from ..models import build_model
 from ..optim.adamw import AdamW
 from ..optim.schedules import warmup_cosine
 from ..parallel.sharding import make_rules, use_rules
+
+
+def collective_gemm_reports(cfg, mesh, tokens_per_step: int) -> dict:
+    """Per-layer overlap model for the TP ring collective GEMMs: one record
+    per projection kind (qkv / attn-out / mlp-up / mlp-down / lm_head) with
+    exposed-comm bytes/time from `transfer_model.RingCollectiveGemm`.
+
+    Activations are modeled in bf16 (elem_bytes=2), matching the roofline's
+    PEAK_FLOPS_BF16 operating point.  A gated (SwiGLU) up projection runs
+    TWO chunk GEMMs per ring hop (up + gate) against the same streamed x
+    chunk — modeled as a doubled-N problem: compute doubles, comm doesn't."""
+    P = int(mesh.shape.get("model", 1))
+    if P <= 1:
+        return {}
+    dp = max(mesh.size // P, 1)
+    M = max(tokens_per_step // dp, 1)  # rows entering each TP ring
+    d, hd = cfg.d_model, cfg.hd
+    ff = cfg.d_ff or 4 * d
+    up_n = 2 * ff if cfg.activation == "silu" else ff  # gate rides the ring
+    gemms = {
+        "qkv": ("allgather", GemmProblem(M, (cfg.n_heads + 2 * cfg.n_kv_heads) * hd, d, 2)),
+        "attn_out": ("reduce_scatter", GemmProblem(M, d, cfg.n_heads * hd, 2)),
+        "mlp_up": ("allgather", GemmProblem(M, up_n, d, 2)),
+        "mlp_down": ("reduce_scatter", GemmProblem(M, d, ff, 2)),
+        "lm_head": ("allgather", GemmProblem(M, cfg.vocab, d, 2)),
+    }
+    out = {}
+    for name, (mode, prob) in gemms.items():
+        ring = RingCollectiveGemm(mode=mode, axis_size=P)
+        out[name] = ring.report(prob, ici_bw=ICI_BW, peak_flops=PEAK_FLOPS_BF16)
+    return out
 
 
 def lower_cell(arch: str, shape: str, mesh_kind: str, *, extra: dict | None = None):
@@ -165,6 +201,8 @@ def lower_cell(arch: str, shape: str, mesh_kind: str, *, extra: dict | None = No
             "xla_cost_analysis_bytes": float(cost.get("bytes accessed", 0.0)),
         },
         "roofline": report.as_dict(),
+        "collective_gemms": collective_gemm_reports(
+            cfg, mesh, specs.tokens_per_step),
         "n_params": cfg.n_params(),
         "n_active_params": n_active,
         "tokens_per_step": specs.tokens_per_step,
@@ -243,6 +281,8 @@ def main():
             r = rec["roofline"]
             print(f"  bound={r['bound']} compute={r['compute_s']:.4f}s "
                   f"mem={r['memory_s']:.4f}s coll={r['collective_s']:.4f}s "
+                  f"exposed_coll={r['exposed_collective_s']:.4f}s "
+                  f"overlapped_lb={r['overlapped_step_lb_s']:.4f}s "
                   f"fits={rec['memory']['fits_v5e_16gb']} "
                   f"(lower {rec['lower_s']}s compile {rec['compile_s']}s)",
                   flush=True)

@@ -55,6 +55,10 @@ class Linear(Module):
     d_out: int
     axes: Tuple[Optional[str], Optional[str]] = ("embed", "mlp")
     bias: bool = False
+    # TP sharding declaration: "allgather" (w column-sharded) or
+    # "reduce_scatter" (w row-sharded) — routes through the overlapped ring
+    # collective matmul when a collective_policy context is active.
+    tp_mode: Optional[str] = None
 
     def build(self, mk: Builder):
         p = {"w": mk.param("w", (self.d_in, self.d_out), self.axes)}
@@ -65,7 +69,7 @@ class Linear(Module):
     def __call__(self, p, x):
         # bias rides the kernel's final-k write-back on the Pallas path
         return ops.linear(x, p["w"], p["b"] if self.bias else None,
-                          out_dtype=x.dtype)
+                          out_dtype=x.dtype, tp_mode=self.tp_mode)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -208,9 +212,12 @@ class Attention(Module):
         bq = p["bq"] if self.qkv_bias else None
         bk = p["bk"] if self.qkv_bias else None
         bv = p["bv"] if self.qkv_bias else None
-        q = ops.linear(x, p["wq"], bq, out_dtype=x.dtype)
-        k = ops.linear(x, p["wk"], bk, out_dtype=x.dtype)
-        v = ops.linear(x, p["wv"], bv, out_dtype=x.dtype)
+        # qkv are column-sharded (heads on "model"): under a collective
+        # policy they run as ring all-gather ⊗ matmul (sequence chunks
+        # stream around the ring while the resident chunk multiplies).
+        q = ops.linear(x, p["wq"], bq, out_dtype=x.dtype, tp_mode="allgather")
+        k = ops.linear(x, p["wk"], bk, out_dtype=x.dtype, tp_mode="allgather")
+        v = ops.linear(x, p["wv"], bv, out_dtype=x.dtype, tp_mode="allgather")
         q = q.reshape(b, s, self.n_heads, hd)
         k = k.reshape(b, s, self.n_kv_heads, hd)
         v = v.reshape(b, s, self.n_kv_heads, hd)
@@ -241,7 +248,11 @@ class Attention(Module):
         else:
             o = full_attention(q, k, v, causal=causal)
         o = o.reshape(b, s, self.n_heads * self.hd)
-        return ops.linear(o, p["wo"], residual=residual, out_dtype=x.dtype)
+        # wo is row-sharded (heads on the contraction): ring matmul ⊗
+        # reduce-scatter — partial sums travel the ring, the residual add
+        # fuses into the final ring step's write-back.
+        return ops.linear(o, p["wo"], residual=residual, out_dtype=x.dtype,
+                          tp_mode="reduce_scatter")
 
     # ---------------- KV-cache decode path ----------------
 
@@ -301,7 +312,8 @@ class Attention(Module):
         pr = jax.nn.softmax(s, axis=-1).astype(q.dtype)
         o = jnp.einsum("bhqk,bkhd->bqhd", pr, v)
         o = o.reshape(b, 1, self.n_heads * d)
-        out = ops.linear(o, p["wo"], residual=residual, out_dtype=x.dtype)
+        out = ops.linear(o, p["wo"], residual=residual, out_dtype=x.dtype,
+                         tp_mode="reduce_scatter")
         return out, {"k": k_cache, "v": v_cache}
 
 
@@ -329,10 +341,15 @@ class MLP(Module):
         gating at the write-back); the down-projection fuses the residual
         add.  Intermediates never round-trip HBM between matmul and
         consumer."""
+        # up/gate are column-sharded -> ring all-gather ⊗ matmul; the down
+        # projection is row-sharded -> ring matmul ⊗ reduce-scatter (see
+        # kernels/mx_collective_matmul; inert without a collective_policy).
         if self.gated:
             h = ops.linear(x, p["wi"], w_gate=p["wg"], activation="swiglu",
-                           out_dtype=x.dtype)
+                           out_dtype=x.dtype, tp_mode="allgather")
         else:
             act = self.activation if self.activation in ("gelu", "relu") else "relu"
-            h = ops.linear(x, p["wi"], activation=act, out_dtype=x.dtype)
-        return ops.linear(h, p["wo"], residual=residual, out_dtype=x.dtype)
+            h = ops.linear(x, p["wi"], activation=act, out_dtype=x.dtype,
+                           tp_mode="allgather")
+        return ops.linear(h, p["wo"], residual=residual, out_dtype=x.dtype,
+                          tp_mode="reduce_scatter")

@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core import ops
-from ..parallel.sharding import constrain
+from ..parallel.sharding import constrain, current_collectives
 from .modules import Builder, Module
 
 
@@ -69,7 +69,39 @@ class MoE(Module):
         einsum reference.
         """
         G, E, C, D = buf.shape
+        F = p["wi"].shape[-1]
         policy = ops.current_policy()
+        coll = current_collectives()
+        # An active collective policy takes precedence over the grouped
+        # single-launch path: overlapping the TP communication is an
+        # explicit opt-in, and the ring needs per-expert GEMMs.  Only
+        # engage when the chunk shapes divide over the ring — otherwise
+        # every expert would fall back to a serialized unfused linear,
+        # strictly worse than the batched paths below.
+        if (coll is not None and coll.axis_size > 1
+                and (G * C) % coll.axis_size == 0
+                and F % coll.axis_size == 0):
+            # Overlapped TP for the expert GEMMs: each expert's up/gate
+            # projection is a ring all-gather ⊗ matmul (d_ff sharded on the
+            # model axis), the down projection a ring matmul ⊗ reduce-
+            # scatter.
+            wi = p["wi"].astype(buf.dtype)
+            wo = p["wo"].astype(buf.dtype)
+            wg = p["wg"].astype(buf.dtype) if self.activation == "silu" else None
+            xe = buf.transpose(1, 0, 2, 3).reshape(E, G * C, D)
+            outs = []
+            for e in range(E):
+                if wg is not None:
+                    h = ops.linear(xe[e], wi[e], w_gate=wg[e],
+                                   activation="swiglu", policy=policy,
+                                   tp_mode="allgather")
+                else:
+                    h = ops.linear(xe[e], wi[e], activation="gelu",
+                                   policy=policy, tp_mode="allgather")
+                outs.append(ops.linear(h, wo[e], policy=policy,
+                                       tp_mode="reduce_scatter"))
+            y = jnp.stack(outs).reshape(E, G, C, D)
+            return y.transpose(1, 0, 2, 3)
         if policy.backend == "pallas_mx":
             sizes = jnp.full((E,), C, dtype=jnp.int32)
             wi = p["wi"].astype(buf.dtype)

@@ -292,7 +292,10 @@ class DecoderLM(Module):
         if cfg.tie_embeddings:
             logits = Embedding(cfg.vocab, cfg.d_model).attend(p["embed"], x)
         else:
-            logits = ops.matmul(x, p["lm_head"], out_dtype=jnp.float32)
+            # lm_head is vocab(column)-sharded: ring all-gather ⊗ matmul
+            # under a collective policy, plain MX dispatch otherwise.
+            logits = ops.linear(x, p["lm_head"], out_dtype=jnp.float32,
+                                tp_mode="allgather")
         return logits, aux
 
     # ---------------- decode ----------------
@@ -392,7 +395,8 @@ class DecoderLM(Module):
         if cfg.tie_embeddings:
             logits = Embedding(cfg.vocab, cfg.d_model).attend(p["embed"], x)
         else:
-            logits = ops.matmul(x, p["lm_head"], out_dtype=jnp.float32)
+            logits = ops.linear(x, p["lm_head"], out_dtype=jnp.float32,
+                                tp_mode="allgather")
         return logits, new_cache
 
 

@@ -19,6 +19,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import threading
+import warnings
 from typing import Any, Dict, Optional, Sequence, Tuple, Union
 
 import jax
@@ -45,6 +46,10 @@ class AxisRules:
     mesh: Mesh
     rules: Dict[str, AxisVal]
     dropped: list = dataclasses.field(default_factory=list)
+    # per-logical-axis drop counters: how many times each logical axis lost a
+    # mesh axis to a divisibility fallback (sharding-regression visibility)
+    drops_by_axis: Dict[str, int] = dataclasses.field(default_factory=dict)
+    _warned: set = dataclasses.field(default_factory=set, repr=False)
 
     def _axis_size(self, mesh_axes: AxisVal) -> int:
         if mesh_axes is None:
@@ -53,11 +58,25 @@ class AxisRules:
             mesh_axes = (mesh_axes,)
         return int(np.prod([self.mesh.shape[a] for a in mesh_axes]))
 
+    def _record_drop(self, shape, ax, mesh_axis, dim, product) -> None:
+        self.dropped.append((tuple(shape), ax, mesh_axis, dim))
+        self.drops_by_axis[ax] = self.drops_by_axis.get(ax, 0) + 1
+        key = (ax, mesh_axis, dim, product)
+        if key not in self._warned:  # one line per unique fallback, not per call
+            self._warned.add(key)
+            warnings.warn(
+                f"sharding: dim {dim} (logical axis {ax!r}) is not divisible by "
+                f"mesh-axis product {product} — dropping mesh axis {mesh_axis!r} "
+                f"(replicating)",
+                stacklevel=3,
+            )
+
     def spec(self, shape: Sequence[int], axes: Sequence[Optional[str]]) -> P:
         """PartitionSpec for `shape` annotated with logical `axes`.
 
         Drops (replicates) any dim whose size is not divisible by the mapped
-        mesh-axis product, and never uses a mesh axis twice in one spec."""
+        mesh-axis product, and never uses a mesh axis twice in one spec.
+        Every drop is warned once and counted in `drops_by_axis`."""
         used: set = set()
         out = []
         for dim, ax in zip(shape, axes):
@@ -69,7 +88,8 @@ class AxisRules:
             tpl = tuple(a for a in tpl if a not in used and a in self.mesh.shape)
             # progressive fallback: drop trailing axes until the product divides
             while tpl and dim % int(np.prod([self.mesh.shape[a] for a in tpl])) != 0:
-                self.dropped.append((tuple(shape), ax, tpl[-1], dim))
+                prod = int(np.prod([self.mesh.shape[a] for a in tpl]))
+                self._record_drop(shape, ax, tpl[-1], dim, prod)
                 tpl = tpl[:-1]
             if not tpl:
                 out.append(None)
@@ -152,6 +172,90 @@ def make_rules(mesh: Mesh, *, profile: str = "tp", fsdp: bool = False,
         "head_dim": None,
     }
     return AxisRules(mesh, rules)
+
+
+# ---------------------------------------------------------------------------
+# Communication-overlapped collectives: the model-axis ring
+# ---------------------------------------------------------------------------
+
+
+def ring_topology(mesh: Mesh, axis: str = "model") -> Dict[str, Any]:
+    """The bidirectional ring over one mesh axis: the jax analogue of the
+    paper's 64-core cluster interconnect.  Returns the ppermute pairs for
+    both directions (built by the same `ring_perm` the collective matmul
+    kernels use) plus the ring size, for callers that need the topology
+    explicitly (tests, benchmarks, debugging)."""
+    from ..kernels.mx_collective_matmul import ring_perm
+
+    if axis not in mesh.shape:
+        raise ValueError(f"mesh has no axis {axis!r}; axes: {tuple(mesh.shape)}")
+    P_ = int(mesh.shape[axis])
+    return {
+        "axis": axis,
+        "size": P_,
+        "fwd": ring_perm(P_),
+        "bwd": ring_perm(P_, reverse=True),
+    }
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectivePolicy:
+    """Deployment decision for communication-overlapped TP projections.
+
+    When active (see `collective_policy()`), `core.ops.linear(...,
+    tp_mode=...)` routes eligible projections through the ring
+    all-gather⊗matmul / matmul⊗reduce-scatter paths over `axis`, instead
+    of letting GSPMD insert serialized collectives around the GEMM."""
+
+    mesh: Mesh
+    axis: str = "model"
+    direction: str = "bidir"  # "fwd" | "bwd" | "bidir"
+    enabled: bool = True
+
+    def __post_init__(self):
+        if self.axis not in self.mesh.shape:
+            raise ValueError(
+                f"collective policy axis {self.axis!r} is not a mesh axis; "
+                f"mesh has {tuple(self.mesh.shape)}"
+            )
+        if self.direction not in ("fwd", "bwd", "bidir"):
+            raise ValueError(
+                f"unknown ring direction {self.direction!r}; "
+                "one of ('fwd', 'bwd', 'bidir')"
+            )
+
+    @property
+    def axis_size(self) -> int:
+        return int(self.mesh.shape[self.axis])
+
+    def topology(self) -> Dict[str, Any]:
+        return ring_topology(self.mesh, self.axis)
+
+
+def current_collectives() -> Optional[CollectivePolicy]:
+    pol = getattr(_state, "collectives", None)
+    return pol if (pol is not None and pol.enabled) else None
+
+
+@contextlib.contextmanager
+def collective_policy(mesh: Optional[Mesh] = None, *, axis: str = "model",
+                      direction: str = "bidir", enabled: bool = True,
+                      policy: Optional[CollectivePolicy] = None):
+    """Context under which eligible TP projections run as overlapped ring
+    collective matmuls.  Pass a mesh (plus axis/direction) or a prebuilt
+    CollectivePolicy; `enabled=False` (or exiting) restores the serialized
+    GSPMD behavior."""
+    if policy is None:
+        if mesh is None:
+            raise ValueError("collective_policy needs a mesh or a policy")
+        policy = CollectivePolicy(mesh=mesh, axis=axis, direction=direction,
+                                  enabled=enabled)
+    prev = getattr(_state, "collectives", None)
+    _state.collectives = policy
+    try:
+        yield policy
+    finally:
+        _state.collectives = prev
 
 
 # ---------------------------------------------------------------------------

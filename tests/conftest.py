@@ -1,4 +1,4 @@
-"""Test-environment shims.
+"""Test-environment shims + suite-runtime controls.
 
 The container may lack `hypothesis` (we cannot pip-install inside it).  When
 the real package is absent we register a minimal, deterministic stand-in that
@@ -8,14 +8,70 @@ strategies, `@settings(max_examples=..., deadline=...)`, and the
 seeded from the test name, so runs are reproducible; it is NOT a property
 testing engine (no shrinking, no coverage guidance) — just enough to keep the
 property tests meaningful as randomized regression tests.
+
+Suite-runtime controls (the CI-timeout guardrails):
+  - the `slow` marker tags the multi-second system/property tests; deselect
+    with `-m "not slow"` for a quick inner loop (CI runs everything).
+  - `HYPOTHESIS_MAX_EXAMPLES_CAP=<n>` clamps per-test `max_examples` (both
+    real hypothesis and the fallback shim) and forces `deadline=None`, so CI
+    can bound property-test time without editing every `@settings`.
 """
 from __future__ import annotations
 
 import functools
 import inspect
+import os
 import random
 import sys
 import types
+
+import pytest
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: multi-second test (system/subprocess/property-heavy);"
+        " deselect with -m 'not slow'")
+
+
+def _examples_cap() -> int:
+    try:
+        return int(os.environ.get("HYPOTHESIS_MAX_EXAMPLES_CAP", "0"))
+    except ValueError:
+        return 0
+
+
+def _install_real_hypothesis_controls() -> None:
+    """Profiles + optional example cap for the real hypothesis package.
+
+    Inline `@settings(max_examples=N)` overrides profiles, so the cap wraps
+    the `settings` constructor itself (conftest imports before any test
+    module, so `from hypothesis import settings` picks up the wrapper)."""
+    import hypothesis
+
+    hypothesis.settings.register_profile("ci", deadline=None, max_examples=15)
+    hypothesis.settings.register_profile("dev", deadline=None)
+    hypothesis.settings.load_profile(
+        os.environ.get("HYPOTHESIS_PROFILE",
+                       "ci" if os.environ.get("CI") else "dev"))
+    cap = _examples_cap()
+    if not cap:
+        return
+    real = hypothesis.settings
+
+    def capped(*args, **kwargs):
+        if kwargs.get("max_examples"):
+            kwargs["max_examples"] = min(kwargs["max_examples"], cap)
+        kwargs.setdefault("deadline", None)
+        return real(*args, **kwargs)
+
+    for attr in ("register_profile", "load_profile", "get_profile", "default"):
+        if hasattr(real, attr):
+            try:
+                setattr(capped, attr, getattr(real, attr))
+            except AttributeError:  # pragma: no cover
+                pass
+    hypothesis.settings = capped
 
 
 def _install_hypothesis_fallback() -> None:
@@ -48,7 +104,9 @@ def _install_hypothesis_fallback() -> None:
     st.integers = integers
     st.booleans = booleans
 
-    _MAX_EXAMPLES_CAP = 20  # keep CPU suite time bounded
+    # keep CPU suite time bounded (env cap tightens it further, as with
+    # the real package)
+    _MAX_EXAMPLES_CAP = min(20, _examples_cap() or 20)
 
     class _Rejected(Exception):
         """Raised by assume(False): the example is discarded, not a failure."""
@@ -108,3 +166,5 @@ try:  # pragma: no cover - depends on the environment
     import hypothesis  # noqa: F401
 except ImportError:  # pragma: no cover
     _install_hypothesis_fallback()
+else:  # pragma: no cover
+    _install_real_hypothesis_controls()

@@ -39,6 +39,7 @@ def _isolated_decode(model, params, prompt, max_new, max_len):
     return out
 
 
+@pytest.mark.slow  # decodes a full batch twice
 def test_batched_matches_isolated(model_and_params):
     cfg, model, params = model_and_params
     rng = np.random.default_rng(0)

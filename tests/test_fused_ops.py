@@ -289,6 +289,47 @@ def test_einsum_routing(spec, lhs_shape, rhs_shape, routed):
                                rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.parametrize("spec,lhs_shape,rhs_shape,routed", [
+    ("kn,mk->mn", (16, 8), (8, 16), False),     # operands swapped/transposed
+    ("km,kn->mn", (16, 8), (16, 8), False),     # lhs contraction first
+    ("bbk,kn->bn", (2, 2, 8), (8, 5), False),   # repeated batch dim in lhs
+    ("mk,kk->mk", (8, 16), (16, 16), False),    # repeated dim in rhs
+    ("abk,kn", (2, 3, 8), (8, 5), True),        # implicit out "abn" OK...
+    ("zak,kn", (2, 3, 8), (8, 5), False),       # ...but sorts to "anz": no
+    ("...k,kn->...n", (2, 3, 8), (8, 5), False),  # ellipsis: fallback
+    ("mk,kn->nm", (8, 16), (16, 5), False),     # transposed output
+    ("mk,kn,nq->mq", (8, 16), (16, 5), False),  # 3 operands: fallback
+    ("m k, k n -> m n", (8, 16), (16, 5), True),  # spaces are stripped
+], ids=["swapped", "lhs_kfirst", "rep_batch", "rep_rhs", "implicit_3d",
+        "implicit_sorted_3d", "ellipsis", "out_T", "three_operands",
+        "spaces"])
+def test_einsum_routing_edge_cases(spec, lhs_shape, rhs_shape, routed):
+    """Satellite coverage: implicit outputs, transposed operands, repeated
+    batch dims, and malformed/unroutable specs must fall back to jnp.einsum
+    without crashing (and with identical numerics)."""
+    from repro.core.ops import _parse_matmul_subscripts
+
+    operands = [_rand(i, s) for i, s in enumerate(
+        [lhs_shape, rhs_shape] + ([(5, 4)] if spec.count(",") == 2 else []))]
+    if spec.count(",") == 1:
+        got_route = _parse_matmul_subscripts(
+            spec, operands[0].ndim, operands[1].ndim) is not None
+        assert got_route == routed, spec
+    out = ops.einsum(spec, *operands, policy=PALLAS)
+    want = jnp.einsum(spec, *operands)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_einsum_parse_never_raises():
+    """The structural parser must return None (never throw) on garbage."""
+    from repro.core.ops import _parse_matmul_subscripts
+
+    for spec in ("", "->", "mk", "mk->mk", "mk,kn->", ",->", "mk,,kn->mn",
+                 "mk,kn->mnq", "m,n->mn", "...,...->...", "mk,kn->mn->x"):
+        assert _parse_matmul_subscripts(spec, 2, 2) is None, spec
+
+
 def test_einsum_routed_through_pallas():
     """'bsd,df->bsf' must actually reach the Pallas kernel (the old literal
     'mk,kn' check silently fell back to jnp.einsum)."""

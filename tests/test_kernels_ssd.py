@@ -33,6 +33,7 @@ def test_ssd_kernel_matches_sequential(L, P, S, chunk):
     chunk=st.sampled_from([8, 16, 32]),
     decay=st.floats(0.01, 2.0),
 )
+@pytest.mark.slow  # hypothesis x interpret-mode scan
 def test_ssd_chunking_invariance(L, chunk, decay):
     """Chunk size must not change the result (property of the chunked
     algorithm: inter-chunk recurrence + intra-chunk quadratic == scan)."""

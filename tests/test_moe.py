@@ -23,6 +23,7 @@ def test_output_shape_and_aux():
     assert float(aux) > 0
 
 
+@pytest.mark.slow  # two full MoE forwards per case
 def test_grouping_invariance():
     """Group count must not change routing results when capacity is ample
     (groups only localize the sort/scatter)."""
@@ -82,6 +83,7 @@ def test_capacity_drops_bound_work():
 @settings(max_examples=10, deadline=None)
 @given(E=st.sampled_from([4, 8]), k=st.sampled_from([1, 2, 4]),
        T=st.sampled_from([16, 32]))
+@pytest.mark.slow  # hypothesis x full MoE dispatch
 def test_router_gates_normalized(E, k, T):
     moe = MoE(d_model=8, d_ff=16, n_experts=E, top_k=k)
     p = moe.init(jax.random.PRNGKey(0))

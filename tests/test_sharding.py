@@ -35,6 +35,36 @@ def test_non_divisible_dims_fall_back():
     assert len(rules.dropped) >= 2
 
 
+def test_drop_emits_warning_and_counts_per_axis():
+    import warnings
+
+    rules = make_rules(_mesh())
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        rules.spec((7, 13), ("batch", "mlp"))
+    msgs = [str(w.message) for w in caught]
+    assert any("batch" in m and "7" in m for m in msgs), msgs
+    assert any("mlp" in m and "13" in m for m in msgs), msgs
+    assert rules.drops_by_axis == {"batch": 1, "mlp": 1}
+    # repeated identical fallback: counted again, warned only once
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        rules.spec((7, 13), ("batch", "mlp"))
+    assert not caught, [str(w.message) for w in caught]
+    assert rules.drops_by_axis == {"batch": 2, "mlp": 2}
+
+
+def test_no_warning_when_everything_divides():
+    import warnings
+
+    rules = make_rules(_mesh())
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        rules.spec((8, 16), ("embed", "mlp"))
+    assert not caught
+    assert rules.drops_by_axis == {}
+
+
 def test_progressive_prefix_fallback():
     rules = make_rules(_mesh((2, 2)), profile="dp")
     # dp batch rule is ("data", "model"): 6 % 4 != 0 but 6 % 2 == 0
@@ -67,6 +97,7 @@ def test_param_spec_tree_for_llama():
     assert "model" in str(seg["wq"]) and "model" in str(seg["wo"])
 
 
+@pytest.mark.slow  # subprocess + 4-device mesh
 def test_sharded_train_step_runs_on_virtual_mesh():
     """End-to-end pjit train step on 4 virtual host devices (subprocess so
     XLA_FLAGS lands before jax init — the contract forbids setting it

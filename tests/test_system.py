@@ -11,6 +11,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # multi-second subprocess launchers
+
 REPO = Path(__file__).resolve().parents[1]
 
 

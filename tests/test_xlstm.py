@@ -30,6 +30,7 @@ def _run_recurrent(q, k, v, i_pre, f_pre):
     chunk=st.sampled_from([4, 8, 16]),
     fbias=st.floats(-2.0, 6.0),
 )
+@pytest.mark.slow  # heaviest property test in the suite
 def test_chunkwise_equals_recurrent(L, chunk, fbias):
     """The stabilized chunkwise mLSTM is EXACT w.r.t. the recurrent cell,
     for any chunk size and any forget-gate operating point."""
