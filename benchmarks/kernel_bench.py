@@ -19,6 +19,8 @@ The fusion rows also report *structural* evidence for the epilogue win:
 """
 from __future__ import annotations
 
+import argparse
+import json
 import os
 import subprocess
 import sys
@@ -36,8 +38,23 @@ from repro.core.ops import (
     plan_cache_clear,
     plan_cache_info,
 )
+from repro.core.precision import resolve_precision
 from repro.core.tiling import plan_matmul_tiles
 from repro.core.transfer_model import GemmProblem
+from repro.kernels.quant import executed_gemm_bytes, quantize_operand
+
+BENCH_QUANT_OUT = Path(__file__).resolve().parent.parent / "BENCH_quant.json"
+
+# sweep name -> precision registry name ("int8" sweeps BOTH operands int8:
+# the bytes-ratio target is the full narrow-operand credit; the
+# weights-only default policy is covered by the "int8_w" alias)
+_SWEEP_POLICIES = {
+    "f32": None,
+    "bf16": "bf16",
+    "int8": "int8_all",
+    "int8_w": "int8",
+    "fp8": "fp8_all",
+}
 
 
 def _time(fn, *args, iters=3):
@@ -168,11 +185,98 @@ def run() -> list[tuple[str, float, str]]:
     rows.append(("tile_planner_cached", warm,
                  f"cold{cold:.0f}us_warm{warm:.2f}us_hits{info.hits}"))
 
+    # ---- quantized dtype sweep + BENCH_quant.json artifact ----
+    rows.extend(quant_sweep())
+
     # ---- collective GEMM rows + BENCH_collective.json artifact ----
     # Runs in a subprocess: the 8-device host mesh needs
     # --xla_force_host_platform_device_count set BEFORE jax initializes,
     # and this process's jax is already up on one device.
     rows.extend(_collective_rows())
+    return rows
+
+
+def quant_sweep(
+    dtypes=("f32", "bf16", "int8"),
+    size: int = 1024,
+    tile: int = 256,
+    out_path: Path = BENCH_QUANT_OUT,
+    iters: int = 3,
+) -> list[tuple[str, float, str]]:
+    """Dtype sweep over one size³ GEMM through the MX Pallas kernel
+    (interpret mode): wall time, max error vs the f32 result, and — the
+    point — HBM bytes moved per the PrecisionPolicy's transfer model vs
+    the as-executed count derived from the concrete launch
+    (kernels.quant.executed_gemm_bytes: padded shapes, payload itemsizes,
+    scale sidecars).  Model and measurement must agree within 10% on
+    aligned shapes; the JSON artifact records both plus the bytes/speedup
+    ratios vs f32 so the narrow-operand credit is tracked across PRs.
+    """
+    M = N = K = size
+    rng_a = jax.random.normal(jax.random.PRNGKey(0), (M, K), jnp.float32)
+    rng_b = jax.random.normal(jax.random.PRNGKey(1), (K, N), jnp.float32) * 0.05
+    pol = MXPolicy(backend="pallas_mx", bm=tile, bn=tile, bk=tile,
+                   interpret=True)
+    ref = jnp.dot(rng_a, rng_b, preferred_element_type=jnp.float32)
+    ref_max = float(jnp.abs(ref).max())
+
+    rows, result = [], {}
+    # the f32 baseline is computed unconditionally so the *_vs_f32 fields
+    # stay correctly labeled for any --dtypes order/subset
+    def f32_call(x, y):
+        return linear(x, y, policy=pol, out_dtype=jnp.float32)
+
+    f32_time = _time(f32_call, rng_a, rng_b, iters=iters)
+    f32_bytes = pol.plan(M, N, K, 4, b_bytes=4, out_bytes=4).hbm_bytes
+    for name in dtypes:
+        try:
+            policy_name = _SWEEP_POLICIES[name]
+        except KeyError:
+            raise SystemExit(
+                f"unknown sweep dtype {name!r}; one of {tuple(_SWEEP_POLICIES)}"
+            ) from None
+        prec = resolve_precision(policy_name) if policy_name else None
+
+        def f(x, y, prec=prec):
+            return linear(x, y, policy=pol, out_dtype=jnp.float32,
+                          precision=prec)
+
+        us = _time(f, rng_a, rng_b, iters=iters)
+        err = float(jnp.abs(f(rng_a, rng_b) - ref).max())
+
+        if prec is None:
+            qa, a_s, qb, b_s = rng_a, None, rng_b, None
+        else:
+            qa, a_s = quantize_operand(rng_a, prec.a, "a")
+            qb, b_s = quantize_operand(rng_b, prec.b, "b")
+        plan = pol.plan(M, N, K, qa.dtype.itemsize,
+                        b_bytes=qb.dtype.itemsize, out_bytes=4)
+        measured = executed_gemm_bytes(qa, qb, bm=tile, bn=tile, bk=tile,
+                                       out_itemsize=4, scales=(a_s, b_s))
+        agree = plan.hbm_bytes / measured if measured else 1.0
+        result[name] = {
+            "policy": policy_name or "f32",
+            "a_dtype": str(qa.dtype), "b_dtype": str(qb.dtype),
+            "acc_dtype": "float32", "out_dtype": "float32",
+            "time_us": us,
+            "max_abs_err_vs_f32": err,
+            "ref_abs_max": ref_max,
+            "model_hbm_bytes": plan.hbm_bytes,
+            "executed_hbm_bytes": measured,
+            "model_vs_executed": agree,
+            "bytes_vs_f32": plan.hbm_bytes / f32_bytes,
+            "speedup_vs_f32": f32_time / us if us else 0.0,
+        }
+        rows.append((f"quant_{name}_{size}", us,
+                     f"bytes_x{plan.hbm_bytes / f32_bytes:.2f}"
+                     f"_model/measured{agree:.3f}"))
+        assert abs(agree - 1.0) < 0.10, (
+            f"traffic model disagrees with as-executed bytes for {name}: "
+            f"{plan.hbm_bytes} vs {measured}")
+    out_path.write_text(json.dumps(
+        {"shape": [M, N, K], "tile": [tile, tile, tile],
+         "backend": "pallas_mx(interpret)", "dtypes": result}, indent=2))
+    rows.append(("quant_artifact", 0.0, f"wrote_{out_path.name}"))
     return rows
 
 
@@ -208,3 +312,27 @@ def _collective_rows() -> list[tuple[str, float, str]]:
             except ValueError:
                 continue
     return rows or [("collective_bench_ERROR", 0.0, "no_rows")]
+
+
+def main() -> None:
+    """Standalone entry: `python -m benchmarks.kernel_bench --dtypes
+    f32,bf16,int8 [--size 1024]` runs ONLY the quantized dtype sweep (the
+    CI benchmark hook); with no --dtypes it runs the full row set."""
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dtypes", default=None,
+                    help="comma list from " + ",".join(_SWEEP_POLICIES))
+    ap.add_argument("--size", type=int, default=1024)
+    ap.add_argument("--tile", type=int, default=256)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    if args.dtypes:
+        rows = quant_sweep(tuple(d.strip() for d in args.dtypes.split(",")),
+                           size=args.size, tile=args.tile)
+    else:
+        rows = run()
+    for name, us, derived in rows:
+        print(f"{name},{us:.2f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

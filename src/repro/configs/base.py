@@ -44,6 +44,14 @@ class ArchConfig:
     parallelism: str = "tp"  # "tp" | "dp" (see parallel.sharding.make_rules)
     remat_policy: str = "full"  # "full" | "dots" | "none" (perf knob)
     attn_chunk_threshold: int = 2048  # online-softmax attention beyond this
+    # Per-projection quantization policy for every block projection
+    # (qkv/out/up/gate/down and MoE expert GEMMs; router, embeddings and
+    # lm_head stay full precision).  A core/precision.py registry name:
+    # "none" (no declaration — an ambient use_precision() context still
+    # applies) | "f32" (force full precision) | "bf16" | "int8" (weights
+    # int8 per-tile, activations bf16) | "int8_all" | "int8_tensor" |
+    # "fp8" | "fp8_all".
+    precision: str = "none"
     source: str = ""
 
     @property

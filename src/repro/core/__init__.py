@@ -1,6 +1,13 @@
 """repro.core — the paper's contribution: transfer model, tiling, energy, MX ops."""
-from . import energy, ops, paper_data, roofline, tiling, transfer_model
+from . import energy, ops, paper_data, precision, roofline, tiling, transfer_model
 from .ops import MXPolicy, matmul, use_policy
+from .precision import (
+    PrecisionPolicy,
+    QuantSpec,
+    current_precision,
+    resolve_precision,
+    use_precision,
+)
 from .tiling import TilePlan, plan_matmul_tiles
 from .transfer_model import (
     BaselineKernel,
@@ -11,7 +18,10 @@ from .transfer_model import (
 )
 
 __all__ = [
-    "energy", "ops", "paper_data", "roofline", "tiling", "transfer_model",
+    "energy", "ops", "paper_data", "precision", "roofline", "tiling",
+    "transfer_model",
     "MXPolicy", "matmul", "use_policy", "TilePlan", "plan_matmul_tiles",
+    "PrecisionPolicy", "QuantSpec", "current_precision", "resolve_precision",
+    "use_precision",
     "BaselineKernel", "GemmProblem", "MXKernel", "PallasGemmTiling", "Transfers",
 ]

@@ -19,9 +19,16 @@ deployment decision:
                          the paper's calculus and to fuse beyond what XLA
                          picks (see EXPERIMENTS.md §Perf).
 
-Tile plans are cached per unique (policy, M, N, K, elem_bytes): the
+Tile plans are cached per unique (policy, M, N, K, per-operand bytes): the
 planner's O(candidates³) search would otherwise rerun on every un-jitted
 call (`plan_cache_info()` exposes hit/miss counters for tests/benchmarks).
+
+Mixed precision threads through here as ONE object: `core.precision.
+PrecisionPolicy` (explicit `precision=` argument or the `use_precision()`
+context) decides what the operands look like in HBM (int8/fp8 payloads +
+scales, or bf16 casts), and this layer quantizes once, plans with
+per-operand element sizes, and hands the scales to whichever kernel wins
+the dispatch — plain, grouped, or ring collective.
 """
 from __future__ import annotations
 
@@ -39,7 +46,14 @@ from ..kernels.mx_grouped_matmul import (
     grouped_matmul_reference,
     mx_grouped_matmul,
 )
-from ..kernels.mx_matmul import Epilogue, apply_epilogue, mx_matmul_fused
+from ..kernels.mx_matmul import Epilogue, apply_epilogue, dot_f32, mx_matmul_fused
+from ..kernels.quant import dequantize, quantize_operand
+from .precision import (
+    PrecisionPolicy,
+    current_precision,
+    resolve_precision,
+    use_precision,
+)
 from .tiling import DEFAULT_VMEM_BUDGET, TilePlan, plan_matmul_tiles
 from .transfer_model import GemmProblem
 
@@ -50,17 +64,21 @@ TP_MODES = ("allgather", "reduce_scatter")
 @functools.lru_cache(maxsize=1024)
 def _cached_plan(
     policy: "MXPolicy", M: int, N: int, K: int, elem_bytes: int,
-    fused_epilogue_ops: int,
+    fused_epilogue_ops: int, b_bytes: Optional[int] = None,
+    out_bytes: Optional[int] = None,
 ) -> TilePlan:
-    """The planner runs once per unique (policy, M, N, K, elem_bytes) key;
-    MXPolicy is a frozen dataclass, so it hashes by value."""
+    """The planner runs once per unique (policy, M, N, K, per-operand
+    bytes) key; MXPolicy is a frozen dataclass, so it hashes by value.
+    ``elem_bytes`` is the A-operand element size; quantized GEMMs key on
+    their narrow b_bytes/out_bytes too, so an int8-weights plan never
+    collides with the f32 plan for the same shape."""
     if policy.bm and policy.bn and policy.bk:
         from .transfer_model import PallasGemmTiling
 
         t = PallasGemmTiling(policy.bm, policy.bn, policy.bk,
                              accumulate_in_vmem=policy.backend != "pallas_baseline",
                              fused_epilogue_ops=fused_epilogue_ops)
-        p = GemmProblem(M, N, K, elem_bytes)
+        p = GemmProblem(M, N, K, elem_bytes, b_bytes=b_bytes, out_bytes=out_bytes)
         return TilePlan(
             policy.bm, policy.bn, policy.bk,
             hbm_bytes=t.hbm_bytes(p),
@@ -71,7 +89,7 @@ def _cached_plan(
             epilogue_saved_bytes=t.epilogue_saved_bytes(p),
         )
     return plan_matmul_tiles(
-        GemmProblem(M, N, K, elem_bytes),
+        GemmProblem(M, N, K, elem_bytes, b_bytes=b_bytes, out_bytes=out_bytes),
         vmem_budget=policy.vmem_budget,
         accumulate_in_vmem=policy.backend != "pallas_baseline",
         fused_epilogue_ops=fused_epilogue_ops,
@@ -103,9 +121,15 @@ class MXPolicy:
 
     def plan(
         self, M: int, N: int, K: int, elem_bytes: int,
-        fused_epilogue_ops: int = 0,
+        fused_epilogue_ops: int = 0, *,
+        b_bytes: Optional[int] = None, out_bytes: Optional[int] = None,
     ) -> TilePlan:
-        return _cached_plan(self, M, N, K, elem_bytes, fused_epilogue_ops)
+        """Tile plan for one GEMM.  ``elem_bytes`` is the A-operand element
+        size (and the default for B/out); mixed-precision callers pass
+        per-operand ``b_bytes`` / ``out_bytes`` so the plan's traffic model
+        reports the quantized bytes and the LRU key separates policies."""
+        return _cached_plan(self, M, N, K, elem_bytes, fused_epilogue_ops,
+                            b_bytes, out_bytes)
 
 
 _state = threading.local()
@@ -130,16 +154,55 @@ def _flatten_leading(a: jax.Array) -> Tuple[jax.Array, Tuple[int, ...]]:
     return a.reshape(-1, a.shape[-1]), lead
 
 
+def _ambient_precision(precision) -> Optional[PrecisionPolicy]:
+    """Explicit per-call precision (policy object or registry name) wins;
+    otherwise the use_precision() context; otherwise None (no quant).
+    Both None and "none" resolve to no-declaration and FALL THROUGH to the
+    ambient context (so config/module defaults don't shadow it); the "f32"
+    registry entry is a real identity policy and therefore overrides."""
+    resolved = resolve_precision(precision) if precision is not None else None
+    return resolved if resolved is not None else current_precision()
+
+
+def _effective_precision(prec, a_dtype, b_dtype) -> Optional[PrecisionPolicy]:
+    """Drop policies that would be the identity for these operand dtypes,
+    so the f32/none registry entries cost exactly nothing."""
+    if prec is not None and prec.is_noop_for(a_dtype, b_dtype):
+        return None
+    return prec
+
+
+def _prepare_quantized(x, w, w_gate, prec: PrecisionPolicy):
+    """Quantize/cast one linear's operands per the policy.  Returns
+    (qa, a_s, qb, b_s, qg, bg_s); scales are None for cast-only specs.
+    The gate weight quantizes under the same spec as w but with its OWN
+    scales (independent amax)."""
+    qa, a_s = quantize_operand(x, prec.a, "a")
+    qb, b_s = quantize_operand(w, prec.b, "b")
+    if w_gate is None:
+        return qa, a_s, qb, b_s, None, None
+    qg, bg_s = quantize_operand(w_gate, prec.b, "b")
+    return qa, a_s, qb, b_s, qg, bg_s
+
+
 def matmul(
     a: jax.Array,
     b: jax.Array,
     *,
     policy: Optional[MXPolicy] = None,
     out_dtype=None,
+    precision=None,
 ) -> jax.Array:
-    """D = A @ B through the MX dispatch.  a: (..., M, K), b: (K, N)."""
+    """D = A @ B through the MX dispatch.  a: (..., M, K), b: (K, N).
+    ``precision`` (PrecisionPolicy or registry name; explicit only — the
+    ambient use_precision() context applies to linear/grouped_matmul, not
+    to raw matmuls) routes through the quantized path."""
     policy = policy or current_policy()
     out_dtype = out_dtype or a.dtype
+    prec = _effective_precision(resolve_precision(precision), a.dtype, b.dtype)
+    if prec is not None:
+        return linear(a, b, None, policy=policy, out_dtype=out_dtype,
+                      precision=prec)
     if policy.backend == "xla":
         return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(out_dtype)
 
@@ -160,14 +223,21 @@ def matmul(
 
 def _collective_linear(
     x, w, b, *, activation, w_gate, residual, out_scale, policy, out_dtype,
-    tp_mode, coll,
+    tp_mode, coll, prec=None,
 ):
     """Route one linear through the overlapped ring collective matmul.
 
     Returns None when the problem is not eligible (ring size 1, shapes not
     divisible, gated reduce-scatter) — the caller then falls back to the
     serialized path.  Per-shard tile plans come from the same LRU cache as
-    the single-device dispatch (keyed on the *chunk* problem)."""
+    the single-device dispatch (keyed on the *chunk* problem).
+
+    Quantization happens ONCE, globally, before shard_map: per-row /
+    per-column scales are constant along K, so sharding the narrow payload
+    is exact on both ring modes.  On the all-gather ring the per-row scale
+    sidecar shards with (and travels alongside) its x chunk; on the
+    reduce-scatter ring scales stay device-local and partials travel
+    dequantized (see kernels/mx_collective_matmul)."""
     from ..kernels.mx_collective_matmul import ChunkCompute
     from jax.sharding import PartitionSpec as P
 
@@ -189,6 +259,7 @@ def _collective_linear(
         m_loc, n_loc, k_loc = M // P_, N // P_, K
         x_spec, w_spec = P(ax, None), P(None, ax)
         b_spec, r_spec = P(ax), P(None, ax)
+        as_spec, bs_spec = P(ax, None), P(None, ax)
     else:
         # x K-sharded, w K-sharded; output M-sharded (reduce-scattered).
         if ep.has_gate or M % P_ or K % P_:
@@ -196,13 +267,21 @@ def _collective_linear(
         m_loc, n_loc, k_loc = M // P_, N, K // P_
         x_spec, w_spec = P(None, ax), P(ax, None)
         b_spec, r_spec = P(None), P(ax, None)
+        as_spec, bs_spec = P(None, None), P(None, None)  # K-invariant scales
     direction = coll.direction
     if direction == "bidir" and m_loc % 2:
         direction = "fwd"  # odd chunk rows cannot split into two half-rings
 
+    a_s = b_s = bg_s = None
+    if prec is not None:
+        x2, a_s, w, b_s, w_gate, bg_s = _prepare_quantized(x2, w, w_gate, prec)
+
     # the per-*chunk* GEMM plan, LRU-cached like every other dispatch
-    plan = policy.plan(m_loc, n_loc, k_loc, x.dtype.itemsize,
-                       fused_epilogue_ops=ep.n_fused_ops)
+    a_bytes = x2.dtype.itemsize
+    plan = policy.plan(m_loc, n_loc, k_loc, a_bytes,
+                       fused_epilogue_ops=ep.n_fused_ops,
+                       b_bytes=w.dtype.itemsize,
+                       out_bytes=jnp.dtype(out_dtype).itemsize)
     cc = ChunkCompute(
         backend="pallas_mx" if policy.backend == "pallas_mx" else "xla",
         bm=plan.bm, bn=plan.bn, bk=plan.bk, interpret=policy.interpret,
@@ -223,13 +302,18 @@ def _collective_linear(
     if res2 is not None:
         in_specs.append(r_spec)
         operands.append(res2)
+    for s, spec in ((a_s, as_spec), (b_s, bs_spec), (bg_s, bs_spec)):
+        if s is not None:
+            in_specs.append(spec)
+            operands.append(s)
     has_bias, has_gate, has_res = (
         b is not None, w_gate is not None, res2 is not None)
     out_spec = P(None, ax) if tp_mode == "allgather" else P(ax, None)
     caller = _ring_caller(
         coll.mesh, ax, P_, direction, cc, ep, tp_mode,
-        has_bias, has_gate, has_res, jnp.dtype(out_dtype).name,
-        tuple(in_specs), out_spec,
+        has_bias, has_gate, has_res,
+        a_s is not None, b_s is not None, bg_s is not None,
+        jnp.dtype(out_dtype).name, tuple(in_specs), out_spec,
     )
     out = caller(*operands)
     if x.ndim > 2:
@@ -239,8 +323,8 @@ def _collective_linear(
 
 @functools.lru_cache(maxsize=256)
 def _ring_caller(mesh, ax, P_, direction, cc, ep, tp_mode,
-                 has_bias, has_gate, has_res, out_dtype_name,
-                 in_specs, out_spec):
+                 has_bias, has_gate, has_res, has_as, has_bs, has_bgs,
+                 out_dtype_name, in_specs, out_spec):
     """Jitted shard_map wrapper for one ring configuration, cached so that
     repeated layers (and eager test calls) reuse one compiled executable
     instead of re-tracing an eager 8-device ring per call."""
@@ -257,11 +341,15 @@ def _ring_caller(mesh, ax, P_, direction, cc, ep, tp_mode,
         b_s = next(it) if has_bias else None
         g_s = next(it) if has_gate else None
         r_s = next(it) if has_res else None
+        a_sc = next(it) if has_as else None
+        b_sc = next(it) if has_bs else None
+        bg_sc = next(it) if has_bgs else None
         kw = dict(axis_name=ax, axis_size=P_, compute=cc, epilogue=ep,
                   bias=b_s, residual=r_s, out_dtype=out_dtype,
-                  direction=direction)
+                  direction=direction, a_scale=a_sc, b_scale=b_sc)
         if tp_mode == "allgather":
-            return ring_allgather_matmul(x_s, w_s, b_gate=g_s, **kw)
+            return ring_allgather_matmul(x_s, w_s, b_gate=g_s,
+                                         bg_scale=bg_sc, **kw)
         return ring_matmul_reduce_scatter(x_s, w_s, **kw)
 
     return jax.jit(_shard_map(
@@ -282,6 +370,7 @@ def linear(
     policy: Optional[MXPolicy] = None,
     out_dtype=None,
     tp_mode: Optional[str] = None,
+    precision=None,
 ) -> jax.Array:
     """y = act(x @ w + b) [+ residual] [* out_scale] — the fused-epilogue
     entry point.  x: (..., M, K), w: (K, N), b: (N,), residual broadcastable
@@ -291,6 +380,14 @@ def linear(
     On the pallas_mx backend the whole epilogue happens inside the kernel's
     final-k write-back (one M*N store, zero intermediate round-trips); the
     other backends compute the same math unfused (the A/B reference).
+
+    ``precision`` (core.precision: a PrecisionPolicy, a registry name like
+    "int8", or None to take the ambient ``use_precision()`` context)
+    quantizes/casts the operands before dispatch: narrow payloads move
+    through HBM (and the TP ring), the kernel accumulates in f32, and the
+    dequant scales apply at the single fused write-back.  Every backend
+    sees the SAME quantized values (the xla/baseline path dequantizes
+    unfused), so A/B comparisons isolate traffic, not numerics.
 
     ``tp_mode`` declares how this projection shards under tensor
     parallelism: "allgather" (x sharded on rows, w on columns — qkv/up) or
@@ -303,6 +400,10 @@ def linear(
     """
     policy = policy or current_policy()
     out_dtype = out_dtype or x.dtype
+    prec = _effective_precision(_ambient_precision(precision),
+                                x.dtype, w.dtype)
+    if prec is not None and prec.out is not None:
+        out_dtype = prec.out_jnp_dtype
     if (activation == "swiglu") != (w_gate is not None):
         raise ValueError(
             "w_gate must be given iff activation='swiglu' "
@@ -318,7 +419,7 @@ def linear(
             out = _collective_linear(
                 x, w, b, activation=activation, w_gate=w_gate,
                 residual=residual, out_scale=out_scale, policy=policy,
-                out_dtype=out_dtype, tp_mode=tp_mode, coll=coll,
+                out_dtype=out_dtype, tp_mode=tp_mode, coll=coll, prec=prec,
             )
             if out is not None:
                 return out
@@ -327,14 +428,22 @@ def linear(
         x2, lead = _flatten_leading(x)
         M, K = x2.shape
         N = w.shape[-1]
+        a_s = b_s = bg_s = None
+        if prec is not None:
+            x2, a_s, w, b_s, w_gate, bg_s = _prepare_quantized(
+                x2, w, w_gate, prec)
         ep = Epilogue(
             activation=activation,
             bias=b is not None,
             residual=residual is not None,
             out_scale=out_scale,
+            a_scale=a_s is not None,
+            b_scale=b_s is not None,
         )
-        plan = policy.plan(M, N, K, x.dtype.itemsize,
-                           fused_epilogue_ops=ep.n_fused_ops)
+        plan = policy.plan(M, N, K, x2.dtype.itemsize,
+                           fused_epilogue_ops=ep.n_fused_ops,
+                           b_bytes=w.dtype.itemsize,
+                           out_bytes=jnp.dtype(out_dtype).itemsize)
         res2 = None
         if residual is not None:
             res2 = jnp.broadcast_to(
@@ -342,6 +451,7 @@ def linear(
             ).reshape(M, N)
         out = mx_matmul_fused(
             x2, w, epilogue=ep, b_gate=w_gate, bias=b, residual=res2,
+            a_scale=a_s, b_scale=b_s, bg_scale=bg_s,
             bm=plan.bm, bn=plan.bn, bk=plan.bk,
             out_dtype=out_dtype, interpret=policy.interpret,
         )
@@ -351,6 +461,18 @@ def linear(
 
     # Unfused reference composition (xla / pallas_baseline): each epilogue
     # step is its own op — the M*N round-trips the fused path eliminates.
+    if prec is not None:
+        # Quantized reference: the SAME narrow payloads the kernel loads,
+        # dot'd through the same dot_f32 accumulation, dequantized unfused.
+        qa, a_s, qb, b_s, qg, bg_s = _prepare_quantized(x, w, w_gate, prec)
+        y = dot_f32(qa, qb)
+        gate = dot_f32(qa, qg) if activation == "swiglu" else None
+        ep = Epilogue(activation=activation, bias=b is not None,
+                      residual=residual is not None, out_scale=out_scale,
+                      a_scale=a_s is not None, b_scale=b_s is not None)
+        return apply_epilogue(y, ep, bias=b, gate=gate, residual=residual,
+                              a_scale=a_s, b_scale=b_s, bg_scale=bg_s,
+                              out_dtype=out_dtype)
     y = matmul(x, w, policy=policy, out_dtype=jnp.float32)
     gate = (matmul(x, w_gate, policy=policy, out_dtype=jnp.float32)
             if activation == "swiglu" else None)
@@ -369,14 +491,33 @@ def grouped_matmul(
     w_gate: Optional[jax.Array] = None,
     policy: Optional[MXPolicy] = None,
     out_dtype=None,
+    precision=None,
 ) -> jax.Array:
     """Ragged grouped GEMM: out[t] = act(x[t] @ w[g(t)]) for rows sorted by
     group.  x: (T, K), w: (G, K, N), group_sizes: (G,).  One kernel launch
     for all groups on the Pallas path (vs a Python loop of per-group GEMMs).
+
+    ``precision`` (explicit or the ambient use_precision() context)
+    quantizes x per token row and w PER EXPERT per output column; the
+    (G, 1, N) weight scales are steered to the write-back by the same
+    group-offset scalar-prefetch maps as the expert weight blocks.
     """
     policy = policy or current_policy()
     out_dtype = out_dtype or x.dtype
+    prec = _effective_precision(_ambient_precision(precision),
+                                x.dtype, w.dtype)
+    if prec is not None and prec.out is not None:
+        out_dtype = prec.out_jnp_dtype
+    a_s = b_s = bg_s = None
+    if prec is not None:
+        x, a_s, w, b_s, w_gate, bg_s = _prepare_quantized(x, w, w_gate, prec)
     if policy.backend in ("xla", "pallas_baseline"):
+        if prec is not None:
+            # dequantized reference over the SAME narrow payloads
+            x = dequantize(x, a_s) if a_s is not None else x
+            w = dequantize(w, b_s) if b_s is not None else w
+            if w_gate is not None and bg_s is not None:
+                w_gate = dequantize(w_gate, bg_s)
         return grouped_matmul_reference(
             x, w, group_sizes, w_gate=w_gate, activation=activation,
             out_dtype=out_dtype,
@@ -387,11 +528,15 @@ def grouped_matmul(
     # ragged total with the same block shapes.  Credit the fused activation
     # through the same accounting linear() uses.
     G = max(int(w.shape[0]), 1)
-    n_fused = Epilogue(activation=activation).n_fused_ops
+    n_fused = Epilogue(activation=activation, a_scale=a_s is not None,
+                       b_scale=b_s is not None).n_fused_ops
     plan = policy.plan(max(T // G, 1), N, K, x.dtype.itemsize,
-                       fused_epilogue_ops=n_fused)
+                       fused_epilogue_ops=n_fused,
+                       b_bytes=w.dtype.itemsize,
+                       out_bytes=jnp.dtype(out_dtype).itemsize)
     return mx_grouped_matmul(
         x, w, group_sizes, w_gate=w_gate, activation=activation,
+        a_scale=a_s, b_scale=b_s, bg_scale=bg_s,
         bm=plan.bm, bn=plan.bn, bk=plan.bk,
         out_dtype=out_dtype, interpret=policy.interpret,
     )

@@ -1,0 +1,212 @@
+"""PrecisionPolicy / QuantSpec: ONE source of truth for mixed precision.
+
+The paper's §III mixed-precision argument is that the same vector register
+file and FPUs deliver 2-4x more MACs/cycle on narrow operands — the MX
+datapath (inherited from Ara's multi-precision FPUs) widens narrow inputs
+on the way INTO the tile buffer and accumulates wide.  The TPU analogue:
+int8/fp8 operand tiles stream HBM->VMEM at 1 byte/element, the MXU
+accumulates in f32, and the dequant scales are applied in the kernel's one
+fused write-back — so quantization rides the existing single-writeback
+path instead of adding dequant round-trips.
+
+This module is pure metadata (no jax at import time beyond dtype lookup):
+
+  - ``QuantSpec``       — how ONE operand is represented: target dtype and
+    scale granularity ("tensor" = one scale; "tile" = one scale per output
+    row of A / output column of B — the finest granularity that stays
+    constant along K, which is what lets the scale factor out of the f32
+    accumulation and apply at the single write-back).
+  - ``PrecisionPolicy`` — the (a, b, acc, out) bundle every layer consumes:
+    kernels (operand loads + write-back scaling), ops dispatch (quantize +
+    plan keys), the transfer model (per-operand elem_bytes), and models
+    (per-projection declarations via the named registry).
+
+Scale-granularity note: finer-than-row scales along K (true k-block
+scales) would require rescaling partial sums every k step, breaking the
+paper's inter-k-buffering (one accumulator, touched only by FMAs until the
+final store).  Row/column scales are exactly the granularity the single-
+write-back argument admits; see README "Quantized MX path".
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Optional, Union
+
+import jax.numpy as jnp
+
+# name -> (jnp dtype, bytes/elem, qmax for symmetric scaling; None = cast-only)
+DTYPES = {
+    "f32": (jnp.float32, 4, None),
+    "bf16": (jnp.bfloat16, 2, None),
+    "int8": (jnp.int8, 1, 127.0),
+    "fp8_e4m3": (jnp.float8_e4m3fn, 1, 448.0),  # max finite e4m3
+}
+GRANULARITIES = ("tensor", "tile")
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """How one GEMM operand is represented on the HBM side.
+
+    ``dtype``: one of DTYPES.  f32/bf16 are cast-only (no scales); int8 /
+    fp8_e4m3 are symmetric-scale quantized with f32 scales.
+    ``granularity``: "tensor" (one scale) or "tile" (per output-row for the
+    A operand, per output-column for B — constant along K by construction).
+    """
+
+    dtype: str = "f32"
+    granularity: str = "tile"
+
+    def __post_init__(self):
+        if self.dtype not in DTYPES:
+            raise ValueError(f"unknown dtype {self.dtype!r}; one of {tuple(DTYPES)}")
+        if self.granularity not in GRANULARITIES:
+            raise ValueError(
+                f"unknown granularity {self.granularity!r}; one of {GRANULARITIES}"
+            )
+
+    @property
+    def jnp_dtype(self):
+        return DTYPES[self.dtype][0]
+
+    @property
+    def qmax(self) -> Optional[float]:
+        return DTYPES[self.dtype][2]
+
+    @property
+    def quantized(self) -> bool:
+        """True when the operand carries scales (int8/fp8)."""
+        return self.qmax is not None
+
+    def bytes_for(self, input_itemsize: int) -> int:
+        """HBM bytes/element this operand moves.  A cast-only f32 spec keeps
+        the incoming dtype (it is the identity, not an up-cast)."""
+        if self.dtype == "f32":
+            return input_itemsize
+        return DTYPES[self.dtype][1]
+
+    def transforms(self, input_dtype) -> bool:
+        """Does applying this spec change the operand at all?"""
+        if self.quantized:
+            return True
+        if self.dtype == "f32":
+            return False
+        return jnp.dtype(input_dtype) != jnp.dtype(self.jnp_dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    """Per-operand precision for one GEMM: D = dequant(A_q @ B_q) + epilogue.
+
+    ``a`` is the activation operand, ``b`` the weight operand.  Accumulation
+    is always f32 (the MX inter-k accumulator); ``out`` overrides the output
+    dtype (None = caller's out_dtype).  Frozen + hashable: it participates
+    in the tile-plan LRU key and in jit static args.
+    """
+
+    a: QuantSpec = QuantSpec()
+    b: QuantSpec = QuantSpec()
+    acc: str = "f32"
+    out: Optional[str] = None
+
+    def __post_init__(self):
+        if self.acc != "f32":
+            raise ValueError(
+                f"only f32 accumulation is supported (the MX VMEM accumulator), "
+                f"got acc={self.acc!r}"
+            )
+        if self.out is not None and self.out not in DTYPES:
+            raise ValueError(f"unknown out dtype {self.out!r}; one of {tuple(DTYPES)}")
+
+    # -- per-operand byte sizes for the transfer model / plan keys --
+
+    def a_bytes(self, input_itemsize: int) -> int:
+        return self.a.bytes_for(input_itemsize)
+
+    def b_bytes(self, input_itemsize: int) -> int:
+        return self.b.bytes_for(input_itemsize)
+
+    def out_bytes(self, out_itemsize: int) -> int:
+        if self.out is None:
+            return out_itemsize
+        return DTYPES[self.out][1]
+
+    @property
+    def out_jnp_dtype(self):
+        return None if self.out is None else DTYPES[self.out][0]
+
+    @property
+    def any_quantized(self) -> bool:
+        return self.a.quantized or self.b.quantized
+
+    def is_noop_for(self, a_dtype, b_dtype) -> bool:
+        """True when applying this policy changes nothing (pure f32 passthrough)."""
+        return not (self.a.transforms(a_dtype) or self.b.transforms(b_dtype)
+                    or self.out is not None)
+
+
+# ---------------------------------------------------------------------------
+# Named registry: what models/configs declare per projection
+# ---------------------------------------------------------------------------
+
+# "none" = no declaration: resolves to None, so the ambient use_precision()
+# context (if any) still applies — the right default for config/module
+# fields.  "f32" = an explicit FORCING declaration: a real (identity)
+# policy object that overrides the ambient context, pinning a projection
+# to full precision (e.g. an lm_head under a quantized context).  The
+# quantized defaults follow the ISSUE contract: weights int8 per-tile,
+# activations bf16 (cast-only) — weight traffic dominates the serving
+# GEMMs, and bf16 activations avoid a second quantize pass on the hot path.
+NAMED_POLICIES = {
+    "none": None,
+    "f32": PrecisionPolicy(),
+    "bf16": PrecisionPolicy(a=QuantSpec("bf16"), b=QuantSpec("bf16")),
+    "int8": PrecisionPolicy(a=QuantSpec("bf16"), b=QuantSpec("int8", "tile")),
+    "int8_all": PrecisionPolicy(a=QuantSpec("int8", "tile"),
+                                b=QuantSpec("int8", "tile")),
+    "int8_tensor": PrecisionPolicy(a=QuantSpec("int8", "tensor"),
+                                   b=QuantSpec("int8", "tensor")),
+    "fp8": PrecisionPolicy(a=QuantSpec("bf16"), b=QuantSpec("fp8_e4m3", "tile")),
+    "fp8_all": PrecisionPolicy(a=QuantSpec("fp8_e4m3", "tile"),
+                               b=QuantSpec("fp8_e4m3", "tile")),
+}
+
+
+def resolve_precision(
+    p: Union[None, str, PrecisionPolicy],
+) -> Optional[PrecisionPolicy]:
+    """None / registry name / policy object -> Optional[PrecisionPolicy]."""
+    if p is None or isinstance(p, PrecisionPolicy):
+        return p
+    try:
+        return NAMED_POLICIES[p]
+    except KeyError:
+        raise ValueError(
+            f"unknown precision {p!r}; one of {tuple(NAMED_POLICIES)}"
+        ) from None
+
+
+# ---------------------------------------------------------------------------
+# Context manager, mirroring ops.use_policy
+# ---------------------------------------------------------------------------
+
+_state = threading.local()
+
+
+def current_precision() -> Optional[PrecisionPolicy]:
+    """The ambient PrecisionPolicy, or None (no quantization)."""
+    return getattr(_state, "precision", None)
+
+
+@contextlib.contextmanager
+def use_precision(p: Union[None, str, PrecisionPolicy]):
+    """Route every ops.linear / ops.grouped_matmul inside the context
+    through the given precision policy (explicit per-call args win)."""
+    prev = getattr(_state, "precision", None)
+    _state.precision = resolve_precision(p)
+    try:
+        yield _state.precision
+    finally:
+        _state.precision = prev

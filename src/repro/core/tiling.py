@@ -25,7 +25,7 @@ from .transfer_model import GemmProblem, PallasGemmTiling
 DEFAULT_VMEM_BUDGET = 64 * 1024 * 1024
 
 MXU_DIM = 128  # systolic array edge
-_SUBLANE = {2: 16, 4: 8, 8: 8}  # min second-minor tile per element size
+_SUBLANE = {1: 32, 2: 16, 4: 8, 8: 8}  # min second-minor tile per element size
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,7 +94,9 @@ def plan_matmul_tiles(
     paper's instruction-amortization argument), larger bk (longer
     accumulation chains), squarer (bm, bn).
     """
-    sub = _SUBLANE[p.elem_bytes]
+    # Alignment follows the A operand's element size (the sublane dim of the
+    # (bm, bk) block); a narrower B only changes the byte accounting below.
+    sub = _SUBLANE[p.a_elem_bytes]
     bm_cands = _candidate_dims(p.M, max(sub, min(MXU_DIM, _round_up(p.M, sub))), max_block)
     bn_cands = _candidate_dims(p.N, min(MXU_DIM, _round_up(p.N, MXU_DIM)), max_block)
     bk_cands = _candidate_dims(p.K, min(MXU_DIM, _round_up(p.K, sub)), max_block)
@@ -111,7 +113,8 @@ def plan_matmul_tiles(
                 # Double-buffered inputs: Pallas pipelines the next (A, B)
                 # block DMA while the MXU consumes the current one.
                 vmem = (
-                    2 * (bm * bk + bk * bn) * p.elem_bytes + bm * bn * acc_bytes
+                    2 * (bm * bk * p.a_elem_bytes + bk * bn * p.b_elem_bytes)
+                    + bm * bn * acc_bytes
                 )
                 if vmem > vmem_budget:
                     continue

@@ -26,12 +26,35 @@ def _ceil_div(a: int, b: int) -> int:
 
 @dataclasses.dataclass(frozen=True)
 class GemmProblem:
-    """A GEMM problem D = A@B + C with element size in bytes."""
+    """A GEMM problem D = A@B + C with element size in bytes.
+
+    ``elem_bytes`` is the A-operand (and default) element size, as in the
+    paper's uniform-precision Tables.  Mixed-precision problems (the §III
+    argument: narrow operands through the same datapath, wide accumulation)
+    set ``b_bytes`` / ``out_bytes`` per operand — a weights-int8 GEMM is
+    e.g. GemmProblem(M, N, K, 2, b_bytes=1, out_bytes=2).  None means
+    "same as elem_bytes", so every existing uniform-precision call site and
+    the Table IV validation are unchanged.
+    """
 
     M: int
     N: int
     K: int
     elem_bytes: int = 8  # FP64 in the paper's Dual-Core study
+    b_bytes: Optional[int] = None
+    out_bytes: Optional[int] = None
+
+    @property
+    def a_elem_bytes(self) -> int:
+        return self.elem_bytes
+
+    @property
+    def b_elem_bytes(self) -> int:
+        return self.elem_bytes if self.b_bytes is None else self.b_bytes
+
+    @property
+    def out_elem_bytes(self) -> int:
+        return self.elem_bytes if self.out_bytes is None else self.out_bytes
 
     @property
     def macs(self) -> int:
@@ -324,25 +347,38 @@ class PallasGemmTiling:
         )
 
     def hbm_bytes(self, p: GemmProblem, out_bytes: Optional[int] = None) -> int:
+        """Per-operand accounting: A and B panels move at their own element
+        sizes (the §III narrow-operand traffic credit), the output operand
+        at the OUTPUT element size — the accumulator is always f32 but
+        never leaves VMEM, so it costs nothing here."""
         t = self.hbm_transfers(p)
-        ob = p.elem_bytes if out_bytes is None else out_bytes
-        return (t.a_down + t.b_down) * p.elem_bytes + (t.cd_down + t.d_up) * ob
+        ob = p.out_elem_bytes if out_bytes is None else out_bytes
+        return (t.a_down * p.a_elem_bytes + t.b_down * p.b_elem_bytes
+                + (t.cd_down + t.d_up) * ob)
 
     def vmem_bytes(self, p: GemmProblem, acc_bytes: int = 4) -> int:
         """Working set in VMEM: one A block, one B block, one accumulator.
 
         This is the "area budget" analogue of the paper's 256 B buffer.
+        Quantized operand blocks shrink the input footprint (per-operand
+        bytes), which is exactly how narrow operands buy LARGER tiles under
+        the same budget — the paper's more-MACs-per-cycle argument restated
+        as more-tile-per-VMEM.
         """
         return (
-            self.bm * self.bk * p.elem_bytes
-            + self.bk * self.bn * p.elem_bytes
+            self.bm * self.bk * p.a_elem_bytes
+            + self.bk * self.bn * p.b_elem_bytes
             + self.bm * self.bn * acc_bytes
         )
 
     def epilogue_saved_bytes(self, p: GemmProblem, out_bytes: Optional[int] = None) -> int:
         """HBM bytes the fused epilogue eliminates vs the unfused op graph:
-        2 * M * N (one read + one write of the output) per fused op."""
-        ob = p.elem_bytes if out_bytes is None else out_bytes
+        2 * M * N (one read + one write of the output) per fused op, at the
+        OUTPUT operand's element size — a mixed-precision GEMM's epilogue
+        round-trips would happen on the (wide) output, not on the narrow
+        inputs, so crediting a uniform element size under-reported the
+        saving for int8-in/bf16-out and over-reported for f32-in/bf16-out."""
+        ob = p.out_elem_bytes if out_bytes is None else out_bytes
         return self.fused_epilogue_ops * 2 * p.M * p.N * ob
 
     def unfused_chain_bytes(self, p: GemmProblem, out_bytes: Optional[int] = None) -> int:
@@ -423,9 +459,13 @@ class RingCollectiveGemm:
 
     def chunk_comm_bytes(self, p: GemmProblem) -> int:
         """Bytes one device puts on a link per ring step (halved per link
-        when both ring directions carry half the chunk)."""
+        when both ring directions carry half the chunk).  The all-gather
+        ring moves A chunks, so quantized activations shrink the wire bytes
+        too (per-row scale sidecars are M/P floats per hop — negligible and
+        not modeled); the reduce-scatter ring moves f32 partials regardless
+        of operand precision (acc_bytes)."""
         if self.mode == "allgather":
-            full = _ceil_div(p.M, self.axis_size) * p.K * p.elem_bytes
+            full = _ceil_div(p.M, self.axis_size) * p.K * p.a_elem_bytes
         else:
             full = _ceil_div(p.M, self.axis_size) * p.N * self.acc_bytes
         return _ceil_div(full, 2) if self.bidirectional else full

@@ -1,5 +1,5 @@
 """Pallas TPU kernels (validated on CPU via interpret=True) + jnp oracles."""
-from . import ref
+from . import quant, ref
 from .baseline_matmul import baseline_matmul
 from .mx_collective_matmul import (
     ChunkCompute,
@@ -14,6 +14,7 @@ from .mx_matmul import Epilogue, mx_matmul, mx_matmul_fused
 from .ssd_scan import ssd_scan
 
 __all__ = [
+    "quant",
     "ref",
     "baseline_matmul",
     "mx_flash_attention",

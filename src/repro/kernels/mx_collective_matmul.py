@@ -54,7 +54,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from .mx_matmul import Epilogue, apply_epilogue, mx_matmul_fused
+from .mx_matmul import Epilogue, apply_epilogue, dot_f32, mx_matmul_fused
 
 DIRECTIONS = ("fwd", "bwd", "bidir")
 
@@ -78,14 +78,30 @@ class ChunkCompute:
     bk: int = 128
     interpret: bool = True
 
-    def raw(self, a: jax.Array, b: jax.Array) -> jax.Array:
-        """Plain chunk GEMM, f32 accumulator, no epilogue (partial sums)."""
+    def raw(
+        self,
+        a: jax.Array,
+        b: jax.Array,
+        a_scale: Optional[jax.Array] = None,
+        b_scale: Optional[jax.Array] = None,
+    ) -> jax.Array:
+        """Plain chunk GEMM, f32 accumulator, no epilogue (partial sums).
+        Quantized chunks are dequantized INTO the partial (scales applied
+        at the chunk's write-back), so ring accumulators stay plain f32."""
         if self.backend == "pallas_mx":
+            ep = Epilogue(a_scale=a_scale is not None,
+                          b_scale=b_scale is not None)
             return mx_matmul_fused(
-                a, b, bm=self.bm, bn=self.bn, bk=self.bk,
+                a, b, epilogue=ep, a_scale=a_scale, b_scale=b_scale,
+                bm=self.bm, bn=self.bn, bk=self.bk,
                 out_dtype=jnp.float32, interpret=self.interpret,
             )
-        return jnp.dot(a, b, preferred_element_type=jnp.float32)
+        y = dot_f32(a, b)
+        if a_scale is not None:
+            y = y * a_scale
+        if b_scale is not None:
+            y = y * b_scale
+        return y
 
     def fused(
         self,
@@ -96,22 +112,31 @@ class ChunkCompute:
         bias: Optional[jax.Array] = None,
         residual: Optional[jax.Array] = None,
         b_gate: Optional[jax.Array] = None,
+        a_scale: Optional[jax.Array] = None,
+        b_scale: Optional[jax.Array] = None,
+        bg_scale: Optional[jax.Array] = None,
         out_dtype=None,
     ) -> jax.Array:
         """Chunk GEMM with the epilogue applied in the final-k write-back
-        (pallas_mx) or as the equivalent unfused op chain (reference)."""
+        (pallas_mx) or as the equivalent unfused op chain (reference).
+        Scale flags are derived from the operands, so callers pass the
+        un-annotated epilogue plus whatever scales the chunk carries."""
         out_dtype = out_dtype or a.dtype
+        epilogue = dataclasses.replace(
+            epilogue, a_scale=a_scale is not None, b_scale=b_scale is not None)
         if self.backend == "pallas_mx":
             return mx_matmul_fused(
                 a, b, epilogue=epilogue, b_gate=b_gate, bias=bias,
-                residual=residual, bm=self.bm, bn=self.bn, bk=self.bk,
+                residual=residual, a_scale=a_scale, b_scale=b_scale,
+                bg_scale=bg_scale, bm=self.bm, bn=self.bn, bk=self.bk,
                 out_dtype=out_dtype, interpret=self.interpret,
             )
-        y = jnp.dot(a, b, preferred_element_type=jnp.float32)
-        gate = (jnp.dot(a, b_gate, preferred_element_type=jnp.float32)
-                if epilogue.has_gate else None)
+        y = dot_f32(a, b)
+        gate = dot_f32(a, b_gate) if epilogue.has_gate else None
         return apply_epilogue(y, epilogue, bias=bias, gate=gate,
-                              residual=residual, out_dtype=out_dtype)
+                              residual=residual, a_scale=a_scale,
+                              b_scale=b_scale, bg_scale=bg_scale,
+                              out_dtype=out_dtype)
 
 
 def _check_direction(direction: str) -> None:
@@ -135,6 +160,9 @@ def ring_allgather_matmul(
     bias: Optional[jax.Array] = None,
     residual: Optional[jax.Array] = None,
     b_gate: Optional[jax.Array] = None,
+    a_scale: Optional[jax.Array] = None,
+    b_scale: Optional[jax.Array] = None,
+    bg_scale: Optional[jax.Array] = None,
     out_dtype=None,
     direction: str = "bidir",
 ) -> jax.Array:
@@ -146,6 +174,12 @@ def ring_allgather_matmul(
     chunk's output rows while ppermute streams the next chunk in; the
     epilogue is fused into each chunk's write-back (each output element
     is produced exactly once).
+
+    Quantized operands: ``a_scale`` (m_loc, 1) — this device's per-row
+    dequant scales — TRAVELS THE RING alongside its x chunk (the sidecar
+    is m_loc floats per hop, noise next to the m_loc*K payload); the local
+    weight-shard scales ``b_scale`` / ``bg_scale`` (1, n_loc) stay
+    resident like w_shard itself.
     """
     _check_direction(direction)
     P = axis_size
@@ -163,6 +197,9 @@ def ring_allgather_matmul(
     if direction == "bidir" and P > 1 and m_loc % 2 == 0:
         half = m_loc // 2
         fwd, bwd = x_shard[:half], x_shard[half:]
+        sf = sb = None
+        if a_scale is not None:
+            sf, sb = a_scale[:half], a_scale[half:]
         perm_f = ring_perm(P)
         perm_b = ring_perm(P, reverse=True)
         for step in range(P):
@@ -171,36 +208,49 @@ def ring_allgather_matmul(
             if step < P - 1:  # issue sends first: overlap with this chunk's GEMM
                 nxt_f = lax.ppermute(fwd, axis_name, perm_f)
                 nxt_b = lax.ppermute(bwd, axis_name, perm_b)
+                if a_scale is not None:  # scale sidecars ride the same hops
+                    nxt_sf = lax.ppermute(sf, axis_name, perm_f)
+                    nxt_sb = lax.ppermute(sb, axis_name, perm_b)
             rf = src_f * m_loc
             rb = src_b * m_loc + half
             res = None
             if residual is not None:
                 res = jnp.concatenate([res_rows(rf, half), res_rows(rb, half)])
+            a_s = None if a_scale is None else jnp.concatenate([sf, sb])
             y = compute.fused(
                 jnp.concatenate([fwd, bwd]), w_shard, epilogue=epilogue,
-                bias=bias, residual=res, b_gate=b_gate, out_dtype=out_dtype,
+                bias=bias, residual=res, b_gate=b_gate, a_scale=a_s,
+                b_scale=b_scale, bg_scale=bg_scale, out_dtype=out_dtype,
             )
             out = lax.dynamic_update_slice(out, y[:half], (rf, 0))
             out = lax.dynamic_update_slice(out, y[half:], (rb, 0))
             if step < P - 1:
                 fwd, bwd = nxt_f, nxt_b
+                if a_scale is not None:
+                    sf, sb = nxt_sf, nxt_sb
         return out
 
     perm = ring_perm(P, reverse=(direction == "bwd"))
     chunk = x_shard
+    s_chunk = a_scale
     for step in range(P):
         # with fwd sends (i -> i+1), after `step` hops we hold (idx - step)'s rows
         src = ((idx - step) if direction != "bwd" else (idx + step)) % P
         if step < P - 1:
             nxt = lax.ppermute(chunk, axis_name, perm)
+            if s_chunk is not None:
+                nxt_s = lax.ppermute(s_chunk, axis_name, perm)
         y = compute.fused(
             chunk, w_shard, epilogue=epilogue, bias=bias,
             residual=res_rows(src * m_loc, m_loc), b_gate=b_gate,
+            a_scale=s_chunk, b_scale=b_scale, bg_scale=bg_scale,
             out_dtype=out_dtype,
         )
         out = lax.dynamic_update_slice(out, y, (src * m_loc, 0))
         if step < P - 1:
             chunk = nxt
+            if s_chunk is not None:
+                s_chunk = nxt_s
     return out
 
 
@@ -214,13 +264,21 @@ def serialized_allgather_matmul(
     bias: Optional[jax.Array] = None,
     residual: Optional[jax.Array] = None,
     b_gate: Optional[jax.Array] = None,
+    a_scale: Optional[jax.Array] = None,
+    b_scale: Optional[jax.Array] = None,
+    bg_scale: Optional[jax.Array] = None,
     out_dtype=None,
 ) -> jax.Array:
-    """The unoverlapped reference: all-gather x over M, then one GEMM."""
+    """The unoverlapped reference: all-gather x over M, then one GEMM.
+    Quantized x gathers its per-row scales the same way (parity oracle for
+    the scale-traveling ring)."""
     x_full = lax.all_gather(x_shard, axis_name, axis=0, tiled=True)
+    a_s = (lax.all_gather(a_scale, axis_name, axis=0, tiled=True)
+           if a_scale is not None else None)
     return compute.fused(
         x_full, w_shard, epilogue=epilogue, bias=bias, residual=residual,
-        b_gate=b_gate, out_dtype=out_dtype or x_shard.dtype,
+        b_gate=b_gate, a_scale=a_s, b_scale=b_scale, bg_scale=bg_scale,
+        out_dtype=out_dtype or x_shard.dtype,
     )
 
 
@@ -239,6 +297,8 @@ def ring_matmul_reduce_scatter(
     epilogue: Epilogue = Epilogue(),
     bias: Optional[jax.Array] = None,
     residual: Optional[jax.Array] = None,
+    a_scale: Optional[jax.Array] = None,
+    b_scale: Optional[jax.Array] = None,
     out_dtype=None,
     direction: str = "bidir",
 ) -> jax.Array:
@@ -253,6 +313,14 @@ def ring_matmul_reduce_scatter(
     arriving fully-summed at device j on the final step — where the
     epilogue is applied exactly once.  Gated epilogues (swiglu) need the
     gate GEMM's full sum too and are not supported on this path.
+
+    Quantized operands: ``a_scale`` (M, 1) and ``b_scale`` (1, N) are
+    shard-LOCAL (each device quantizes its own K-slice; per-row/column
+    scales are constant along K, so per-shard quantization is exact for
+    the shard's contribution).  Each chunk GEMM dequantizes into its f32
+    partial at its own write-back, so the TRAVELING accumulators are plain
+    f32 partial sums — nothing extra rides the ring, and the cross-device
+    reduction stays dequantized exactly like the serialized psum.
     """
     _check_direction(direction)
     if epilogue.has_gate:
@@ -272,19 +340,27 @@ def ring_matmul_reduce_scatter(
         return apply_epilogue(acc_f32, epilogue, bias=bias, residual=res,
                               out_dtype=out_dtype)
 
-    def fused_final(x_rows, acc_in, res):
+    def s_rows(start, rows):
+        if a_scale is None:
+            return None
+        return lax.dynamic_slice(a_scale, (start, 0), (rows, 1))
+
+    def fused_final(x_rows_, acc_in, res, a_s):
         """Final step: my contribution + incoming partial + epilogue in ONE
         chunk-GEMM write-back.  Valid when there is no activation: the MX
         kernel's residual slot takes (acc_in [+ residual]), added in f32 at
-        the final-k store.  With an activation, act(full_sum) needs the sum
-        first, so the epilogue runs unfused after the raw GEMM."""
+        the final-k store — AFTER this chunk's dequant scales, so the
+        already-dequantized partial sums add exactly.  With an activation,
+        act(full_sum) needs the sum first, so the epilogue runs unfused
+        after the raw (dequantizing) GEMM."""
         if epilogue.activation == "none":
             extra = acc_in if res is None else acc_in + res.astype(jnp.float32)
             ep = Epilogue(bias=bias is not None, residual=True,
                           out_scale=epilogue.out_scale)
-            return compute.fused(x_rows, w_shard, epilogue=ep, bias=bias,
-                                 residual=extra, out_dtype=out_dtype)
-        return finish(compute.raw(x_rows, w_shard) + acc_in, res)
+            return compute.fused(x_rows_, w_shard, epilogue=ep, bias=bias,
+                                 residual=extra, a_scale=a_s,
+                                 b_scale=b_scale, out_dtype=out_dtype)
+        return finish(compute.raw(x_rows_, w_shard, a_s, b_scale) + acc_in, res)
 
     def x_rows(start, rows):
         return lax.dynamic_slice(x_shard, (start, 0), (rows, k_loc))
@@ -299,13 +375,17 @@ def ring_matmul_reduce_scatter(
             jb = (idx + step + 1) % P  # bwd ring: chunk jb's bottom half
             xa = x_rows(jf * m_loc, half)
             xb = x_rows(jb * m_loc + half, half)
+            sa = s_rows(jf * m_loc, half)
+            sb = s_rows(jb * m_loc + half, half)
+            a_s = None if a_scale is None else jnp.concatenate([sa, sb])
             if step == P - 1:  # jf == jb == idx: fully summed, fuse epilogue
                 acc_in = jnp.concatenate([
                     lax.ppermute(acc_f, axis_name, perm_f),
                     lax.ppermute(acc_b, axis_name, perm_b),
                 ])
-                return fused_final(jnp.concatenate([xa, xb]), acc_in, residual)
-            y = compute.raw(jnp.concatenate([xa, xb]), w_shard)
+                return fused_final(jnp.concatenate([xa, xb]), acc_in,
+                                   residual, a_s)
+            y = compute.raw(jnp.concatenate([xa, xb]), w_shard, a_s, b_scale)
             if step == 0:
                 acc_f, acc_b = y[:half], y[half:]
             else:
@@ -318,11 +398,12 @@ def ring_matmul_reduce_scatter(
     for step in range(P):
         j = (idx + sgn * (step + 1)) % P  # chunk handled this step
         xr = x_rows(j * m_loc, m_loc)
+        a_s = s_rows(j * m_loc, m_loc)
         if step == P - 1:  # j == idx
             acc_in = (lax.ppermute(acc, axis_name, perm) if P > 1
                       else jnp.zeros((m_loc, N), jnp.float32))
-            return fused_final(xr, acc_in, residual)
-        y = compute.raw(xr, w_shard)
+            return fused_final(xr, acc_in, residual, a_s)
+        y = compute.raw(xr, w_shard, a_s, b_scale)
         acc = y if step == 0 else y + lax.ppermute(acc, axis_name, perm)
     raise AssertionError("unreachable: the P-step loop returns at step P-1")
 
@@ -337,10 +418,13 @@ def serialized_matmul_psum(
     epilogue: Epilogue = Epilogue(),
     bias: Optional[jax.Array] = None,
     residual: Optional[jax.Array] = None,
+    a_scale: Optional[jax.Array] = None,
+    b_scale: Optional[jax.Array] = None,
     out_dtype=None,
 ) -> jax.Array:
-    """The unoverlapped reference: full partial GEMM, then psum, then
-    epilogue, then slice the own M-chunk (psum + slice == reduce-scatter)."""
+    """The unoverlapped reference: full partial GEMM (dequantized at its
+    write-back when quantized), then psum, then epilogue, then slice the
+    own M-chunk (psum + slice == reduce-scatter)."""
     if epilogue.has_gate:
         raise ValueError("swiglu epilogue is not supported on the "
                          "reduce-scatter path (gate needs the full sum)")
@@ -350,7 +434,7 @@ def serialized_matmul_psum(
         raise ValueError(f"M={M} must divide over the ring size {P}")
     m_loc = M // P
     idx = lax.axis_index(axis_name)
-    y = lax.psum(compute.raw(x_shard, w_shard), axis_name)
+    y = lax.psum(compute.raw(x_shard, w_shard, a_scale, b_scale), axis_name)
     own = lax.dynamic_slice(y, (idx * m_loc, 0), (m_loc, y.shape[1]))
     return apply_epilogue(own, epilogue, bias=bias, residual=residual,
                           out_dtype=out_dtype or x_shard.dtype)

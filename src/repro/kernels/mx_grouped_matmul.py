@@ -34,7 +34,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from ._compat import CompilerParams
-from .mx_matmul import apply_activation
+from .mx_matmul import apply_activation, dot_f32
 
 
 def make_group_metadata(
@@ -102,11 +102,16 @@ def _grouped_kernel(
     out_dtype,
     activation: str,
     has_gate: bool,
+    has_a_scale: bool = False,
+    has_b_scale: bool = False,
 ):
     it = iter(refs)
     x_ref = next(it)
     w_ref = next(it)
     wg_ref = next(it) if has_gate else None
+    as_ref = next(it) if has_a_scale else None
+    bs_ref = next(it) if has_b_scale else None
+    bgs_ref = next(it) if (has_gate and has_b_scale) else None
     o_ref = next(it)
     acc_ref = next(it)
     accg_ref = next(it) if has_gate else None
@@ -121,11 +126,9 @@ def _grouped_kernel(
             accg_ref[...] = jnp.zeros_like(accg_ref)
 
     x_blk = x_ref[...]
-    acc_ref[...] += jnp.dot(x_blk, w_ref[0], preferred_element_type=jnp.float32)
+    acc_ref[...] += dot_f32(x_blk, w_ref[0])
     if accg_ref is not None:
-        accg_ref[...] += jnp.dot(
-            x_blk, wg_ref[0], preferred_element_type=jnp.float32
-        )
+        accg_ref[...] += dot_f32(x_blk, wg_ref[0])
 
     @pl.when(k == nk - 1)
     def _store():
@@ -135,8 +138,20 @@ def _grouped_kernel(
         start = starts_ref[g]
         valid = (rows >= start) & (rows < start + sizes_ref[g])
         acc = acc_ref[...]
+        # dequant at the single write-back: per-row activation scales and
+        # THIS group's per-column weight scales (steered by grp[l], exactly
+        # like the weight blocks themselves).
+        if as_ref is not None:
+            acc = acc * as_ref[...]
+        if bs_ref is not None:
+            acc = acc * bs_ref[0]
         if accg_ref is not None:
-            acc = jax.nn.silu(accg_ref[...]) * acc
+            gate = accg_ref[...]
+            if as_ref is not None:
+                gate = gate * as_ref[...]
+            if bgs_ref is not None:
+                gate = gate * bgs_ref[0]
+            acc = jax.nn.silu(gate) * acc
         else:
             acc = apply_activation(acc, activation)
         acc = acc.astype(out_dtype)
@@ -159,6 +174,9 @@ def mx_grouped_matmul(
     *,
     w_gate: Optional[jax.Array] = None,
     activation: str = "none",
+    a_scale: Optional[jax.Array] = None,
+    b_scale: Optional[jax.Array] = None,
+    bg_scale: Optional[jax.Array] = None,
     bm: int = 128,
     bn: int = 128,
     bk: int = 128,
@@ -169,6 +187,13 @@ def mx_grouped_matmul(
     w: (G, K, N), group_sizes: (G,) ints with sum <= T.  Rows beyond
     sum(group_sizes) are zero in the output.  activation == "swiglu" gates
     with a second weight set `w_gate` (G, K, N), fused in VMEM.
+
+    Quantized operands carry narrow payloads plus dequant scales applied at
+    the masked single write-back: ``a_scale`` (T, 1) per token row,
+    ``b_scale`` / ``bg_scale`` (G, 1, N) PER EXPERT per output column —
+    the scale blocks are steered by the same group-offset scalar-prefetch
+    maps (grp[l]) that steer the expert weight blocks, so per-expert
+    dequant costs no extra launches or gathers.
     """
     if x.ndim != 2 or w.ndim != 3:
         raise ValueError(f"expected x (T, K), w (G, K, N); got {x.shape}, {w.shape}")
@@ -183,6 +208,12 @@ def mx_grouped_matmul(
     has_gate = activation == "swiglu"
     if has_gate != (w_gate is not None):
         raise ValueError("w_gate must be given iff activation=='swiglu'")
+    if (bg_scale is not None) != (has_gate and b_scale is not None):
+        raise ValueError("bg_scale must be given iff gated AND b_scale is set")
+    if a_scale is not None and a_scale.shape != (T, 1):
+        raise ValueError(f"a_scale must be (T, 1)=({T}, 1), got {a_scale.shape}")
+    if b_scale is not None and b_scale.shape != (G, 1, N):
+        raise ValueError(f"b_scale must be (G, 1, N)=({G}, 1, {N}), got {b_scale.shape}")
     out_dtype = out_dtype or x.dtype
 
     bm_, bn_, bk_ = min(bm, T), min(bn, N), min(bk, K)
@@ -217,6 +248,22 @@ def mx_grouped_matmul(
         )
         operands.append(wg_p)
         scratch.append(pltpu.VMEM((bm_, bn_), jnp.float32))
+    if a_scale is not None:
+        # per-row scale panel follows the slot's global row-tile, like x
+        in_specs.append(pl.BlockSpec(
+            (bm_, 1), lambda j, l, k, grp, tile, first, st, sz: (tile[l], 0)))
+        operands.append(jnp.pad(a_scale.astype(jnp.float32),
+                                ((0, (-T) % bm_), (0, 0))))
+    if b_scale is not None:
+        bspec = pl.BlockSpec(
+            (1, 1, bn_), lambda j, l, k, grp, tile, first, st, sz: (grp[l], 0, j))
+        in_specs.append(bspec)
+        operands.append(jnp.pad(b_scale.astype(jnp.float32),
+                                ((0, 0), (0, 0), (0, (-N) % bn_))))
+        if has_gate:
+            in_specs.append(bspec)
+            operands.append(jnp.pad(bg_scale.astype(jnp.float32),
+                                    ((0, 0), (0, 0), (0, (-N) % bn_))))
 
     kernel = functools.partial(
         _grouped_kernel,
@@ -225,6 +272,8 @@ def mx_grouped_matmul(
         out_dtype=out_dtype,
         activation=activation,
         has_gate=has_gate,
+        has_a_scale=a_scale is not None,
+        has_b_scale=b_scale is not None,
     )
     out = pl.pallas_call(
         kernel,

@@ -57,15 +57,34 @@ def apply_activation(x: jax.Array, activation: str) -> jax.Array:
     raise ValueError(f"unknown activation {activation!r}; one of {ACTIVATIONS}")
 
 
+def dot_f32(a_blk: jax.Array, b_blk: jax.Array) -> jax.Array:
+    """One tile FMA chain with f32 accumulation for ANY operand dtype — the
+    multi-precision FPU datapath (§III): narrow operands in, wide
+    accumulation out.  int8×int8 takes the exact int32 MAC path (the MXU's
+    int8 pipe) before widening; mixed or sub-16-bit float operands widen to
+    f32 first (quantized integer VALUES are the payload — dequant scales
+    are applied downstream at the write-back, never here).  Used by every
+    kernel body and by the unfused XLA reference so backends accumulate
+    identically."""
+    if a_blk.dtype == b_blk.dtype and jnp.issubdtype(a_blk.dtype, jnp.integer):
+        return jnp.dot(
+            a_blk, b_blk, preferred_element_type=jnp.int32
+        ).astype(jnp.float32)
+    if a_blk.dtype != b_blk.dtype or a_blk.dtype.itemsize < 2:
+        a_blk = a_blk.astype(jnp.float32)
+        b_blk = b_blk.astype(jnp.float32)
+    return jnp.dot(a_blk, b_blk, preferred_element_type=jnp.float32)
+
+
 @dataclasses.dataclass(frozen=True)
 class Epilogue:
     """Declarative spec of what happens to the output tile at the final-k
     write-back, while it is still resident in VMEM.
 
     Semantics (in application order, all in f32):
-        acc  = A @ B                       (+ gate accumulator if swiglu)
+        acc *= a_scale * b_scale           [dequant: quantized operands]
         acc += bias                        [bias]
-        acc  = act(acc)  or  silu(gate_acc) * acc   [swiglu]
+        acc  = act(acc)  or  silu(gate_acc * a_scale * bg_scale) * acc  [swiglu]
         acc += residual                    [residual]
         acc *= out_scale                   [out_scale]
         out  = acc.astype(out_dtype)       (the ONE write-back)
@@ -74,12 +93,22 @@ class Epilogue:
     (same shape as B) accumulated in a second VMEM scratch; the gating
     multiply happens at the write-back, so the intermediate up/gate
     projections never exist in HBM at all.
+
+    ``a_scale`` / ``b_scale`` declare quantized-operand dequant scales
+    (core/precision.py): the kernel loads narrow A/B payloads and applies
+    the per-row (M, 1) / per-column (1, N) f32 scales to the finished
+    accumulator at the same single write-back — scales are constant along
+    K, so the inter-k accumulator is touched only by FMAs, exactly as in
+    the unquantized kernel.  The gate GEMM reuses a_scale and takes its own
+    ``bg_scale`` for the (independently quantized) gate weight.
     """
 
     activation: str = "none"
     bias: bool = False
     residual: bool = False
     out_scale: Optional[float] = None
+    a_scale: bool = False
+    b_scale: bool = False
 
     def __post_init__(self):
         if self.activation not in ACTIVATIONS:
@@ -96,6 +125,10 @@ class Epilogue:
         """How many elementwise HBM round-trips the fusion eliminates
         (consumed by core.transfer_model's epilogue accounting)."""
         n = 0
+        if self.a_scale:
+            n += 1  # unfused graph: one M*N dequant multiply on the output
+        if self.b_scale:
+            n += 1
         if self.bias:
             n += 1
         if self.activation == "swiglu":
@@ -116,17 +149,38 @@ def apply_epilogue(
     bias: Optional[jax.Array] = None,
     gate: Optional[jax.Array] = None,
     residual: Optional[jax.Array] = None,
+    a_scale: Optional[jax.Array] = None,
+    b_scale: Optional[jax.Array] = None,
+    bg_scale: Optional[jax.Array] = None,
     out_dtype=None,
 ) -> jax.Array:
     """Unfused reference application of an Epilogue to a f32 GEMM result,
     in EXACTLY the order the fused kernel's final-k write-back uses:
-    bias -> activation/gating -> residual -> out_scale.  Every unfused
-    path (xla dispatch, ring collective final steps, serialized
-    references) must go through this one helper so epilogue semantics
-    cannot silently diverge from the kernel.  ``gate`` is the gate GEMM's
-    f32 result when ``epilogue.has_gate``."""
+    dequant scales -> bias -> activation/gating -> residual -> out_scale.
+    Every unfused path (xla dispatch, ring collective final steps,
+    serialized references) must go through this one helper so epilogue
+    semantics cannot silently diverge from the kernel.  ``gate`` is the
+    gate GEMM's f32 result (quantized VALUES, not yet dequantized) when
+    ``epilogue.has_gate``; ``a_scale`` (M, 1) / ``b_scale`` (1, N) /
+    ``bg_scale`` (1, N) are the operand dequant scales."""
     if epilogue.has_gate != (gate is not None):
         raise ValueError("gate must be given iff epilogue.activation=='swiglu'")
+    if epilogue.a_scale != (a_scale is not None):
+        raise ValueError("a_scale operand must match epilogue.a_scale")
+    if epilogue.b_scale != (b_scale is not None):
+        raise ValueError("b_scale operand must match epilogue.b_scale")
+    if (bg_scale is not None) != (epilogue.has_gate and epilogue.b_scale):
+        raise ValueError("bg_scale must be given iff the epilogue is gated "
+                         "AND b_scale is set (the gate weight quantizes "
+                         "independently of the up weight)")
+    if a_scale is not None:
+        y = y * a_scale
+        if gate is not None:
+            gate = gate * a_scale
+    if b_scale is not None:
+        y = y * b_scale
+    if gate is not None and bg_scale is not None:
+        gate = gate * bg_scale
     if bias is not None:
         y = y + bias.astype(jnp.float32)
     if epilogue.has_gate:
@@ -142,11 +196,15 @@ def apply_epilogue(
 
 def _fused_kernel(*refs, nk: int, out_dtype, epilogue: Epilogue):
     """Kernel body.  refs layout (inputs, outputs, scratch):
-    a, b, [b_gate], [bias], [residual], o, acc, [acc_gate]."""
+    a, b, [b_gate], [a_scale], [b_scale], [bg_scale], [bias], [residual],
+    o, acc, [acc_gate]."""
     it = iter(refs)
     a_ref = next(it)
     b_ref = next(it)
     bg_ref = next(it) if epilogue.has_gate else None
+    as_ref = next(it) if epilogue.a_scale else None
+    bs_ref = next(it) if epilogue.b_scale else None
+    bgs_ref = next(it) if (epilogue.has_gate and epilogue.b_scale) else None
     bias_ref = next(it) if epilogue.bias else None
     res_ref = next(it) if epilogue.residual else None
     o_ref = next(it)
@@ -161,21 +219,32 @@ def _fused_kernel(*refs, nk: int, out_dtype, epilogue: Epilogue):
         if accg_ref is not None:
             accg_ref[...] = jnp.zeros_like(accg_ref)
 
-    # mxfmacc: one systolic-tile FMA chain into the resident accumulator.
+    # mxfmacc: one systolic-tile FMA chain into the resident accumulator —
+    # narrow (int8/fp8) payloads take the multi-precision datapath of
+    # dot_f32; the accumulator is f32 regardless of operand width.
     a_blk = a_ref[...]
-    acc_ref[...] += jnp.dot(a_blk, b_ref[...], preferred_element_type=jnp.float32)
+    acc_ref[...] += dot_f32(a_blk, b_ref[...])
     if accg_ref is not None:
-        accg_ref[...] += jnp.dot(
-            a_blk, bg_ref[...], preferred_element_type=jnp.float32
-        )
+        accg_ref[...] += dot_f32(a_blk, bg_ref[...])
 
     @pl.when(k == nk - 1)
     def _store():  # single write-back, with the epilogue applied in VMEM
         acc = acc_ref[...]
+        # dequant first: scales are constant along K, so applying them to
+        # the finished accumulator == applying them per-FMA, at 1/nk cost.
+        if as_ref is not None:
+            acc = acc * as_ref[...]
+        if bs_ref is not None:
+            acc = acc * bs_ref[...]
         if bias_ref is not None:
             acc = acc + bias_ref[...].astype(jnp.float32)
         if epilogue.has_gate:
-            acc = jax.nn.silu(accg_ref[...]) * acc
+            gate = accg_ref[...]
+            if as_ref is not None:
+                gate = gate * as_ref[...]
+            if bgs_ref is not None:
+                gate = gate * bgs_ref[...]
+            acc = jax.nn.silu(gate) * acc
         else:
             acc = apply_activation(acc, epilogue.activation)
         if res_ref is not None:
@@ -205,6 +274,9 @@ def mx_matmul_fused(
     b_gate: Optional[jax.Array] = None,
     bias: Optional[jax.Array] = None,
     residual: Optional[jax.Array] = None,
+    a_scale: Optional[jax.Array] = None,
+    b_scale: Optional[jax.Array] = None,
+    bg_scale: Optional[jax.Array] = None,
     bm: int = 128,
     bn: int = 128,
     bk: int = 128,
@@ -214,6 +286,13 @@ def mx_matmul_fused(
     """D = epilogue(A @ B), with the epilogue fused into the single final-k
     write-back.  a: (M, K), b: (K, N); bias: (N,); residual: (M, N);
     b_gate: (K, N) when epilogue.activation == "swiglu".
+
+    Quantized operands: a/b/b_gate carry narrow payloads (int8/fp8 — the
+    quantized VALUES), with per-row ``a_scale`` (M, 1) and per-column
+    ``b_scale`` / ``bg_scale`` (1, N) f32 dequant scales applied at the
+    write-back (see kernels/quant.quantize_operand; per-tensor scales are
+    pre-broadcast to the same layout).  out_dtype defaults to a.dtype —
+    always pass it explicitly for quantized payloads.
     """
     if a.ndim != 2 or b.ndim != 2:
         raise ValueError(f"mx_matmul expects 2-D operands, got {a.shape}, {b.shape}")
@@ -223,6 +302,13 @@ def mx_matmul_fused(
         raise ValueError("bias operand must match epilogue.bias")
     if epilogue.residual != (residual is not None):
         raise ValueError("residual operand must match epilogue.residual")
+    if epilogue.a_scale != (a_scale is not None):
+        raise ValueError("a_scale operand must match epilogue.a_scale")
+    if epilogue.b_scale != (b_scale is not None):
+        raise ValueError("b_scale operand must match epilogue.b_scale")
+    if (bg_scale is not None) != (epilogue.has_gate and epilogue.b_scale):
+        raise ValueError("bg_scale must be given iff the epilogue is gated "
+                         "AND b_scale is set")
     M, K = a.shape
     K2, N = b.shape
     assert K == K2, (a.shape, b.shape)
@@ -246,6 +332,17 @@ def mx_matmul_fused(
         in_specs.append(pl.BlockSpec((bk_, bn_), lambda i, j, k: (k, j)))
         operands.append(_pad_to(b_gate, bk_, bn_))
         scratch.append(pltpu.VMEM((bm_, bn_), jnp.float32))
+    if epilogue.a_scale:
+        # (M, 1) per-row scale panel rides with the i tile (padded rows of
+        # A are zero, so their scale value is irrelevant).
+        in_specs.append(pl.BlockSpec((bm_, 1), lambda i, j, k: (i, 0)))
+        operands.append(_pad_to(a_scale.astype(jnp.float32), bm_, 1))
+    if epilogue.b_scale:
+        in_specs.append(pl.BlockSpec((1, bn_), lambda i, j, k: (0, j)))
+        operands.append(_pad_to(b_scale.astype(jnp.float32), 1, bn_))
+        if epilogue.has_gate:
+            in_specs.append(pl.BlockSpec((1, bn_), lambda i, j, k: (0, j)))
+            operands.append(_pad_to(bg_scale.astype(jnp.float32), 1, bn_))
     if epilogue.bias:
         # (N,) -> (1, N): the bias block rides along with the (i, j) tile and
         # is consumed only at the final-k store.

@@ -1,0 +1,157 @@
+"""Quantize/dequantize helpers shared by the MX kernels and optim.compression.
+
+One implementation of symmetric-scale narrow-operand quantization, consumed
+from three directions:
+
+  - ``quantize_operand`` prepares a GEMM operand for the MX kernels: the
+    payload in the target dtype plus an f32 scale shaped so the kernel's
+    BlockSpec can stream it to the write-back — (M, 1) for the A operand
+    (per output row), (1, N) for B (per output column), (G, 1, N) for the
+    grouped per-expert weights.  Scales are constant along K by
+    construction, which is what lets the dequant multiply ride the single
+    final-k write-back (see core/precision.py).
+  - ``quantize_int8_tensor`` / ``dequantize`` are the per-tensor wire
+    format the gradient-compression path uses (optim/compression.py is a
+    thin re-export; same format as its original local copy: int8 payload,
+    scalar f32 scale = amax/127, clip to ±127).
+  - ``executed_gemm_bytes`` derives the as-executed HBM byte count of one
+    kernel launch from the CONCRETE operands and grid (padded shapes,
+    actual itemsizes, scale sidecars) — the "measured" side that
+    benchmarks/tests compare against the transfer model's prediction.
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+if TYPE_CHECKING:  # import-free at runtime: core.ops imports this module,
+    from ..core.precision import QuantSpec  # and core.precision sits under
+    # core/__init__ — a runtime import here would close that cycle.
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+# ---------------------------------------------------------------------------
+# core symmetric quantization
+# ---------------------------------------------------------------------------
+
+
+def compute_scale(x: jax.Array, qmax: float, axis=None) -> jax.Array:
+    """Symmetric scale: amax/qmax over `axis` (keepdims), 1.0 where amax==0."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis, keepdims=axis is not None)
+    return jnp.where(amax > 0, amax / qmax, 1.0).astype(jnp.float32)
+
+
+def quantize(x: jax.Array, spec: "QuantSpec", *, axis=None) -> Tuple[jax.Array, jax.Array]:
+    """(payload, scale) for a quantized spec.  `axis` is the reduction axis
+    of the amax (None = per-tensor).  int8 rounds-to-nearest and clips to
+    ±127; fp8 clips to ±max-finite then casts (e4m3 overflow is NaN)."""
+    if not spec.quantized:
+        raise ValueError(f"spec {spec} is cast-only; nothing to quantize")
+    qmax = spec.qmax
+    scale = compute_scale(x, qmax, axis=axis)
+    scaled = x.astype(jnp.float32) / scale
+    if spec.dtype == "int8":
+        q = jnp.clip(jnp.round(scaled), -qmax, qmax).astype(jnp.int8)
+    else:
+        q = jnp.clip(scaled, -qmax, qmax).astype(spec.jnp_dtype)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    """f32 reconstruction; broadcasting covers every scale granularity."""
+    return q.astype(jnp.float32) * scale
+
+
+# ---------------------------------------------------------------------------
+# GEMM-operand entry point
+# ---------------------------------------------------------------------------
+
+
+def quantize_operand(
+    x: jax.Array, spec: "QuantSpec", operand: str
+) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """Apply one QuantSpec to a GEMM operand.
+
+    operand "a": (..., M, K) activations — tile scales per output ROW,
+    returned shaped (..., M, 1).  operand "b": (..., K, N) weights — tile
+    scales per output COLUMN, shaped (..., 1, N).  "tensor" granularity
+    computes one scale and broadcasts it to the same tile shape, so the
+    kernels see one uniform scale layout.  Cast-only specs (f32/bf16)
+    return (cast payload, None).
+    """
+    if operand not in ("a", "b"):
+        raise ValueError(f"operand must be 'a' or 'b', got {operand!r}")
+    if not spec.quantized:
+        if spec.dtype == "f32" or jnp.dtype(x.dtype) == jnp.dtype(spec.jnp_dtype):
+            return x, None
+        return x.astype(spec.jnp_dtype), None
+    k_axis = x.ndim - 1 if operand == "a" else x.ndim - 2
+    if spec.granularity == "tile":
+        return quantize(x, spec, axis=k_axis)
+    q, scale = quantize(x, spec, axis=None)
+    tile_shape = list(x.shape)
+    tile_shape[k_axis] = 1
+    return q, jnp.broadcast_to(jnp.reshape(scale, (1,) * x.ndim), tile_shape)
+
+
+# ---------------------------------------------------------------------------
+# per-tensor int8 wire format (gradient compression)
+# ---------------------------------------------------------------------------
+
+def quantize_int8_tensor(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8: (int8 payload, scalar f32 scale).
+    The wire format of the cross-pod gradient all-reduce."""
+    scale = compute_scale(x, 127.0, axis=None)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+# ---------------------------------------------------------------------------
+# as-executed traffic accounting
+# ---------------------------------------------------------------------------
+
+
+def executed_gemm_bytes(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    bm: int,
+    bn: int,
+    bk: int,
+    out_itemsize: int,
+    scales: Tuple[Optional[jax.Array], ...] = (),
+) -> int:
+    """HBM bytes one mx_matmul launch actually moves, derived from the
+    CONCRETE operands and grid: padded shapes, real payload itemsizes, one
+    A-panel pass per N-tile / one B-panel pass per M-tile (the BlockSpec
+    revisit structure), single M*N write-back, plus the scale sidecars
+    (each scale panel rides with its (i, j) tile once per revisit).
+
+    This is the "measured" side of the model-vs-measured agreement check:
+    it knows about padding and scale traffic, which the analytic
+    `PallasGemmTiling.hbm_bytes` (unpadded problem, payloads only)
+    deliberately ignores — the two must agree within the padding+scale
+    overhead (benchmarks assert <10% on aligned problems).
+    """
+    M, K = a.shape[-2], a.shape[-1]
+    N = b.shape[-1]
+    bm_, bn_, bk_ = min(bm, M), min(bn, N), min(bk, K)
+    nm, nn, nk = _ceil_div(M, bm_), _ceil_div(N, bn_), _ceil_div(K, bk_)
+    Mp, Np, Kp = nm * bm_, nn * bn_, nk * bk_
+    total = (
+        nn * Mp * Kp * a.dtype.itemsize   # A panel re-read per N-tile
+        + nm * Kp * Np * b.dtype.itemsize  # B panel re-read per M-tile
+        + Mp * Np * out_itemsize           # the single write-back
+    )
+    for s in scales:
+        if s is None:
+            continue
+        # a scale panel is (M, 1) or (1, N): revisited once per opposite tile
+        revisits = nn if s.shape[-1] == 1 else nm
+        total += revisits * int(s.size) * s.dtype.itemsize
+    return int(total)

@@ -40,7 +40,8 @@ from ..core.hlo_census import census
 from ..core.roofline import (
     HBM_BW, ICI_BW, PEAK_FLOPS_BF16, RooflineReport, parse_collective_bytes,
 )
-from ..core.transfer_model import GemmProblem, RingCollectiveGemm
+from ..core.precision import resolve_precision
+from ..core.transfer_model import GemmProblem, PallasGemmTiling, RingCollectiveGemm
 from ..launch.mesh import make_production_mesh
 from ..launch.specs import cell_specs
 from ..launch.steps import make_prefill_step, make_serve_step, make_train_step
@@ -78,6 +79,55 @@ def collective_gemm_reports(cfg, mesh, tokens_per_step: int) -> dict:
     for name, (mode, prob) in gemms.items():
         ring = RingCollectiveGemm(mode=mode, axis_size=P)
         out[name] = ring.report(prob, ici_bw=ICI_BW, peak_flops=PEAK_FLOPS_BF16)
+    return out
+
+
+def quantized_gemm_reports(cfg, tokens_per_step: int) -> dict:
+    """Per-layer quantized-traffic model for the block projections: one
+    record per projection kind with the policy's per-operand HBM bytes and
+    the narrow-operand traffic CREDIT vs the bf16 baseline (elem_bytes=2,
+    the roofline's operating point).
+
+    ``active`` marks whether the config actually declares the policy
+    (cfg.precision != "none"); when it doesn't, the report is the
+    counterfactual for the default "int8" policy (weights int8 per-tile,
+    activations bf16) so every dryrun spec carries the int8 credit the
+    overlap roofline would gain from narrow operands."""
+    name = getattr(cfg, "precision", "none")
+    active = name not in ("none", "f32")
+    prec = resolve_precision(name if active else "int8")
+    if prec is None:
+        return {}
+    M = max(tokens_per_step, 1)
+    d, hd = cfg.d_model, cfg.hd
+    ff = cfg.d_ff or 4 * d
+    gemms = {
+        "qkv": (M, (cfg.n_heads + 2 * cfg.n_kv_heads) * hd, d),
+        "attn_out": (M, d, cfg.n_heads * hd),
+        "mlp_up": (M, 2 * ff if cfg.activation == "silu" else ff, d),
+        "mlp_down": (M, d, ff),
+    }
+    tiling = PallasGemmTiling(128, 128, 128)
+    out = {"policy": name if active else "int8", "active": active}
+    total_q = total_base = 0
+    for gname, (m, n, k) in gemms.items():
+        base = GemmProblem(m, n, k, 2)  # bf16 activations & weights
+        quant = GemmProblem(m, n, k, prec.a_bytes(2),
+                            b_bytes=prec.b_bytes(2), out_bytes=2)
+        qb, bb = tiling.hbm_bytes(quant), tiling.hbm_bytes(base)
+        total_q += qb
+        total_base += bb
+        out[gname] = {
+            "a_bytes": quant.a_elem_bytes, "b_bytes": quant.b_elem_bytes,
+            "out_bytes": quant.out_elem_bytes,
+            "hbm_bytes": qb, "hbm_bytes_bf16": bb,
+            "traffic_credit_bytes": bb - qb,
+            "bytes_ratio": qb / bb if bb else 1.0,
+        }
+    out["total_hbm_bytes"] = total_q
+    out["total_hbm_bytes_bf16"] = total_base
+    out["total_traffic_credit_bytes"] = total_base - total_q
+    out["bytes_ratio"] = total_q / total_base if total_base else 1.0
     return out
 
 
@@ -203,6 +253,7 @@ def lower_cell(arch: str, shape: str, mesh_kind: str, *, extra: dict | None = No
         "roofline": report.as_dict(),
         "collective_gemms": collective_gemm_reports(
             cfg, mesh, specs.tokens_per_step),
+        "quantized_gemms": quantized_gemm_reports(cfg, specs.tokens_per_step),
         "n_params": cfg.n_params(),
         "n_active_params": n_active,
         "tokens_per_step": specs.tokens_per_step,
@@ -227,6 +278,9 @@ def main():
     ap.add_argument("--moe-groups", type=int, default=None)
     ap.add_argument("--moe-capacity", type=float, default=None)
     ap.add_argument("--ssm-chunk", type=int, default=None)
+    ap.add_argument("--precision", default=None,
+                    help="per-projection quantization policy name "
+                         "(core/precision.py registry, e.g. int8)")
     ap.add_argument("--tag", default="", help="suffix for perf-variant files")
     args = ap.parse_args()
 
@@ -254,6 +308,8 @@ def main():
         cfg_over["moe_capacity_factor"] = args.moe_capacity
     if args.ssm_chunk:
         cfg_over["ssm_chunk"] = args.ssm_chunk
+    if args.precision:
+        cfg_over["precision"] = args.precision
     extra = {
         "microbatch": args.microbatch,
         "seq_parallel": args.seq_parallel,

@@ -59,6 +59,11 @@ class Linear(Module):
     # "reduce_scatter" (w row-sharded) — routes through the overlapped ring
     # collective matmul when a collective_policy context is active.
     tp_mode: Optional[str] = None
+    # Per-projection precision declaration (core.precision registry name,
+    # e.g. "int8" = weights int8 per-tile / activations bf16).  None/"none"
+    # keeps full precision; the ambient use_precision() context still
+    # applies when unset.
+    precision: Optional[str] = None
 
     def build(self, mk: Builder):
         p = {"w": mk.param("w", (self.d_in, self.d_out), self.axes)}
@@ -69,7 +74,8 @@ class Linear(Module):
     def __call__(self, p, x):
         # bias rides the kernel's final-k write-back on the Pallas path
         return ops.linear(x, p["w"], p["b"] if self.bias else None,
-                          out_dtype=x.dtype, tp_mode=self.tp_mode)
+                          out_dtype=x.dtype, tp_mode=self.tp_mode,
+                          precision=self.precision)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -187,6 +193,9 @@ class Attention(Module):
     causal: bool = True
     chunked_threshold: int = 2048  # switch to online-softmax beyond this
     use_rope: bool = True
+    # per-projection precision (qkv/out projections; attention scores stay
+    # full precision — the softmax is the numerically fragile part)
+    precision: Optional[str] = None
 
     @property
     def hd(self) -> int:
@@ -215,9 +224,12 @@ class Attention(Module):
         # qkv are column-sharded (heads on "model"): under a collective
         # policy they run as ring all-gather ⊗ matmul (sequence chunks
         # stream around the ring while the resident chunk multiplies).
-        q = ops.linear(x, p["wq"], bq, out_dtype=x.dtype, tp_mode="allgather")
-        k = ops.linear(x, p["wk"], bk, out_dtype=x.dtype, tp_mode="allgather")
-        v = ops.linear(x, p["wv"], bv, out_dtype=x.dtype, tp_mode="allgather")
+        q = ops.linear(x, p["wq"], bq, out_dtype=x.dtype, tp_mode="allgather",
+                       precision=self.precision)
+        k = ops.linear(x, p["wk"], bk, out_dtype=x.dtype, tp_mode="allgather",
+                       precision=self.precision)
+        v = ops.linear(x, p["wv"], bv, out_dtype=x.dtype, tp_mode="allgather",
+                       precision=self.precision)
         q = q.reshape(b, s, self.n_heads, hd)
         k = k.reshape(b, s, self.n_kv_heads, hd)
         v = v.reshape(b, s, self.n_kv_heads, hd)
@@ -252,7 +264,7 @@ class Attention(Module):
         # reduce-scatter — partial sums travel the ring, the residual add
         # fuses into the final ring step's write-back.
         return ops.linear(o, p["wo"], residual=residual, out_dtype=x.dtype,
-                          tp_mode="reduce_scatter")
+                          tp_mode="reduce_scatter", precision=self.precision)
 
     # ---------------- KV-cache decode path ----------------
 
@@ -313,7 +325,7 @@ class Attention(Module):
         o = jnp.einsum("bhqk,bkhd->bqhd", pr, v)
         o = o.reshape(b, 1, self.n_heads * d)
         out = ops.linear(o, p["wo"], residual=residual, out_dtype=x.dtype,
-                         tp_mode="reduce_scatter")
+                         tp_mode="reduce_scatter", precision=self.precision)
         return out, {"k": k_cache, "v": v_cache}
 
 
@@ -322,6 +334,7 @@ class MLP(Module):
     d_model: int
     d_ff: int
     activation: str = "silu"  # "silu" => gated (SwiGLU); "gelu"/"relu" => plain
+    precision: Optional[str] = None  # per-projection precision (up/gate/down)
 
     @property
     def gated(self) -> bool:
@@ -346,10 +359,11 @@ class MLP(Module):
         # kernels/mx_collective_matmul; inert without a collective_policy).
         if self.gated:
             h = ops.linear(x, p["wi"], w_gate=p["wg"], activation="swiglu",
-                           out_dtype=x.dtype, tp_mode="allgather")
+                           out_dtype=x.dtype, tp_mode="allgather",
+                           precision=self.precision)
         else:
             act = self.activation if self.activation in ("gelu", "relu") else "relu"
             h = ops.linear(x, p["wi"], activation=act, out_dtype=x.dtype,
-                           tp_mode="allgather")
+                           tp_mode="allgather", precision=self.precision)
         return ops.linear(h, p["wo"], residual=residual, out_dtype=x.dtype,
-                          tp_mode="reduce_scatter")
+                          tp_mode="reduce_scatter", precision=self.precision)

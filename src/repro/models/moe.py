@@ -42,6 +42,11 @@ class MoE(Module):
     capacity_factor: float = 1.25
     activation: str = "silu"
     n_groups: int = 1  # data-shard groups; set to the DP shard count at scale
+    # Per-projection precision for the expert GEMMs (core.precision
+    # registry name).  The router stays full precision — top-k routing is
+    # the decision point, not the traffic.  Grouped dispatch quantizes
+    # weights PER EXPERT (scales steered by the group-offset prefetch).
+    precision: Optional[str] = None
 
     def build(self, mk: Builder):
         E, D, F = self.n_experts, self.d_model, self.d_ff
@@ -94,15 +99,27 @@ class MoE(Module):
                 if wg is not None:
                     h = ops.linear(xe[e], wi[e], w_gate=wg[e],
                                    activation="swiglu", policy=policy,
-                                   tp_mode="allgather")
+                                   tp_mode="allgather",
+                                   precision=self.precision)
                 else:
                     h = ops.linear(xe[e], wi[e], activation="gelu",
-                                   policy=policy, tp_mode="allgather")
+                                   policy=policy, tp_mode="allgather",
+                                   precision=self.precision)
                 outs.append(ops.linear(h, wo[e], policy=policy,
-                                       tp_mode="reduce_scatter"))
+                                       tp_mode="reduce_scatter",
+                                       precision=self.precision))
             y = jnp.stack(outs).reshape(E, G, C, D)
             return y.transpose(1, 0, 2, 3)
-        if policy.backend == "pallas_mx":
+        # A declared (or ambient) expert precision also routes the xla
+        # backend through ops.grouped_matmul (dequantized reference) so
+        # every backend sees the same quantized weights, not a silent
+        # full-precision fallback in the batched einsum below.
+        from ..core.precision import current_precision, resolve_precision
+
+        prec_active = resolve_precision(self.precision)
+        if prec_active is None:  # "none"/None = no declaration: ambient applies
+            prec_active = current_precision()
+        if policy.backend == "pallas_mx" or prec_active is not None:
             sizes = jnp.full((E,), C, dtype=jnp.int32)
             wi = p["wi"].astype(buf.dtype)
             wo = p["wo"].astype(buf.dtype)
@@ -113,12 +130,15 @@ class MoE(Module):
                     h = ops.grouped_matmul(
                         xg, wi, sizes, activation="swiglu",
                         w_gate=p["wg"].astype(buf.dtype), policy=policy,
+                        precision=self.precision,
                     )
                 else:
                     h = ops.grouped_matmul(
-                        xg, wi, sizes, activation="gelu", policy=policy
+                        xg, wi, sizes, activation="gelu", policy=policy,
+                        precision=self.precision,
                     )
-                y = ops.grouped_matmul(h, wo, sizes, policy=policy)
+                y = ops.grouped_matmul(h, wo, sizes, policy=policy,
+                                       precision=self.precision)
                 outs.append(y.reshape(E, C, D))
             return jnp.stack(outs)
         h = jnp.einsum("gecd,edf->gecf", buf, p["wi"].astype(buf.dtype),

@@ -51,12 +51,15 @@ class TransformerBlock(Module):
     cross_attention: bool = False
 
     chunk_threshold: int = 2048
+    # per-projection precision declaration, threaded into every attention /
+    # MLP / MoE projection of this block (core.precision registry name)
+    precision: Optional[str] = None
 
     def _attn(self) -> Attention:
         return Attention(
             self.d_model, self.n_heads, self.n_kv_heads, self.head_dim,
             qkv_bias=self.qkv_bias, rope_theta=self.rope_theta, causal=self.causal,
-            chunked_threshold=self.chunk_threshold,
+            chunked_threshold=self.chunk_threshold, precision=self.precision,
         )
 
     moe_groups: int = 1
@@ -66,8 +69,10 @@ class TransformerBlock(Module):
         if self.use_moe:
             return MoE(self.d_model, self.d_ff, self.n_experts, self.top_k,
                        activation=self.activation, n_groups=self.moe_groups,
-                       capacity_factor=self.moe_capacity_factor)
-        return MLP(self.d_model, self.d_ff, activation=self.activation)
+                       capacity_factor=self.moe_capacity_factor,
+                       precision=self.precision)
+        return MLP(self.d_model, self.d_ff, activation=self.activation,
+                   precision=self.precision)
 
     def build(self, mk: Builder):
         p = {
@@ -153,6 +158,7 @@ class Segment:
 
 def make_block(kind: str, cfg) -> Module:
     """cfg is an ArchConfig (configs/base.py)."""
+    prec = getattr(cfg, "precision", None)
     if kind in ("dense", "moe"):
         return TransformerBlock(
             cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_ff,
@@ -160,14 +166,14 @@ def make_block(kind: str, cfg) -> Module:
             rope_theta=cfg.rope_theta, use_moe=(kind == "moe"),
             n_experts=cfg.n_experts, top_k=cfg.top_k, activation=cfg.activation,
             chunk_threshold=cfg.attn_chunk_threshold, moe_groups=cfg.moe_groups,
-            moe_capacity_factor=cfg.moe_capacity_factor,
+            moe_capacity_factor=cfg.moe_capacity_factor, precision=prec,
         )
     if kind == "encdec":
         return TransformerBlock(
             cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_ff,
             head_dim=cfg.head_dim, rope_theta=cfg.rope_theta,
             activation=cfg.activation, cross_attention=True,
-            chunk_threshold=cfg.attn_chunk_threshold,
+            chunk_threshold=cfg.attn_chunk_threshold, precision=prec,
         )
     if kind == "mamba2":
         return Mamba2Block(cfg.d_model, d_state=cfg.ssm_state, chunk=cfg.ssm_chunk)

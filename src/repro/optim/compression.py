@@ -12,29 +12,23 @@ Two entry points:
     (hypothesis-tested: error-feedback residual keeps mean error ~0);
   - `compressed_grad_sync`: a shard_map psum over a named axis where the
     wire format is int8 — drop-in for the pod-axis sync in launch/train.py.
+
+The quantizer itself lives in `kernels/quant.py` (ONE symmetric int8
+implementation serves the MX kernels' operand quantization and this wire
+format); this module re-exports it under its historical names.  Wire
+format unchanged: int8 payload, scalar f32 scale = amax/127, clip ±127.
 """
 from __future__ import annotations
 
 import functools
-from typing import Any, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ..kernels.quant import dequantize, quantize_int8_tensor as quantize  # noqa: F401
 from ..parallel.sharding import shard_map
-
-
-def quantize(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
-    """Symmetric per-tensor int8. Returns (q, scale)."""
-    amax = jnp.max(jnp.abs(x)).astype(jnp.float32)
-    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
-    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
-    return q, scale
-
-
-def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
-    return q.astype(jnp.float32) * scale
 
 
 def compress_with_feedback(g: jax.Array, err: jax.Array):
