@@ -1,0 +1,214 @@
+"""Dense vs paged decode benchmark -> BENCH_decode.json.
+
+Sweeps live-token fill ratios of the serving KV cache and records, per
+fill:
+
+  - modeled decode-step KV bytes from `transfer_model.PagedKVDecode`
+    (dense (slots, max_len) rectangle vs pages actually resident) — the
+    headline claim: paged bytes scale with live tokens, not max_len;
+  - measured wall time of one jitted decode step on CPU for both backends
+    (`model.decode_step` vs `model.decode_step_paged` with the page table
+    sliced to the pages in use — the same width bucketing the batcher
+    applies), min-of-iters to suppress scheduler noise;
+  - an end-to-end churn run: the same request stream through the dense and
+    paged `ContinuousBatcher` (the paged admission path skips the dense
+    backend's O(max_len) per-eviction cache zeroing).
+
+Acceptance tracked by CI: paged moves < 0.5x the dense-cache bytes at
+every fill <= 50%, and the paged step is no slower than dense at 100%
+fill (where both attend over the full context) within a small CPU-timing
+tolerance.
+
+Mirrors the kernel_bench/BENCH_quant pattern: CSV rows on stdout, JSON
+artifact at the repo root.
+
+  PYTHONPATH=src python -m benchmarks.decode_bench [--batch 8]
+      [--max-len 256] [--page-size 8] [--iters 5]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.transfer_model import PagedKVDecode
+from repro.models import build_model
+from repro.runtime.batcher import ContinuousBatcher, Request, _next_pow2
+from repro.runtime.kv_pages import PagePool
+
+BENCH_DECODE_OUT = Path(__file__).resolve().parent.parent / "BENCH_decode.json"
+
+FILLS = (0.25, 0.45, 0.75, 1.0)
+
+
+def _time_pair(fn_a, args_a, fn_b, args_b, iters: int = 8):
+    """Interleaved min-of-iters wall times (us) for two step functions.
+
+    Alternating A/B rounds under one scheduler state keeps the RATIO
+    honest on a noisy shared CPU — back-to-back blocks of each function
+    can see 2-3x different machine load.  Every call blocks on its output
+    (async dispatch would measure enqueue time)."""
+    jax.block_until_ready(fn_a(*args_a))  # compile + warm
+    jax.block_until_ready(fn_b(*args_b))
+    best_a = best_b = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_a(*args_a))
+        best_a = min(best_a, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_b(*args_b))
+        best_b = min(best_b, time.perf_counter() - t0)
+    return best_a * 1e6, best_b * 1e6
+
+
+def _fill_lengths(fill: float, batch: int, max_len: int) -> list[int]:
+    """Ragged per-slot live lengths averaging ~fill*max_len (deterministic
+    spread of +-12.5% around the mean, clipped to [1, max_len])."""
+    base = fill * max_len
+    spread = np.linspace(-0.125, 0.125, batch) * max_len * min(fill, 1.0)
+    return [int(np.clip(round(base + s), 1, max_len)) for s in spread]
+
+
+def run(arch: str, batch: int, max_len: int, page_size: int, iters: int):
+    cfg = get_config(arch + "-smoke")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n_attn = sum(n for kind, n in cfg.blocks if kind in ("dense", "moe"))
+    traffic = PagedKVDecode(
+        batch_slots=batch, max_len=max_len, page_size=page_size,
+        n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd, n_layers=n_attn,
+        kv_bytes=4,  # the f32 smoke cache
+    )
+    width = -(-max_len // page_size)
+
+    dense_step = jax.jit(lambda p, t, c, i: model.decode_step(p, t, c, i))
+    paged_step = jax.jit(
+        lambda p, t, c, i, pt, ln: model.decode_step_paged(p, t, c, i, pt, ln))
+
+    rng = np.random.default_rng(0)
+    rows, fills_out = [], {}
+    for fill in FILLS:
+        lengths = _fill_lengths(fill, batch, max_len)
+        token = jnp.asarray(rng.integers(0, cfg.vocab, (batch, 1)), jnp.int32)
+        index = jnp.asarray([ln - 1 for ln in lengths], jnp.int32)
+
+        # dense: the (slots, max_len) rectangle, streamed whole every step
+        dcache = model.make_cache(batch, max_len, mode="init", dtype=jnp.float32)
+
+        # paged: pool sized for the rectangle; the table is sliced to the
+        # pages in use (power-of-two bucketed, as the batcher does)
+        pool = PagePool(batch * width, page_size)
+        for s, ln in enumerate(lengths):
+            pool.reserve(s, ln)
+            pool.set_length(s, ln)
+        # the batcher's own width bucketing, so the benchmark times the
+        # table shape the real scheduler would produce
+        w = min(_next_pow2(pool.pages_for(max(lengths))), width)
+        table = jnp.asarray(pool.page_table(batch, w))
+        lns = jnp.asarray(pool.lengths(batch))
+        pcache = model.make_paged_cache(pool.total_pages, page_size,
+                                        mode="init", dtype=jnp.float32)
+        t_dense, t_paged = _time_pair(
+            dense_step, (params, token, dcache, index),
+            paged_step, (params, token, pcache, index, table, lns),
+            iters=iters,
+        )
+
+        rec = traffic.report(lengths)
+        rec.update({
+            "lengths": lengths,
+            "table_width": w,
+            "dense_step_us": t_dense,
+            "paged_step_us": t_paged,
+            "step_time_ratio": t_paged / t_dense if t_dense else 1.0,
+        })
+        fills_out[f"{fill:.2f}"] = rec
+        rows.append((f"decode_dense_fill{fill:.2f}", t_dense,
+                     f"bytes={rec['dense_step_bytes']}"))
+        rows.append((f"decode_paged_fill{fill:.2f}", t_paged,
+                     f"bytes={rec['paged_step_bytes']}"
+                     f"_x{rec['bytes_ratio']:.3f}_dense"))
+
+    # ---- end-to-end churn: same request stream through both backends ----
+    def _requests():
+        r = np.random.default_rng(7)
+        return [Request(rid=i,
+                        prompt=r.integers(0, cfg.vocab,
+                                          int(r.integers(2, max(3, max_len // 4)))
+                                          ).astype(np.int32),
+                        max_new=max(2, max_len // 8))
+                for i in range(2 * batch)]
+
+    churn = {}
+    for mode, kw in (("dense", {}), ("paged", {"paged": True,
+                                               "page_size": page_size})):
+        # two passes through ONE batcher: the first warms its jitted step
+        # (the paged backend compiles one step per table-width bucket),
+        # the second is timed
+        b = ContinuousBatcher(model, params, batch_slots=batch,
+                              max_len=max_len, **kw)
+        for _pass in range(2):
+            for r in _requests():
+                b.submit(r)
+            t0 = time.perf_counter()
+            fin = b.run_to_completion()
+            wall = time.perf_counter() - t0
+        toks = sum(len(r.prompt) + len(r.output) for r in fin.values())
+        churn[mode] = {"wall_s": wall, "tokens": toks,
+                       "tok_per_s": toks / wall if wall else 0.0}
+        if mode == "paged":
+            churn[mode]["pool"] = b.pool_stats().as_dict()
+    rows.append(("decode_churn_dense", churn["dense"]["wall_s"] * 1e6,
+                 f"{churn['dense']['tok_per_s']:.1f}tok/s"))
+    rows.append(("decode_churn_paged", churn["paged"]["wall_s"] * 1e6,
+                 f"{churn['paged']['tok_per_s']:.1f}tok/s"))
+
+    # ---- acceptance checks ----
+    low_fill_ratios = {k: v["bytes_ratio"] for k, v in fills_out.items()
+                       if v["fill_ratio"] <= 0.5}
+    full = fills_out[f"{FILLS[-1]:.2f}"]
+    checks = {
+        "bytes_below_half_at_le50_fill": bool(
+            low_fill_ratios and max(low_fill_ratios.values()) < 0.5),
+        "low_fill_bytes_ratios": low_fill_ratios,
+        "step_time_ratio_at_full": full["step_time_ratio"],
+        # 15% CPU-noise tolerance on the timing check; the bytes check is exact
+        "step_time_ok_at_full": bool(full["step_time_ratio"] <= 1.15),
+    }
+    result = {
+        "arch": arch, "batch_slots": batch, "max_len": max_len,
+        "page_size": page_size, "n_attn_layers": n_attn,
+        "cache_dtype": "float32", "backend": "xla(cpu)",
+        "fills": fills_out, "churn": churn, "checks": checks,
+    }
+    BENCH_DECODE_OUT.write_text(json.dumps(result, indent=2))
+    rows.append(("decode_artifact", 0.0, f"wrote_{BENCH_DECODE_OUT.name}"))
+    assert checks["bytes_below_half_at_le50_fill"], (
+        f"paged bytes not < 0.5x dense at <=50% fill: {low_fill_ratios}")
+    assert checks["step_time_ok_at_full"], (
+        f"paged step {full['step_time_ratio']:.2f}x dense at 100% fill")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--iters", type=int, default=5)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for name, us, derived in run(args.arch, args.batch, args.max_len,
+                                 args.page_size, args.iters):
+        print(f"{name},{us:.2f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -234,6 +234,17 @@ class RooflineReport:
         }
 
 
+def kv_decode_memory_s(step_bytes: float, chips: int = 1,
+                       hbm_bw: float = HBM_BW) -> float:
+    """Memory-term seconds for one decode step's KV-cache traffic (the
+    serving analogue of `RooflineReport.memory_s`).  Decode is memory-bound
+    almost by definition — one token of compute against the whole cached
+    context — so this term IS the step-time lower bound; feed it
+    `transfer_model.PagedKVDecode.{dense,paged}_step_bytes` to price the
+    paged-cache traffic credit in seconds."""
+    return step_bytes / (chips * hbm_bw)
+
+
 def dense_model_flops(n_params: int, tokens: int) -> float:
     """6*N*D training FLOPs (fwd+bwd).  For inference use 2*N*D."""
     return 6.0 * n_params * tokens

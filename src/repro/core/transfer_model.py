@@ -400,6 +400,100 @@ class PallasGemmTiling:
 
 
 # ---------------------------------------------------------------------------
+# Serving mapping: decode-step KV-cache traffic (dense rectangle vs pages)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedKVDecode:
+    """Per-decode-step KV-cache HBM traffic: the dense (slots, max_len)
+    rectangle vs pages actually resident.
+
+    Every decode step's attention must stream the cached K and V exactly
+    once (the flash/online-softmax formulation already guarantees single-
+    pass streaming — the MX inter-k discipline with K := the sequence
+    axis).  What the cache LAYOUT decides is *how many rows* stream:
+
+      dense  — batch_slots * max_len rows, regardless of how short the
+               live sequences are (padding traffic);
+      paged  — sum_i ceil(len_i / page_size) * page_size rows: the pages
+               the page table actually names (runtime/kv_pages), so bytes
+               scale with live tokens + one page of rounding per slot.
+
+    Both layouts additionally write one row per active slot (the new
+    token's K/V).  ``kv_bytes`` is the cache element size; a quantized
+    cache sets ``scale_bytes`` for the per-row dequant sidecar (int8 cache:
+    4-byte f32 scale per head per row, kernels/quant layout).
+    """
+
+    batch_slots: int
+    max_len: int
+    page_size: int
+    n_kv_heads: int
+    head_dim: int
+    n_layers: int = 1
+    kv_bytes: int = 2
+    scale_bytes: int = 0
+
+    @property
+    def row_bytes(self) -> int:
+        """One cached position: K + V across the kv heads (+ scale sidecar)."""
+        payload = 2 * self.n_kv_heads * self.head_dim * self.kv_bytes
+        sidecar = 2 * self.n_kv_heads * self.scale_bytes
+        return payload + sidecar
+
+    def _resident_rows(self, lengths) -> int:
+        ps = self.page_size
+        return sum(_ceil_div(int(l), ps) * ps for l in lengths if int(l) > 0)
+
+    def dense_step_bytes(self, lengths) -> int:
+        """Reads of the full padded rectangle + the live slots' row writes."""
+        n_active = sum(1 for l in lengths if int(l) > 0)
+        rows = self.batch_slots * self.max_len + n_active
+        return rows * self.row_bytes * self.n_layers
+
+    def paged_step_bytes(self, lengths) -> int:
+        """Reads of the resident pages only + the live slots' row writes."""
+        n_active = sum(1 for l in lengths if int(l) > 0)
+        rows = self._resident_rows(lengths) + n_active
+        return rows * self.row_bytes * self.n_layers
+
+    def traffic_ratio(self, lengths) -> float:
+        dense = self.dense_step_bytes(lengths)
+        return self.paged_step_bytes(lengths) / dense if dense else 1.0
+
+    def fill_ratio(self, lengths) -> float:
+        cap = self.batch_slots * self.max_len
+        return sum(int(l) for l in lengths) / cap if cap else 0.0
+
+    def report(self, lengths, *, hbm_bw: Optional[float] = None) -> dict:
+        """Machine-readable record for one batch state (dryrun /
+        benchmarks/decode_bench).  ``hbm_bw`` adds memory-term seconds."""
+        dense = self.dense_step_bytes(lengths)
+        paged = self.paged_step_bytes(lengths)
+        rec = {
+            "batch_slots": self.batch_slots,
+            "max_len": self.max_len,
+            "page_size": self.page_size,
+            "n_layers": self.n_layers,
+            "kv_bytes": self.kv_bytes,
+            "scale_bytes": self.scale_bytes,
+            "fill_ratio": self.fill_ratio(lengths),
+            "live_tokens": int(sum(int(l) for l in lengths)),
+            "resident_pages": int(sum(
+                _ceil_div(int(l), self.page_size) for l in lengths if int(l) > 0)),
+            "dense_step_bytes": dense,
+            "paged_step_bytes": paged,
+            "traffic_credit_bytes": dense - paged,
+            "bytes_ratio": self.traffic_ratio(lengths),
+        }
+        if hbm_bw:
+            rec["dense_memory_s"] = dense / hbm_bw
+            rec["paged_memory_s"] = paged / hbm_bw
+        return rec
+
+
+# ---------------------------------------------------------------------------
 # Cluster mapping: ring collective GEMMs (comm/compute overlap)
 # ---------------------------------------------------------------------------
 

@@ -9,6 +9,7 @@ from .mx_collective_matmul import (
     serialized_matmul_psum,
 )
 from .mx_flash_attention import mx_flash_attention
+from .mx_flash_decode import mx_flash_decode
 from .mx_grouped_matmul import grouped_matmul_reference, mx_grouped_matmul
 from .mx_matmul import Epilogue, mx_matmul, mx_matmul_fused
 from .ssd_scan import ssd_scan
@@ -18,6 +19,7 @@ __all__ = [
     "ref",
     "baseline_matmul",
     "mx_flash_attention",
+    "mx_flash_decode",
     "mx_matmul",
     "mx_matmul_fused",
     "Epilogue",

@@ -1,0 +1,182 @@
+"""Paged split-KV flash decode as an MX-pattern Pallas kernel.
+
+One query token per slot attends over that slot's KV cache *pages*: the
+physical cache is a flat (num_pages, page_size, Hkv, d) pool and each slot
+names its pages through a (slots, W) page table.  The grid walks
+(slot, kv_head, page_slot) with the page table steered through scalar
+prefetch — the SAME construction as the group-offset prefetch in
+`mx_grouped_matmul`: the table rides to SMEM before the kernel body runs,
+so the BlockSpec index maps can point the K/V page DMAs at arbitrary pool
+pages while the current page reduces (the double-buffered page fetch the
+zero-stall papers argue for; Pallas' grid pipeline does the overlap).
+
+The split-KV combine is the paper's inter-k-buffering discipline with
+K := the page axis: online-softmax running statistics (m, l, acc) persist
+in VMEM scratch across the page grid dimension, every resident page
+streams through VMEM exactly once, and the finished output tile is written
+back once at the last page (single write-back; Table II).
+
+Pages PAST a slot's live length are masked by position, not skipped: the
+table pads with the allocator's dump page so every steered DMA is
+in-bounds, and masked lanes contribute exp(-inf) == 0.  An int8 KV cache
+passes per-row dequant scale pages (`k_scale`/`v_scale`) that are steered
+by the same table and applied on the way into the score/value dots.
+
+Oracle: `kernels.ref.paged_decode_ref` (the gather-based jnp formulation,
+which is also the XLA fallback path the model stack uses off-TPU).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ._compat import CompilerParams
+
+
+def _decode_kernel(
+    # scalar-prefetch refs (SMEM):
+    pt_ref, len_ref,
+    # tensor refs:
+    *refs,
+    nj: int, ps: int, scale: float, out_dtype, has_scales: bool,
+):
+    it = iter(refs)
+    q_ref = next(it)
+    k_ref = next(it)
+    v_ref = next(it)
+    ks_ref = next(it) if has_scales else None
+    vs_ref = next(it) if has_scales else None
+    o_ref = next(it)
+    m_ref = next(it)
+    l_ref = next(it)
+    acc_ref = next(it)
+
+    i = pl.program_id(0)  # slot
+    j = pl.program_id(2)  # page slot (split-KV axis)
+
+    @pl.when(j == 0)
+    def _init():  # C-tile reset analogue, per (slot, kv-head)
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)        # (G, d) query groups
+    k = k_ref[0, :, 0].astype(jnp.float32)     # (ps, d) one resident page
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    if has_scales:  # int8 pages: dequant on the way into the dots
+        k = k * ks_ref[0, :, 0][:, None]
+        v = v * vs_ref[0, :, 0][:, None]
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (G, ps)
+    # positions this page slot covers; mask everything past the live length
+    kpos = j * ps + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(kpos < len_ref[i], s, -jnp.inf)
+
+    m_prev = m_ref[...]  # (G, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+    p = jnp.exp(s - m_safe)  # masked lanes: exp(-inf - finite) == 0
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(j == nj - 1)
+    def _store():  # single write-back of the combined split-KV partials
+        o_ref[0, 0] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        ).astype(out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def mx_flash_decode(
+    q: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    page_table: jax.Array,
+    lengths: jax.Array,
+    *,
+    k_scale: jax.Array | None = None,
+    v_scale: jax.Array | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Paged flash decode.  q: (B, H, d) one token per slot; k_pages /
+    v_pages: (P, page_size, Hkv, d) flat page pools; page_table: (B, W)
+    int32 physical page ids (entries past a slot's pages must still be
+    valid ids — the allocator pads with its dump page); lengths: (B,) live
+    token counts (a slot attends over positions [0, lengths[i])); 0 marks
+    a free slot, which produces an all-zero output row.
+
+    GQA: H == Hkv * groups with query head h served by kv head h // groups
+    (the `_repeat_kv` layout).  int8 caches pass `k_scale` / `v_scale` of
+    shape (P, page_size, Hkv) — per-row dequant scales steered by the same
+    page table.  Returns (B, H, d) in q's dtype.
+    """
+    B, H, d = q.shape
+    P, ps, Hkv, d2 = k_pages.shape
+    if d2 != d or v_pages.shape != k_pages.shape:
+        raise ValueError(f"q {q.shape} vs pages {k_pages.shape}/{v_pages.shape}")
+    if H % Hkv:
+        raise ValueError(f"H={H} not a multiple of Hkv={Hkv}")
+    if page_table.ndim != 2 or page_table.shape[0] != B:
+        raise ValueError(f"page_table must be (B, W), got {page_table.shape}")
+    has_scales = k_scale is not None
+    if has_scales != (v_scale is not None):
+        raise ValueError("k_scale and v_scale must be given together")
+    if has_scales and k_scale.shape != (P, ps, Hkv):
+        raise ValueError(
+            f"scales must be (P, ps, Hkv)={(P, ps, Hkv)}, got {k_scale.shape}"
+        )
+    G = H // Hkv
+    W = page_table.shape[1]
+    scale = 1.0 / math.sqrt(d)
+
+    q4 = q.reshape(B, Hkv, G, d)
+    pt = page_table.astype(jnp.int32)
+    ln = lengths.astype(jnp.int32)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, G, d), lambda i, h, j, pt, ln: (i, h, 0, 0)),
+        # K/V page DMAs steered by the prefetched table (cf. grp[l] in
+        # mx_grouped_matmul): page slot j of slot i loads pool page pt[i, j]
+        pl.BlockSpec((1, ps, 1, d), lambda i, h, j, pt, ln: (pt[i, j], 0, h, 0)),
+        pl.BlockSpec((1, ps, 1, d), lambda i, h, j, pt, ln: (pt[i, j], 0, h, 0)),
+    ]
+    operands = [q4, k_pages, v_pages]
+    if has_scales:
+        sspec = pl.BlockSpec((1, ps, 1), lambda i, h, j, pt, ln: (pt[i, j], 0, h))
+        in_specs += [sspec, sspec]
+        operands += [k_scale.astype(jnp.float32), v_scale.astype(jnp.float32)]
+
+    out = pl.pallas_call(
+        functools.partial(
+            _decode_kernel, nj=W, ps=ps, scale=scale, out_dtype=q.dtype,
+            has_scales=has_scales,
+        ),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B, Hkv, W),
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec(
+                (1, 1, G, d), lambda i, h, j, pt, ln: (i, h, 0, 0)
+            ),
+            scratch_shapes=[
+                pltpu.VMEM((G, 1), jnp.float32),  # m — running max
+                pltpu.VMEM((G, 1), jnp.float32),  # l — running normalizer
+                pltpu.VMEM((G, d), jnp.float32),  # acc — the split-KV buffer
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, d), q.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(pt, ln, *operands)
+    return out.reshape(B, H, d)

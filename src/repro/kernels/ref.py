@@ -83,3 +83,45 @@ def flash_attention_ref(q, k, v, *, causal: bool = True, scale=None):
         s = jnp.where(mask, s, -jnp.inf)
     p = jax.nn.softmax(s, axis=-1)
     return (p @ v.astype(jnp.float32)).astype(q.dtype)
+
+
+def paged_decode_ref(q, k_pages, v_pages, page_table, lengths, *,
+                     k_scale=None, v_scale=None):
+    """Gather-based oracle for `mx_flash_decode` — and the XLA fallback the
+    model stack runs off-TPU.
+
+    q: (B, H, d) one token per slot; k_pages / v_pages: (P, ps, Hkv, d)
+    flat page pools; page_table: (B, W) physical page ids; lengths: (B,)
+    live token counts (0 = free slot -> zero output row).  Optional
+    k_scale / v_scale: (P, ps, Hkv) per-row dequant sidecars (int8 cache).
+
+    The gather materializes each slot's logical (W*ps) KV prefix — exactly
+    the padded-cache traffic the paged kernel's steered page DMAs avoid.
+    """
+    B, H, d = q.shape
+    _, ps, Hkv, _ = k_pages.shape
+    G = H // Hkv
+    W = page_table.shape[1]
+    lengths = lengths.astype(jnp.int32)
+
+    k = k_pages[page_table].astype(jnp.float32)  # (B, W, ps, Hkv, d)
+    v = v_pages[page_table].astype(jnp.float32)
+    if k_scale is not None:
+        k = k * k_scale[page_table][..., None]
+        v = v * v_scale[page_table][..., None]
+    k = k.reshape(B, W * ps, Hkv, d)
+    v = v.reshape(B, W * ps, Hkv, d)
+
+    qh = q.astype(jnp.float32).reshape(B, Hkv, G, d)
+    s = jnp.einsum("bhgd,bshd->bhgs", qh, k,
+                   preferred_element_type=jnp.float32) / (d ** 0.5)
+    kpos = jnp.arange(W * ps)[None, None, None, :]
+    # free slots (length 0) attend to position 0 so the softmax stays
+    # defined; their rows are zeroed below (matching the kernel's output)
+    keep = kpos < jnp.maximum(lengths, 1)[:, None, None, None]
+    s = jnp.where(keep, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", p, v,
+                   preferred_element_type=jnp.float32)
+    o = jnp.where(lengths[:, None, None, None] > 0, o, 0.0)
+    return o.reshape(B, H, d).astype(q.dtype)

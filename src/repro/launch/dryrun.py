@@ -41,14 +41,16 @@ from ..core.roofline import (
     HBM_BW, ICI_BW, PEAK_FLOPS_BF16, RooflineReport, parse_collective_bytes,
 )
 from ..core.precision import resolve_precision
-from ..core.transfer_model import GemmProblem, PallasGemmTiling, RingCollectiveGemm
+from ..core.transfer_model import (
+    GemmProblem, PagedKVDecode, PallasGemmTiling, RingCollectiveGemm,
+)
 from ..launch.mesh import make_production_mesh
 from ..launch.specs import cell_specs
 from ..launch.steps import make_prefill_step, make_serve_step, make_train_step
 from ..models import build_model
 from ..optim.adamw import AdamW
 from ..optim.schedules import warmup_cosine
-from ..parallel.sharding import make_rules, use_rules
+from ..parallel.sharding import autotune_collective_policy, make_rules, use_rules
 
 
 def collective_gemm_reports(cfg, mesh, tokens_per_step: int) -> dict:
@@ -75,9 +77,15 @@ def collective_gemm_reports(cfg, mesh, tokens_per_step: int) -> dict:
         "mlp_down": ("reduce_scatter", GemmProblem(M, d, ff, 2)),
         "lm_head": ("allgather", GemmProblem(M, cfg.vocab, d, 2)),
     }
-    out = {}
+    # the ring schedule (direction / chunk split) is AUTOTUNED from the
+    # same transfer model instead of assuming the bidirectional default;
+    # the chosen schedule is logged alongside the per-layer records
+    policy, schedule = autotune_collective_policy(
+        mesh, gemms.values(), ici_bw=ICI_BW, peak_flops=PEAK_FLOPS_BF16)
+    bidir = policy.direction == "bidir"
+    out = {"schedule": schedule}
     for name, (mode, prob) in gemms.items():
-        ring = RingCollectiveGemm(mode=mode, axis_size=P)
+        ring = RingCollectiveGemm(mode=mode, axis_size=P, bidirectional=bidir)
         out[name] = ring.report(prob, ici_bw=ICI_BW, peak_flops=PEAK_FLOPS_BF16)
     return out
 
@@ -128,6 +136,40 @@ def quantized_gemm_reports(cfg, tokens_per_step: int) -> dict:
     out["total_hbm_bytes_bf16"] = total_base
     out["total_traffic_credit_bytes"] = total_base - total_q
     out["bytes_ratio"] = total_q / total_base if total_base else 1.0
+    return out
+
+
+def paged_kv_decode_reports(cfg, preset, *, page_size: int = 128) -> dict:
+    """Decode-step KV traffic model for serve cells: dense (slots, max_len)
+    rectangle vs pages actually resident, at representative live-token fill
+    ratios.  Cache elements modeled in bf16 (the roofline operating point);
+    n_layers counts the attention blocks that hold a KV cache.
+
+    Only emitted for archs the paged decode path actually covers
+    (attention-only segments, no shared block / modality prefix — the
+    `DecoderLM.supports_paged` predicate); reporting a credit the stack
+    cannot realize would misprice the serving roofline."""
+    paged_capable = (not cfg.shared_attn_every and not cfg.frontend_dim
+                     and not cfg.enc_layers
+                     and all(kind in ("dense", "moe") for kind, _ in cfg.blocks))
+    if not paged_capable:
+        return {}
+    n_attn = sum(n for kind, n in cfg.blocks if kind in ("dense", "moe"))
+    if not n_attn:
+        return {}
+    model = PagedKVDecode(
+        batch_slots=preset.global_batch,
+        max_len=preset.seq_len,
+        page_size=page_size,
+        n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.hd,
+        n_layers=n_attn,
+        kv_bytes=2,
+    )
+    out = {"page_size": page_size, "n_attn_layers": n_attn, "fills": {}}
+    for fill in (0.25, 0.5, 0.75, 1.0):
+        lengths = [max(1, int(fill * preset.seq_len))] * preset.global_batch
+        out["fills"][f"{fill:.2f}"] = model.report(lengths, hbm_bw=HBM_BW)
     return out
 
 
@@ -254,6 +296,8 @@ def lower_cell(arch: str, shape: str, mesh_kind: str, *, extra: dict | None = No
         "collective_gemms": collective_gemm_reports(
             cfg, mesh, specs.tokens_per_step),
         "quantized_gemms": quantized_gemm_reports(cfg, specs.tokens_per_step),
+        "paged_kv_decode": (paged_kv_decode_reports(cfg, preset)
+                            if specs.kind == "decode" else {}),
         "n_params": cfg.n_params(),
         "n_active_params": n_active,
         "tokens_per_step": specs.tokens_per_step,

@@ -1,8 +1,10 @@
-"""Serving launcher: batched prefill + greedy decode with a KV cache.
+"""Serving launcher: chunked prefill + greedy decode with a KV cache.
 
-CPU smoke example:
+CPU smoke examples:
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
-      --batch 4 --prompt-len 16 --gen 16
+      --batch 4 --prompt-len 16 --gen 16 --prefill-chunk 8
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
+      --paged --page-size 8
 """
 from __future__ import annotations
 
@@ -16,9 +18,53 @@ import numpy as np
 
 from ..configs import ARCH_IDS, get_config
 from ..launch.mesh import make_mesh
-from ..launch.steps import make_serve_step
+from ..launch.steps import make_chunked_prefill_step, make_serve_step
 from ..models import build_model
 from ..parallel.sharding import make_rules, use_rules
+
+
+def _run_continuous(model, cfg, params, args) -> int:
+    """Continuous batching: 2x requests stream through --batch decode slots
+    (runtime/batcher.py).  --paged swaps the dense (slots, max_len) cache
+    for the page-pool backend (runtime/kv_pages + kernels/mx_flash_decode)
+    and reports the allocator's page occupancy."""
+    from ..runtime.batcher import ContinuousBatcher, Request
+
+    B = args.batch
+    max_len = args.max_len or (args.prompt_len + args.gen)
+    kv_quant = None
+    if args.kv_cache == "int8":
+        from ..core.precision import QuantSpec
+
+        kv_quant = QuantSpec("int8", "tile")
+    batcher = ContinuousBatcher(
+        model, params, batch_slots=B, max_len=max_len,
+        paged=args.paged, page_size=args.page_size, kv_quant=kv_quant,
+    )
+    rng = np.random.default_rng(0)
+    n_req = 2 * B
+    t0 = time.time()
+    for i in range(n_req):
+        plen = int(rng.integers(2, args.prompt_len + 1))
+        batcher.submit(Request(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab, plen).astype(np.int32),
+            max_new=args.gen,
+        ))
+    finished = batcher.run_to_completion()
+    wall = time.time() - t0
+    total = sum(len(r.prompt) + len(r.output) for r in finished.values())
+    mode = "paged" if args.paged else "dense"
+    print(f"continuous batching [{mode} cache]: {len(finished)} requests "
+          f"through {B} slots; {total / wall:.1f} tok/s (CPU)")
+    if args.paged:
+        st = batcher.pool_stats()
+        print(f"  pages: {st.pages_in_use} in use / {st.num_pages} pool "
+              f"(high water {st.high_water}, page_size {st.page_size}, "
+              f"peak utilization {st.high_water / st.num_pages:.2f})")
+    for rid in sorted(finished)[:2]:
+        print(f"  req {rid}: {finished[rid].output[:8]}")
+    return 0
 
 
 def main(argv=None):
@@ -32,7 +78,23 @@ def main(argv=None):
     ap.add_argument("--continuous", action="store_true",
                     help="continuous batching: 2x requests stream through "
                          "--batch decode slots (runtime/batcher.py)")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache (implies --continuous): page-pool "
+                         "allocator + split-KV flash decode; decode bytes "
+                         "scale with live tokens, not max_len")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (--paged)")
+    ap.add_argument("--kv-cache", choices=("f32", "int8"), default="f32",
+                    help="paged-cache payload dtype (int8 stores per-row "
+                         "scale pages via kernels/quant)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="batch prefill: push the prompt through the cache "
+                         "this many tokens per launch instead of one decode "
+                         "step per token (0 = token stepping)")
     args = ap.parse_args(argv)
+    if args.kv_cache != "f32" and not args.paged:
+        ap.error("--kv-cache int8 requires --paged (the quantized cache "
+                 "lives in the page pool)")
 
     cfg = get_config(args.arch + ("-smoke" if args.smoke else ""))
     if cfg.model_kind == "encdec":
@@ -47,28 +109,8 @@ def main(argv=None):
         B = args.batch
         rng = np.random.default_rng(0)
 
-        if args.continuous and cfg.model_kind != "encdec":
-            from ..runtime.batcher import ContinuousBatcher, Request
-
-            batcher = ContinuousBatcher(model, params, batch_slots=B,
-                                        max_len=max_len)
-            n_req = 2 * B
-            t0 = time.time()
-            for i in range(n_req):
-                plen = int(rng.integers(2, args.prompt_len + 1))
-                batcher.submit(Request(
-                    rid=i,
-                    prompt=rng.integers(0, cfg.vocab, plen).astype(np.int32),
-                    max_new=args.gen,
-                ))
-            finished = batcher.run_to_completion()
-            wall = time.time() - t0
-            total = sum(len(r.prompt) + len(r.output) for r in finished.values())
-            print(f"continuous batching: {len(finished)} requests through "
-                  f"{B} slots; {total / wall:.1f} tok/s (CPU)")
-            for rid in sorted(finished)[:2]:
-                print(f"  req {rid}: {finished[rid].output[:8]}")
-            return 0
+        if (args.continuous or args.paged) and cfg.model_kind != "encdec":
+            return _run_continuous(model, cfg, params, args)
 
         prompt = rng.integers(0, cfg.vocab, (B, args.prompt_len)).astype(np.int32)
         cache = model.make_cache(B, max_len, mode="init")
@@ -82,12 +124,32 @@ def main(argv=None):
         else:
             step = jax.jit(serve)
 
-        # prefill by stepping the prompt (decode-path prefill keeps one code
-        # path; bulk prefill is the prefill_step lowering in the dry-run)
+        chunk = args.prefill_chunk
+        can_chunk = (chunk > 1 and cfg.model_kind != "encdec"
+                     and model.supports_chunked_prefill())
+        if chunk > 1 and not can_chunk:
+            print(f"chunked prefill unsupported for {cfg.name}; "
+                  "falling back to token stepping")
+
         t0 = time.time()
-        tok = None
-        for t in range(args.prompt_len):
-            logits, cache = step(params, cache, prompt[:, t : t + 1], t)
+        if can_chunk:
+            # batched prefill: each launch pushes a whole chunk through the
+            # cache (the flash prefill path), so time-to-first-token is
+            # O(prompt_len / chunk) launches instead of O(prompt_len)
+            prefill = jax.jit(make_chunked_prefill_step(model, cfg))
+            t = 0
+            while t < args.prompt_len:
+                c = min(chunk, args.prompt_len - t)
+                logits, cache = prefill(params, cache, prompt[:, t : t + c], t)
+                t += c
+            ttft = time.time() - t0
+            print(f"prefill: {args.prompt_len} tokens in chunks of {chunk}; "
+                  f"TTFT {ttft * 1e3:.1f}ms")
+        else:
+            # token-stepping prefill keeps one code path for archs without
+            # the chunked path (state blocks, shared blocks, prefix embeds)
+            for t in range(args.prompt_len):
+                logits, cache = step(params, cache, prompt[:, t : t + 1], t)
         out_tokens = []
         for t in range(args.prompt_len, args.prompt_len + args.gen):
             tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]

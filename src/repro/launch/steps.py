@@ -88,6 +88,22 @@ def make_prefill_step(model, cfg) -> Callable:
     return prefill_step
 
 
+def make_chunked_prefill_step(model, cfg) -> Callable:
+    """Cache-writing batch prefill: (params, cache, tokens, index) ->
+    (logits, cache).  One launch pushes a whole (B, chunk) token block
+    through the stack and writes cache rows [index, index+chunk) — the
+    serve-path complement of `make_prefill_step` (which lowers the
+    cacheless full-sequence forward).  Decoder-only, attention-only archs
+    (model.supports_chunked_prefill)."""
+    if cfg.model_kind == "encdec":
+        raise ValueError("chunked prefill is decoder-only")
+
+    def prefill_step(params, cache, tokens, index):
+        return model.prefill_step(params, tokens, cache, index)
+
+    return prefill_step
+
+
 def make_serve_step(model, cfg) -> Callable:
     """One-token decode against a seq_len KV cache / recurrent state.
 

@@ -13,6 +13,10 @@ import jax
 import jax.numpy as jnp
 
 from ..core import ops
+from ..core.precision import QuantSpec
+from ..kernels.mx_flash_decode import mx_flash_decode
+from ..kernels.quant import quantize
+from ..kernels.ref import paged_decode_ref
 from .modules import Builder, Module
 
 
@@ -327,6 +331,125 @@ class Attention(Module):
         out = ops.linear(o, p["wo"], residual=residual, out_dtype=x.dtype,
                          tp_mode="reduce_scatter", precision=self.precision)
         return out, {"k": k_cache, "v": v_cache}
+
+    # ---------------- chunked prefill (dense cache) ----------------
+
+    def prefill(self, p, x, cache, index, *, residual=None):
+        """Chunked prefill: x (B, S, D) writes cache rows [index, index+S)
+        and attends causally against the cache prefix — S prompt tokens per
+        launch instead of S decode steps.  `index` is the chunk's start
+        position (scalar, shared across the batch)."""
+        b, sq, _ = x.shape
+        index = jnp.asarray(index)
+        positions = jnp.broadcast_to(index + jnp.arange(sq), (b, sq))
+        q, k_new, v_new = self._qkv(p, x, positions)
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k_new.astype(cache["k"].dtype), index, axis=1
+        )
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v_new.astype(cache["v"].dtype), index, axis=1
+        )
+        groups = self.n_heads // self.n_kv_heads
+        k = _repeat_kv(k_cache, groups)
+        v = _repeat_kv(v_cache, groups)
+        # causal mask with q_offset == index never reads past the written
+        # prefix, so attending over the full cache length is exact
+        o = full_attention(q, k, v, causal=True, q_offset=index)
+        o = o.reshape(b, sq, self.n_heads * self.hd)
+        out = ops.linear(o, p["wo"], residual=residual, out_dtype=x.dtype,
+                         tp_mode="reduce_scatter", precision=self.precision)
+        return out, {"k": k_cache, "v": v_cache}
+
+    # ---------------- paged KV-cache decode path ----------------
+
+    def init_paged_cache(self, num_pages: int, page_size: int,
+                         dtype=jnp.bfloat16, kv_quant: Optional[QuantSpec] = None):
+        """Flat page-pool cache: (num_pages, page_size, Hkv, hd) per
+        operand.  `kv_quant` (a quantized core.precision.QuantSpec, e.g.
+        QuantSpec("int8")) stores narrow payloads plus per-row f32 scale
+        pages; the cache pytree self-describes via its `k_scale` key."""
+        hd = self.hd
+        shape = (num_pages, page_size, self.n_kv_heads, hd)
+        if kv_quant is not None and kv_quant.quantized:
+            cache = {
+                "k_pages": jnp.zeros(shape, kv_quant.jnp_dtype),
+                "v_pages": jnp.zeros(shape, kv_quant.jnp_dtype),
+                "k_scale": jnp.ones(shape[:3], jnp.float32),
+                "v_scale": jnp.ones(shape[:3], jnp.float32),
+            }
+            return cache
+        return {"k_pages": jnp.zeros(shape, dtype),
+                "v_pages": jnp.zeros(shape, dtype)}
+
+    def abstract_paged_cache(self, num_pages: int, page_size: int,
+                             dtype=jnp.bfloat16,
+                             kv_quant: Optional[QuantSpec] = None):
+        return jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+            self.init_paged_cache(num_pages, page_size, dtype, kv_quant),
+        )
+
+    def paged_cache_axes(self, kv_quant: Optional[QuantSpec] = None):
+        ax = ("pages", "page_size", "kv_heads", "head_dim")
+        axes = {"k_pages": ax, "v_pages": ax}
+        if kv_quant is not None and kv_quant.quantized:
+            axes["k_scale"] = ax[:3]
+            axes["v_scale"] = ax[:3]
+        return axes
+
+    def decode_paged(self, p, x, cache, index, page_table, lengths, *,
+                     residual=None):
+        """One decode step against a paged KV cache.  x: (B, 1, D);
+        cache: page pools from `init_paged_cache`; index: (B,) per-slot
+        positions; page_table: (B, W) physical page ids (runtime/kv_pages —
+        free slots' rows point at the dump page, so the batched write needs
+        no masking); lengths: (B,) live token counts (index+1 for active
+        slots, 0 for free ones).
+
+        The attention itself dispatches like every other MX op: the Pallas
+        split-KV kernel (`mx_flash_decode`) under the pallas_mx policy, the
+        gather-based jnp oracle (`paged_decode_ref`) as the XLA fallback.
+        """
+        b = x.shape[0]
+        ps = cache["k_pages"].shape[1]
+        idx_b = jnp.broadcast_to(jnp.asarray(index), (b,))
+        positions = idx_b[:, None]
+        q, k_new, v_new = self._qkv(p, x, positions)
+        rows = jnp.arange(b)
+        page_ids = page_table[rows, idx_b // ps]
+        offs = idx_b % ps
+        k_tok, v_tok = k_new[:, 0], v_new[:, 0]  # (B, Hkv, hd)
+        cache = dict(cache)
+        quantized = "k_scale" in cache
+        if quantized:
+            names = {"int8": "int8", "float8_e4m3fn": "fp8_e4m3"}
+            spec = QuantSpec(names[str(cache["k_pages"].dtype)], "tile")
+            qk, ks = quantize(k_tok, spec, axis=-1)  # per-(slot, head) scale
+            qv, vs = quantize(v_tok, spec, axis=-1)
+            cache["k_pages"] = cache["k_pages"].at[page_ids, offs].set(qk)
+            cache["v_pages"] = cache["v_pages"].at[page_ids, offs].set(qv)
+            cache["k_scale"] = cache["k_scale"].at[page_ids, offs].set(ks[..., 0])
+            cache["v_scale"] = cache["v_scale"].at[page_ids, offs].set(vs[..., 0])
+        else:
+            dt = cache["k_pages"].dtype
+            cache["k_pages"] = cache["k_pages"].at[page_ids, offs].set(
+                k_tok.astype(dt))
+            cache["v_pages"] = cache["v_pages"].at[page_ids, offs].set(
+                v_tok.astype(dt))
+        kw = dict(
+            k_scale=cache.get("k_scale"), v_scale=cache.get("v_scale"))
+        policy = ops.current_policy()
+        if policy.backend == "pallas_mx":
+            o = mx_flash_decode(q[:, 0], cache["k_pages"], cache["v_pages"],
+                                page_table, lengths,
+                                interpret=policy.interpret, **kw)
+        else:
+            o = paged_decode_ref(q[:, 0], cache["k_pages"], cache["v_pages"],
+                                 page_table, lengths, **kw)
+        o = o.reshape(b, 1, self.n_heads * self.hd)
+        out = ops.linear(o, p["wo"], residual=residual, out_dtype=x.dtype,
+                         tp_mode="reduce_scatter", precision=self.precision)
+        return out, cache
 
 
 @dataclasses.dataclass(frozen=True)

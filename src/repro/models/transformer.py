@@ -139,6 +139,48 @@ class TransformerBlock(Module):
             x = ffn(p["ffn"], h, residual=x)
         return x, cache
 
+    def prefill(self, p, x, cache, index):
+        """Multi-token cache-writing step (chunked prefill; no cross-attn)."""
+        attn = self._attn()
+        x, cache = attn.prefill(p["attn"], rms_norm(x, p["ln1"]), cache, index,
+                                residual=x)
+        ffn = self._ffn()
+        h = rms_norm(x, p["ln2"])
+        if self.use_moe:
+            y, _ = ffn(p["ffn"], h)
+            x = x + y
+        else:
+            x = ffn(p["ffn"], h, residual=x)
+        return x, cache
+
+    # ---- paged decode ----
+
+    def init_paged_cache(self, num_pages, page_size, dtype=jnp.bfloat16,
+                         kv_quant=None):
+        return self._attn().init_paged_cache(num_pages, page_size, dtype,
+                                             kv_quant)
+
+    def abstract_paged_cache(self, num_pages, page_size, dtype=jnp.bfloat16,
+                             kv_quant=None):
+        return self._attn().abstract_paged_cache(num_pages, page_size, dtype,
+                                                 kv_quant)
+
+    def paged_cache_axes(self, kv_quant=None):
+        return self._attn().paged_cache_axes(kv_quant)
+
+    def decode_paged(self, p, x, cache, index, page_table, lengths):
+        attn = self._attn()
+        x, cache = attn.decode_paged(p["attn"], rms_norm(x, p["ln1"]), cache,
+                                     index, page_table, lengths, residual=x)
+        ffn = self._ffn()
+        h = rms_norm(x, p["ln2"])
+        if self.use_moe:
+            y, _ = ffn(p["ffn"], h)
+            x = x + y
+        else:
+            x = ffn(p["ffn"], h, residual=x)
+        return x, cache
+
 
 def _wrap_state_block(block):
     """Uniform (y, aux) interface for state blocks (mamba/xlstm)."""
@@ -348,6 +390,105 @@ class DecoderLM(Module):
                     one_s = shared_block.init_cache(batch, max_len, dtype)
                 cache[f"shared{i}"] = self._stack_cache(one_s, napp, mode)
         return cache
+
+    # ---- paged decode / chunked prefill capability ----
+
+    def _attn_only(self) -> bool:
+        """All segments are KV-cache attention blocks with no shared-block
+        interleaving and no modality prefix — the shapes the paged decode
+        and chunked-prefill paths cover (state/shared/prefix models keep
+        the dense paths)."""
+        cfg = self.cfg
+        return (not cfg.shared_attn_every and not cfg.frontend_dim
+                and all(kind in ("dense", "moe") for kind, _ in cfg.blocks))
+
+    def supports_paged(self) -> bool:
+        return self._attn_only()
+
+    def supports_chunked_prefill(self) -> bool:
+        return self._attn_only()
+
+    def make_paged_cache(self, num_pages: int, page_size: int,
+                         mode: str = "init", dtype=jnp.bfloat16,
+                         kv_quant=None):
+        """Paged cache pytree: per segment, layer-stacked page pools
+        (n, num_pages, page_size, Hkv, hd).  The page table and lengths are
+        NOT part of the cache — they are per-step scheduler outputs
+        (runtime/kv_pages) shared by every layer."""
+        if not self.supports_paged():
+            raise ValueError(f"{self.cfg.name}: paged decode needs attention-"
+                             "only segments (no shared block / prefix)")
+        cache = {}
+        for i, seg in enumerate(self.segments()):
+            block = make_block(seg.kind, self.cfg)
+            if mode == "axes":
+                one = block.paged_cache_axes(kv_quant)
+            elif mode == "abstract":
+                one = block.abstract_paged_cache(num_pages, page_size, dtype,
+                                                 kv_quant)
+            else:
+                one = block.init_paged_cache(num_pages, page_size, dtype,
+                                             kv_quant)
+            cache[f"seg{i}"] = self._stack_cache(one, seg.n, mode)
+        return cache
+
+    def decode_step_paged(self, p, token, cache, index, page_table, lengths):
+        """One token for the whole stack against the paged KV cache.
+        token: (B, 1); index: (B,) per-slot positions; page_table: (B, W)
+        physical page ids; lengths: (B,) live token counts.
+        Returns (logits, cache)."""
+        cfg = self.cfg
+        x = self._embed_inputs(p, token)
+        new_cache = dict(cache)
+        for i, seg in enumerate(self.segments()):
+            block = make_block(seg.kind, cfg)
+
+            def body(h, scanned):
+                layer_params, layer_cache = scanned
+                return block.decode_paged(layer_params, h, layer_cache,
+                                          index, page_table, lengths)
+
+            x, new_cache[f"seg{i}"] = jax.lax.scan(
+                body, x, (p[f"seg{i}"], cache[f"seg{i}"])
+            )
+        x = rms_norm(x, p["ln_f"])
+        if cfg.tie_embeddings:
+            logits = Embedding(cfg.vocab, cfg.d_model).attend(p["embed"], x)
+        else:
+            logits = ops.linear(x, p["lm_head"], out_dtype=jnp.float32,
+                                tp_mode="allgather")
+        return logits, new_cache
+
+    # ---- chunked prefill ----
+
+    def prefill_step(self, p, tokens, cache, index):
+        """S prompt tokens through the whole stack in ONE step, writing
+        cache rows [index, index+S).  tokens: (B, S) -> (logits, cache);
+        time-to-first-token becomes O(prompt_len / chunk) launches instead
+        of O(prompt_len) decode steps."""
+        if not self.supports_chunked_prefill():
+            raise ValueError(f"{self.cfg.name}: chunked prefill needs "
+                             "attention-only segments")
+        cfg = self.cfg
+        x = self._embed_inputs(p, tokens)
+        new_cache = dict(cache)
+        for i, seg in enumerate(self.segments()):
+            block = make_block(seg.kind, cfg)
+
+            def body(h, scanned):
+                layer_params, layer_cache = scanned
+                return block.prefill(layer_params, h, layer_cache, index)
+
+            x, new_cache[f"seg{i}"] = jax.lax.scan(
+                body, x, (p[f"seg{i}"], cache[f"seg{i}"])
+            )
+        x = rms_norm(x, p["ln_f"])
+        if cfg.tie_embeddings:
+            logits = Embedding(cfg.vocab, cfg.d_model).attend(p["embed"], x)
+        else:
+            logits = ops.linear(x, p["lm_head"], out_dtype=jnp.float32,
+                                tp_mode="allgather")
+        return logits, new_cache
 
     def decode_step(self, p, token, cache, index, *, prefix_embeds=None):
         """One token for the whole stack.  token: (B, 1) -> (logits, cache)."""

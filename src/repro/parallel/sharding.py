@@ -232,6 +232,73 @@ class CollectivePolicy:
         return ring_topology(self.mesh, self.axis)
 
 
+def autotune_collective_policy(
+    mesh: Mesh,
+    problems,
+    *,
+    axis: str = "model",
+    ici_bw: float,
+    peak_flops: float,
+) -> tuple:
+    """Pick the ring direction/chunk split from the `RingCollectiveGemm`
+    transfer model instead of the fixed "bidir" default.
+
+    ``problems`` is a sequence of (mode, GemmProblem) pairs — the layer's
+    TP projections (qkv/attn_out/mlp_up/mlp_down/lm_head as built by
+    dryrun.collective_gemm_reports).  Candidates are the two chunk
+    schedules the ring kernels implement: "bidir" (each chunk split in
+    half across both ring directions — per-link bytes halve) and "fwd"
+    (whole chunks one way).  The model's overlapped time — first chunk
+    GEMM, then P-1 rounds of max(compute, comm) — is summed over the
+    problem set and the cheaper schedule wins; ties break toward "fwd"
+    (fewer in-flight buffers).
+
+    Returns (CollectivePolicy, report) where the report records the
+    per-candidate times so dryrun can log the chosen schedule in its
+    `collective_gemms` record."""
+    from ..core.transfer_model import RingCollectiveGemm
+
+    if axis not in mesh.shape:
+        raise ValueError(f"mesh has no axis {axis!r}; axes: {tuple(mesh.shape)}")
+    P_ = int(mesh.shape[axis])
+    problems = list(problems)
+    candidates = {"fwd": False, "bidir": True}
+    totals: Dict[str, float] = {}
+    exposed: Dict[str, float] = {}
+    for name, bidir in candidates.items():
+        t = e = 0.0
+        for mode, prob in problems:
+            ring = RingCollectiveGemm(mode=mode, axis_size=P_,
+                                      bidirectional=bidir)
+            t += ring.overlapped_time_s(prob, ici_bw=ici_bw,
+                                        peak_flops=peak_flops)
+            e += ring.exposed_comm_s(prob, ici_bw=ici_bw,
+                                     peak_flops=peak_flops)
+        totals[name] = t
+        exposed[name] = e
+    # strict improvement required: "fwd" wins ties
+    chosen = "bidir" if totals["bidir"] < totals["fwd"] else "fwd"
+    serialized = sum(
+        RingCollectiveGemm(mode=mode, axis_size=P_,
+                           bidirectional=candidates[chosen])
+        .serialized_time_s(prob, ici_bw=ici_bw, peak_flops=peak_flops)
+        for mode, prob in problems
+    )
+    report = {
+        "axis": axis,
+        "axis_size": P_,
+        "chosen_direction": chosen,
+        "candidate_time_s": totals,
+        "candidate_exposed_comm_s": exposed,
+        "serialized_time_s": serialized,
+        "autotuned": True,
+        "n_problems": len(problems),
+    }
+    policy = CollectivePolicy(mesh=mesh, axis=axis, direction=chosen,
+                              enabled=P_ > 1)
+    return policy, report
+
+
 def current_collectives() -> Optional[CollectivePolicy]:
     pol = getattr(_state, "collectives", None)
     return pol if (pol is not None and pol.enabled) else None

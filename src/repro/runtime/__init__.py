@@ -2,4 +2,6 @@ from . import elastic
 from .fault import DeviceFailure, FaultInjector, StragglerDetector, TrainLoop
 __all__ = ["DeviceFailure", "FaultInjector", "StragglerDetector", "TrainLoop", "elastic"]
 from .batcher import ContinuousBatcher, Request  # noqa: E402
-__all__ += ["ContinuousBatcher", "Request"]
+from .kv_pages import DUMP_PAGE, PagePool, PoolExhausted, PoolStats  # noqa: E402
+__all__ += ["ContinuousBatcher", "Request",
+            "DUMP_PAGE", "PagePool", "PoolExhausted", "PoolStats"]

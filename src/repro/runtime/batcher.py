@@ -7,9 +7,23 @@ queued request is admitted — its prompt is prefilled by stepping tokens
 through the slot while the other slots keep decoding (token-level
 interleaving, vLLM-style scheduling at batch granularity).
 
+Two cache backends:
+
+  - dense (default): the (slots, max_len) rectangle; every step streams the
+    full padded cache and every eviction zeroes max_len rows.
+  - paged (``paged=True``): a flat page pool + per-slot page tables
+    (runtime/kv_pages).  Admission reserves ceil(expected_tokens/page_size)
+    pages from the free list (back-pressuring the queue when the pool is
+    exhausted instead of crashing), eviction returns them with NO zeroing,
+    and each decode step attends only over pages the live sequences
+    actually touch — decode bytes scale with live tokens, not max_len.
+    The device step is `model.decode_step_paged`, whose attention runs the
+    split-KV Pallas kernel (kernels/mx_flash_decode) under the pallas_mx
+    policy and the gather-based oracle on the XLA fallback.
+
 CPU-testable end to end with smoke configs (tests/test_batcher.py asserts
 outputs are identical to per-request isolated decoding — slot interference
-would break that)."""
+would break that; tests/test_kv_pages.py asserts dense/paged parity)."""
 from __future__ import annotations
 
 import dataclasses
@@ -19,6 +33,8 @@ from typing import Callable, Deque, Dict, List, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from .kv_pages import PagePool
 
 
 @dataclasses.dataclass
@@ -43,41 +59,95 @@ class _Slot:
         return self.req is None
 
 
+def _next_pow2(n: int) -> int:
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+
 class ContinuousBatcher:
-    """model: DecoderLM; params: its params; B slots; max_len cache."""
+    """model: DecoderLM; params: its params; B slots; max_len cache.
+
+    ``paged=True`` switches to the paged KV cache: ``page_size`` tokens per
+    page, ``num_pages`` allocatable pages (default: enough for every slot
+    at max_len, i.e. the dense rectangle's capacity — shrink it to see
+    admission back-pressure).  ``kv_quant`` (a quantized
+    core.precision.QuantSpec, e.g. QuantSpec("int8")) stores the paged
+    cache as narrow payloads with per-row scale pages."""
 
     def __init__(self, model, params, batch_slots: int, max_len: int,
-                 cache_dtype=jnp.float32):
+                 cache_dtype=jnp.float32, *, paged: bool = False,
+                 page_size: int = 16, num_pages: Optional[int] = None,
+                 kv_quant=None):
         self.model = model
         self.params = params
         self.B = batch_slots
         self.max_len = max_len
-        self.cache = model.make_cache(batch_slots, max_len, mode="init",
-                                      dtype=cache_dtype)
+        self.paged = paged
         self.slots = [_Slot() for _ in range(batch_slots)]
         self.queue: Deque[Request] = deque()
         self.finished: Dict[int, Request] = {}
 
-        def step(params, token, cache, index):
-            return model.decode_step(params, token, cache, index)
+        if paged:
+            if not getattr(model, "supports_paged", lambda: False)():
+                raise ValueError(
+                    "model does not support paged decode (needs attention-"
+                    "only segments; state/shared-block archs use dense)")
+            self.page_size = page_size
+            self._table_width = -(-max_len // page_size)
+            self.pool = PagePool(
+                num_pages if num_pages is not None
+                else batch_slots * self._table_width,
+                page_size,
+            )
+            self.cache = model.make_paged_cache(
+                self.pool.total_pages, page_size, mode="init",
+                dtype=cache_dtype, kv_quant=kv_quant,
+            )
 
-        self._step = jax.jit(step)
+            def step_paged(params, token, cache, index, table, lengths):
+                return model.decode_step_paged(params, token, cache, index,
+                                               table, lengths)
+
+            self._step = jax.jit(step_paged)
+        else:
+            if kv_quant is not None:
+                raise ValueError("kv_quant requires paged=True (the dense "
+                                 "cache dtype is `cache_dtype`)")
+            self.pool = None
+            self.cache = model.make_cache(batch_slots, max_len, mode="init",
+                                          dtype=cache_dtype)
+
+            def step(params, token, cache, index):
+                return model.decode_step(params, token, cache, index)
+
+            self._step = jax.jit(step)
 
     def submit(self, req: Request):
         self.queue.append(req)
 
     def _admit(self):
-        for s in self.slots:
-            if s.free and self.queue:
-                req = self.queue.popleft()
-                s.req = req
-                s.pos = 0
-                s.prompt_left = len(req.prompt)
+        for i, s in enumerate(self.slots):
+            if not (s.free and self.queue):
+                continue
+            req = self.queue.popleft()
+            if self.paged:
+                # O(pages touched): reserve the request's worst-case token
+                # footprint up front so decode never fails mid-stream; a
+                # short free list back-pressures the queue (FIFO preserved).
+                tokens = min(self.max_len, len(req.prompt) + req.max_new)
+                if self.pool.try_reserve(i, tokens) is None:
+                    self.queue.appendleft(req)
+                    return
+            s.req = req
+            s.pos = 0
+            s.prompt_left = len(req.prompt)
 
     def _reset_slot_cache(self, i: int):
-        """Zero slot i's cache rows.  Model caches are stacked per segment
-        with the layer dim leading — (n_layers, B, ...) — so the slot axis
-        is 1 there; unstacked leaves put B first."""
+        """Dense backend only: zero slot i's cache rows — an O(max_len)
+        write the paged backend replaces with an O(1) free-list release
+        (stale page contents are dead via the length mask).  Model caches
+        are stacked per segment with the layer dim leading —
+        (n_layers, B, ...) — so the slot axis is 1 there; unstacked leaves
+        put B first."""
         def zero_row(t):
             if t.ndim >= 2 and t.shape[1] == self.B:
                 return t.at[:, i].set(jnp.zeros_like(t[:, i]))
@@ -90,6 +160,19 @@ class ContinuousBatcher:
     @property
     def active(self) -> int:
         return sum(0 if s.free else 1 for s in self.slots)
+
+    def pool_stats(self):
+        """Paged backend's allocator stats (None on the dense backend)."""
+        return self.pool.stats() if self.pool is not None else None
+
+    def _active_width(self) -> int:
+        """Page-table width covering the deepest live slot, bucketed to the
+        next power of two: the decode step's gather/grid scales with pages
+        actually in use instead of max_len/page_size, while the bucketing
+        bounds jit retraces to O(log) distinct widths."""
+        deepest = max((s.pos + 1 for s in self.slots if not s.free), default=1)
+        return min(_next_pow2(self.pool.pages_for(deepest)),
+                   self._table_width)
 
     def step(self) -> int:
         """One batched decode step across all slots; returns #active slots."""
@@ -108,27 +191,56 @@ class ContinuousBatcher:
             else:  # decode phase: feed the last generated token
                 tokens[i, 0] = req.output[-1]
             index[i] = s.pos
-        logits, self.cache = self._step(
-            self.params, jnp.asarray(tokens), self.cache, jnp.asarray(index)
-        )
+        if self.paged:
+            for i, s in enumerate(self.slots):
+                if not s.free:
+                    self.pool.set_length(i, s.pos + 1)
+            w = self._active_width()
+            table = jnp.asarray(self.pool.page_table(self.B, w))
+            lengths = jnp.asarray(self.pool.lengths(self.B))
+            logits, self.cache = self._step(
+                self.params, jnp.asarray(tokens), self.cache,
+                jnp.asarray(index), table, lengths,
+            )
+        else:
+            logits, self.cache = self._step(
+                self.params, jnp.asarray(tokens), self.cache, jnp.asarray(index)
+            )
         next_tok = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
         for i, s in enumerate(self.slots):
             if s.free:
                 continue
             req = s.req
             s.pos += 1
+            # a slot that exhausted its page reservation (an over-long
+            # prompt) is truncated and evicted — capacity exhaustion must
+            # degrade, never crash the serving loop.  The dense rectangle
+            # has the same cap at max_len (checked with the finish tests
+            # below); the paged cap can be lower when the reservation was
+            # clipped to min(max_len, prompt + max_new).
+            out_of_room = self.paged and s.pos >= len(
+                self.pool.owned(i)) * self.page_size
             if s.prompt_left > 1:
                 s.prompt_left -= 1  # still prefilling; ignore the logit
+                if out_of_room:
+                    req.done = True
+                    self.finished[req.rid] = req
+                    s.req = None
+                    self.pool.release(i)
                 continue
             if s.prompt_left == 1:
                 s.prompt_left = 0  # prompt done: this logit starts generation
             req.output.append(int(next_tok[i]))
             hit_eos = req.eos_id is not None and req.output[-1] == req.eos_id
-            if len(req.output) >= req.max_new or hit_eos or s.pos >= self.max_len:
+            if (len(req.output) >= req.max_new or hit_eos
+                    or s.pos >= self.max_len or out_of_room):
                 req.done = True
                 self.finished[req.rid] = req
                 s.req = None
-                self._reset_slot_cache(i)
+                if self.paged:
+                    self.pool.release(i)  # O(1); no zeroing
+                else:
+                    self._reset_slot_cache(i)
         return self.active
 
     def run_to_completion(self, max_steps: int = 10_000) -> Dict[int, Request]:

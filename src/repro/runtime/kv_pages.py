@@ -1,0 +1,222 @@
+"""Paged KV-cache page allocator: fixed-size pages over a flat pool.
+
+The serving path's dense cache is a (slots, max_len) rectangle: every decode
+step streams the full padded cache and every admission zeroes max_len rows.
+This module replaces the rectangle with a pool of fixed-size pages plus
+per-slot page tables (the vLLM PagedAttention construction):
+
+  - the physical cache is (num_pages, page_size, ...) arrays owned by the
+    model cache pytree;
+  - each slot owns an ordered list of page ids covering its live positions;
+    logical position p lives at (table[p // page_size], p % page_size);
+  - admission reserves ceil(expected_len / page_size) pages from a free
+    list — O(pages touched), never O(max_len) — and eviction returns them
+    with NO zeroing: stale page contents are dead by construction because
+    attention masks positions >= the slot's live length, so a recycled page
+    is simply overwritten as its new owner decodes forward.
+
+Page id 0 is a reserved *dump* page that is never allocated: free slots'
+page-table rows all point at it, so the batched per-slot cache write
+(`models/layers.Attention.decode_paged`) needs no active-slot masking —
+inactive lanes harmlessly scribble on the dump page.
+
+Everything here is host-side numpy/Python (the scheduler's bookkeeping);
+the device side consumes only the rendered `page_table()` / `lengths()`
+arrays, which ride to the Pallas decode kernel as scalar-prefetch operands
+(`kernels/mx_flash_decode`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+DUMP_PAGE = 0  # reserved page id: write target for inactive slots
+
+
+class PoolExhausted(Exception):
+    """Raised by strict allocation when the free list cannot cover a
+    reservation.  The batcher's admission path uses the non-raising
+    `try_reserve` instead — exhaustion back-pressures the queue, it must
+    never crash the serving loop."""
+
+
+@dataclasses.dataclass
+class PoolStats:
+    num_pages: int          # allocatable pages (excludes the dump page)
+    page_size: int
+    pages_in_use: int
+    pages_free: int
+    live_tokens: int
+    high_water: int         # max pages_in_use seen since construction
+
+    @property
+    def utilization(self) -> float:
+        """Fraction of the allocatable pool currently reserved."""
+        return self.pages_in_use / self.num_pages if self.num_pages else 0.0
+
+    @property
+    def occupancy(self) -> float:
+        """Live tokens / capacity of the reserved pages — internal
+        fragmentation (1.0 = every reserved page row holds a live token)."""
+        cap = self.pages_in_use * self.page_size
+        return self.live_tokens / cap if cap else 1.0
+
+    def as_dict(self) -> dict:
+        return {
+            "num_pages": self.num_pages,
+            "page_size": self.page_size,
+            "pages_in_use": self.pages_in_use,
+            "pages_free": self.pages_free,
+            "live_tokens": self.live_tokens,
+            "high_water": self.high_water,
+            "utilization": self.utilization,
+            "occupancy": self.occupancy,
+        }
+
+
+class PagePool:
+    """Free-list page allocator over `num_pages` allocatable pages.
+
+    ``total_pages`` (what the physical cache arrays are sized to) is
+    ``num_pages + 1``: page 0 is the reserved dump page.  Pages are
+    recycled LIFO — the most recently freed pages are reallocated first,
+    which keeps the working set of hot pages small.
+    """
+
+    def __init__(self, num_pages: int, page_size: int):
+        if num_pages < 1:
+            raise ValueError(f"need at least 1 allocatable page, got {num_pages}")
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        self.num_pages = int(num_pages)
+        self.page_size = int(page_size)
+        # LIFO free list of allocatable ids (1..num_pages); 0 is the dump page
+        self._free: List[int] = list(range(self.num_pages, 0, -1))
+        self._owned: Dict[int, List[int]] = {}   # slot -> page ids, in order
+        self._lengths: Dict[int, int] = {}       # slot -> live token count
+        self._high_water = 0
+
+    # ------------------------------------------------------------------
+    # allocation / release
+    # ------------------------------------------------------------------
+
+    @property
+    def total_pages(self) -> int:
+        """Physical page count the cache arrays must be sized to."""
+        return self.num_pages + 1
+
+    @property
+    def pages_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.num_pages - len(self._free)
+
+    def pages_for(self, tokens: int) -> int:
+        """Pages needed to hold `tokens` positions."""
+        return -(-max(int(tokens), 0) // self.page_size)
+
+    def try_reserve(self, slot: int, tokens: int) -> Optional[List[int]]:
+        """Reserve pages covering `tokens` positions for `slot`.
+
+        Returns the slot's page-id list, or None (and changes NOTHING) when
+        the free list cannot cover it — the caller back-pressures.  A slot
+        must be released before it can be reserved again."""
+        if slot in self._owned:
+            raise ValueError(f"slot {slot} already holds a reservation")
+        need = self.pages_for(tokens)
+        if need > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(need)]
+        self._owned[slot] = pages
+        self._lengths[slot] = 0
+        self._high_water = max(self._high_water, self.pages_in_use)
+        return list(pages)
+
+    def reserve(self, slot: int, tokens: int) -> List[int]:
+        """Strict variant of `try_reserve`: raises PoolExhausted."""
+        got = self.try_reserve(slot, tokens)
+        if got is None:
+            raise PoolExhausted(
+                f"need {self.pages_for(tokens)} pages for slot {slot}, "
+                f"only {len(self._free)} free"
+            )
+        return got
+
+    def extend(self, slot: int, tokens: int) -> Optional[List[int]]:
+        """Grow slot's reservation to cover `tokens` positions (e.g. a
+        request outliving its initial estimate).  Returns the new full page
+        list, or None (unchanged) if the pool cannot cover the growth."""
+        if slot not in self._owned:
+            raise KeyError(f"slot {slot} has no reservation")
+        need = self.pages_for(tokens) - len(self._owned[slot])
+        if need <= 0:
+            return list(self._owned[slot])
+        if need > len(self._free):
+            return None
+        self._owned[slot].extend(self._free.pop() for _ in range(need))
+        self._high_water = max(self._high_water, self.pages_in_use)
+        return list(self._owned[slot])
+
+    def release(self, slot: int) -> int:
+        """Return the slot's pages to the free list (no zeroing — stale
+        contents are masked by length).  Returns the page count freed."""
+        pages = self._owned.pop(slot, None)
+        self._lengths.pop(slot, None)
+        if not pages:
+            return 0
+        self._free.extend(reversed(pages))  # LIFO: hot pages recycle first
+        return len(pages)
+
+    def set_length(self, slot: int, tokens: int) -> None:
+        """Record the slot's live token count (for occupancy stats and the
+        rendered lengths vector)."""
+        if slot not in self._owned:
+            raise KeyError(f"slot {slot} has no reservation")
+        cap = len(self._owned[slot]) * self.page_size
+        if tokens > cap:
+            raise ValueError(
+                f"slot {slot}: length {tokens} exceeds reserved capacity {cap}"
+            )
+        self._lengths[slot] = int(tokens)
+
+    def owned(self, slot: int) -> List[int]:
+        return list(self._owned.get(slot, ()))
+
+    # ------------------------------------------------------------------
+    # device-facing views
+    # ------------------------------------------------------------------
+
+    def page_table(self, n_slots: int, width: int) -> np.ndarray:
+        """(n_slots, width) int32 table; unreserved entries point at the
+        dump page, so every entry is a valid physical page id (the decode
+        kernel's BlockSpec DMAs the steered page unconditionally and relies
+        on the length mask, never on table validity)."""
+        table = np.full((n_slots, width), DUMP_PAGE, np.int32)
+        for slot, pages in self._owned.items():
+            if 0 <= slot < n_slots:
+                k = min(len(pages), width)
+                table[slot, :k] = pages[:k]
+        return table
+
+    def lengths(self, n_slots: int) -> np.ndarray:
+        """(n_slots,) int32 live token counts (0 for slots with no
+        reservation) — the decode kernel's validity mask."""
+        out = np.zeros((n_slots,), np.int32)
+        for slot, ln in self._lengths.items():
+            if 0 <= slot < n_slots:
+                out[slot] = ln
+        return out
+
+    def stats(self) -> PoolStats:
+        return PoolStats(
+            num_pages=self.num_pages,
+            page_size=self.page_size,
+            pages_in_use=self.pages_in_use,
+            pages_free=len(self._free),
+            live_tokens=sum(self._lengths.values()),
+            high_water=self._high_water,
+        )

@@ -1,0 +1,264 @@
+"""Paged split-KV flash decode: kernel-vs-oracle sweeps, paged-vs-dense
+decode parity through the model stack (the acceptance bar: <= 1e-5 in f32
+across ragged batch fills), and chunked-prefill parity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import ops
+from repro.kernels.mx_flash_decode import mx_flash_decode
+from repro.kernels.ref import paged_decode_ref
+from repro.models import build_model
+from repro.models.layers import Attention
+from repro.runtime.kv_pages import PagePool
+
+
+def _paged_setup(rng, B, Hkv, d, ps, W, lengths, P=None):
+    P = P or (B * W + 1)
+    kp = jnp.asarray(rng.standard_normal((P, ps, Hkv, d)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((P, ps, Hkv, d)), jnp.float32)
+    pool = PagePool(P - 1, ps)
+    for s, ln in enumerate(lengths):
+        if ln > 0:
+            pool.reserve(s, ln)
+            pool.set_length(s, ln)
+    table = jnp.asarray(pool.page_table(B, W))
+    return kp, vp, table, jnp.asarray(pool.lengths(B))
+
+
+@pytest.mark.parametrize(
+    "B,H,Hkv,d,ps,W,lengths",
+    [
+        (2, 4, 4, 16, 8, 2, (5, 16)),          # MHA, ragged
+        (3, 8, 2, 32, 8, 4, (1, 17, 32)),      # GQA groups=4
+        (4, 6, 3, 8, 4, 3, (12, 0, 3, 7)),     # free slot + odd heads
+        (1, 2, 1, 64, 16, 1, (16,)),           # single page
+    ],
+)
+def test_kernel_matches_oracle(B, H, Hkv, d, ps, W, lengths):
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((B, H, d)), jnp.float32)
+    kp, vp, table, lns = _paged_setup(rng, B, Hkv, d, ps, W, lengths)
+    out = mx_flash_decode(q, kp, vp, table, lns, interpret=True)
+    ref = paged_decode_ref(q, kp, vp, table, lns)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+    # free slots produce exactly-zero rows
+    for i, ln in enumerate(lengths):
+        if ln == 0:
+            assert np.all(np.asarray(out[i]) == 0.0)
+
+
+def test_kernel_scaled_pages_match_oracle():
+    """int8-cache layout: per-row dequant scale pages steered by the same
+    table must match the oracle's gathered dequantization."""
+    rng = np.random.default_rng(1)
+    B, H, Hkv, d, ps, W = 3, 8, 4, 16, 8, 3
+    q = jnp.asarray(rng.standard_normal((B, H, d)), jnp.float32)
+    P = B * W + 1
+    kp = jnp.asarray(rng.integers(-127, 128, (P, ps, Hkv, d)), jnp.int8)
+    vp = jnp.asarray(rng.integers(-127, 128, (P, ps, Hkv, d)), jnp.int8)
+    ks = jnp.asarray(rng.uniform(0.001, 0.05, (P, ps, Hkv)), jnp.float32)
+    vs = jnp.asarray(rng.uniform(0.001, 0.05, (P, ps, Hkv)), jnp.float32)
+    pool = PagePool(P - 1, ps)
+    lengths = (20, 3, 24)
+    for s, ln in enumerate(lengths):
+        pool.reserve(s, ln)
+        pool.set_length(s, ln)
+    table = jnp.asarray(pool.page_table(B, W))
+    lns = jnp.asarray(pool.lengths(B))
+    out = mx_flash_decode(q, kp.astype(jnp.float32), vp.astype(jnp.float32),
+                          table, lns, k_scale=ks, v_scale=vs, interpret=True)
+    ref = paged_decode_ref(q, kp, vp, table, lns, k_scale=ks, v_scale=vs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_stale_page_contents_are_dead():
+    """Recycled pages carry a previous tenant's K/V; the length mask must
+    make them unreachable — poisoning every non-resident page with huge
+    values must not change the output."""
+    rng = np.random.default_rng(2)
+    B, H, Hkv, d, ps, W = 2, 4, 2, 16, 4, 2
+    q = jnp.asarray(rng.standard_normal((B, H, d)), jnp.float32)
+    kp, vp, table, lns = _paged_setup(rng, B, Hkv, d, ps, W, (6, 3))
+    ref = paged_decode_ref(q, kp, vp, table, lns)
+    # poison: rows at positions >= length inside resident pages AND whole
+    # unallocated pages.  Build a mask of live (page, row) coordinates.
+    live = np.zeros(kp.shape[:2], bool)
+    tbl = np.asarray(table)
+    for s, ln in enumerate((6, 3)):
+        for j in range(W):
+            for r in range(ps):
+                if j * ps + r < ln:
+                    live[tbl[s, j], r] = True
+    mask = jnp.asarray(live)[:, :, None, None]
+    poison_k = jnp.where(mask, kp, 1e30)
+    poison_v = jnp.where(mask, vp, 1e30)
+    out = paged_decode_ref(q, poison_k, poison_v, table, lns)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+    outk = mx_flash_decode(q, poison_k, poison_v, table, lns, interpret=True)
+    np.testing.assert_allclose(np.asarray(outk), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# layer-level: Attention.decode_paged vs Attention.decode
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas_mx"])
+def test_attention_paged_matches_dense(backend):
+    """The acceptance bar: paged decode == dense decode to <= 1e-5 (f32)
+    at ragged per-slot positions, on both the oracle and kernel paths."""
+    attn = Attention(d_model=32, n_heads=4, n_kv_heads=2)
+    p = attn.init(jax.random.PRNGKey(0))
+    B, max_len, ps = 4, 16, 4
+    rng = np.random.default_rng(0)
+    dense = attn.init_cache(B, max_len, dtype=jnp.float32)
+    pool = PagePool(B * (max_len // ps), ps)
+    for s in range(B):
+        pool.reserve(s, max_len)
+    paged = attn.init_paged_cache(pool.total_pages, ps, dtype=jnp.float32)
+    width = max_len // ps
+
+    # ragged fill: slot i starts decoding at depth i*2
+    policy = ops.MXPolicy(backend=backend, interpret=True)
+    with ops.use_policy(policy):
+        for t in range(8):
+            idx = np.array([min(t + 2 * i, max_len - 1) for i in range(B)],
+                           np.int32)
+            x = jnp.asarray(rng.standard_normal((B, 1, 32)), jnp.float32)
+            for s in range(B):
+                pool.set_length(s, int(idx[s]) + 1)
+            table = jnp.asarray(pool.page_table(B, width))
+            lns = jnp.asarray(pool.lengths(B))
+            od, dense = attn.decode(p, x, dense, jnp.asarray(idx))
+            op, paged = attn.decode_paged(p, x, paged, jnp.asarray(idx),
+                                          table, lns)
+            np.testing.assert_allclose(np.asarray(od), np.asarray(op),
+                                       rtol=1e-5, atol=1e-5)
+
+
+def test_attention_paged_int8_roundtrip():
+    """int8 paged cache: quantize-on-write / dequant-on-read keeps the
+    attention output close to the f32 cache (per-row scales bound the
+    error to int8 resolution)."""
+    from repro.core.precision import QuantSpec
+    attn = Attention(d_model=32, n_heads=4, n_kv_heads=2)
+    p = attn.init(jax.random.PRNGKey(0))
+    B, max_len, ps = 2, 8, 4
+    rng = np.random.default_rng(3)
+    pool = PagePool(B * (max_len // ps), ps)
+    for s in range(B):
+        pool.reserve(s, max_len)
+    f32c = attn.init_paged_cache(pool.total_pages, ps, dtype=jnp.float32)
+    q8c = attn.init_paged_cache(pool.total_pages, ps,
+                                kv_quant=QuantSpec("int8", "tile"))
+    assert q8c["k_pages"].dtype == jnp.int8 and "k_scale" in q8c
+    width = max_len // ps
+    for t in range(6):
+        x = jnp.asarray(rng.standard_normal((B, 1, 32)), jnp.float32)
+        idx = jnp.full((B,), t, jnp.int32)
+        for s in range(B):
+            pool.set_length(s, t + 1)
+        table = jnp.asarray(pool.page_table(B, width))
+        lns = jnp.asarray(pool.lengths(B))
+        of, f32c = attn.decode_paged(p, x, f32c, idx, table, lns)
+        oq, q8c = attn.decode_paged(p, x, q8c, idx, table, lns)
+        err = float(jnp.abs(of - oq).max())
+        scale = float(jnp.abs(of).max())
+        assert err < 0.05 * max(scale, 1.0), (t, err, scale)
+
+
+# ---------------------------------------------------------------------------
+# model-level: decode_step_paged vs decode_step, chunked prefill
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_model_paged_decode_matches_dense_ragged():
+    cfg = get_config("llama3.2-1b-smoke")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, max_len, ps = 3, 16, 4
+    toks = np.asarray(jax.random.randint(jax.random.PRNGKey(1), (B, 8), 0,
+                                         cfg.vocab))
+    dc = model.make_cache(B, max_len, mode="init", dtype=jnp.float32)
+    pool = PagePool(B * (max_len // ps), ps)
+    for s in range(B):
+        pool.reserve(s, max_len)
+    pc = model.make_paged_cache(pool.total_pages, ps, mode="init",
+                                dtype=jnp.float32)
+    width = max_len // ps
+    errs = []
+    for t in range(8):
+        idx = jnp.full((B,), t, jnp.int32)
+        ld, dc = model.decode_step(params, toks[:, t:t + 1], dc, idx)
+        for s in range(B):
+            pool.set_length(s, t + 1)
+        table = jnp.asarray(pool.page_table(B, width))
+        lns = jnp.asarray(pool.lengths(B))
+        lp, pc = model.decode_step_paged(params, jnp.asarray(toks[:, t:t + 1]),
+                                         pc, idx, table, lns)
+        errs.append(float(jnp.abs(ld - lp).max()))
+    assert max(errs) <= 1e-5, errs
+
+
+def test_paged_cache_modes_agree():
+    """abstract/axes paged-cache trees mirror the real tree (the dry-run
+    contract make_cache already satisfies)."""
+    cfg = get_config("llama3.2-1b-smoke")
+    model = build_model(cfg)
+    real = model.make_paged_cache(9, 4, mode="init")
+    abstract = model.make_paged_cache(9, 4, mode="abstract")
+    rs = jax.tree.map(lambda a: (a.shape, str(a.dtype)), real)
+    ab = jax.tree.map(lambda a: (a.shape, str(a.dtype)), abstract)
+    assert rs == ab
+    axes = model.make_paged_cache(9, 4, mode="axes")
+    n = len(jax.tree.leaves(real))
+    na = len(jax.tree.leaves(axes, is_leaf=lambda x: isinstance(x, tuple)
+                             and all(e is None or isinstance(e, str) for e in x)))
+    assert n == na
+
+
+def test_unsupported_arch_raises():
+    cfg = get_config("zamba2-2.7b-smoke")
+    model = build_model(cfg)
+    assert not model.supports_paged()
+    with pytest.raises(ValueError):
+        model.make_paged_cache(8, 4)
+
+
+@pytest.mark.slow
+def test_chunked_prefill_matches_token_stepping():
+    """prefill_step in chunks == the same tokens stepped one at a time:
+    identical last logits AND identical cache (so decode continues
+    seamlessly)."""
+    cfg = get_config("llama3.2-1b-smoke")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S, max_len = 2, 7, 12
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    stepped = model.make_cache(B, max_len, mode="init", dtype=jnp.float32)
+    for t in range(S):
+        lg_s, stepped = model.decode_step(params, toks[:, t:t + 1], stepped, t)
+    chunked = model.make_cache(B, max_len, mode="init", dtype=jnp.float32)
+    t = 0
+    for c in (3, 2, 2):  # uneven chunks
+        lg_c, chunked = model.prefill_step(params, toks[:, t:t + c], chunked, t)
+        t += c
+    np.testing.assert_allclose(np.asarray(lg_c[:, -1]), np.asarray(lg_s[:, -1]),
+                               rtol=1e-4, atol=1e-4)
+    for a, b in zip(jax.tree.leaves(stepped), jax.tree.leaves(chunked)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)
+    # decode after the chunked prefill continues identically
+    nt = jnp.argmax(lg_c[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    ld, _ = model.decode_step(params, nt, stepped, S)
+    lc, _ = model.decode_step(params, nt, chunked, S)
+    np.testing.assert_allclose(np.asarray(ld), np.asarray(lc),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,246 @@
+"""Page allocator edge cases + dense-vs-paged batcher parity.
+
+The allocator invariants under test: slot churn recycles pages (LIFO, no
+leaks), exhaustion back-pressures instead of crashing, page tables stay
+correct under eviction/readmission, and a paged `ContinuousBatcher`
+produces EXACTLY the dense batcher's outputs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.runtime.batcher import ContinuousBatcher, Request
+from repro.runtime.kv_pages import DUMP_PAGE, PagePool, PoolExhausted
+
+
+# ---------------------------------------------------------------------------
+# allocator unit tests (pure host-side)
+# ---------------------------------------------------------------------------
+
+
+def test_reserve_release_recycles():
+    pool = PagePool(num_pages=8, page_size=4)
+    a = pool.reserve(0, 10)  # 3 pages
+    b = pool.reserve(1, 4)   # 1 page
+    assert len(a) == 3 and len(b) == 1
+    assert pool.pages_in_use == 4 and pool.pages_free == 4
+    assert DUMP_PAGE not in a + b  # page 0 is never allocated
+    assert pool.release(0) == 3
+    assert pool.pages_in_use == 1
+    # LIFO recycling: the just-freed pages come back first
+    c = pool.reserve(2, 12)
+    assert set(c) & set(a)
+    # releasing an empty/unknown slot is a no-op, not an error
+    assert pool.release(99) == 0
+
+
+def test_exhaustion_backpressure_and_strict():
+    pool = PagePool(num_pages=3, page_size=4)
+    assert pool.try_reserve(0, 8) is not None  # 2 pages
+    # 2 more pages don't fit: non-raising path returns None, state unchanged
+    before = pool.pages_free
+    assert pool.try_reserve(1, 8) is None
+    assert pool.pages_free == before
+    with pytest.raises(PoolExhausted):
+        pool.reserve(1, 8)
+    assert pool.try_reserve(1, 4) is not None  # 1 page still fits
+
+
+def test_double_reserve_rejected():
+    pool = PagePool(num_pages=4, page_size=4)
+    pool.reserve(0, 4)
+    with pytest.raises(ValueError):
+        pool.try_reserve(0, 4)
+
+
+def test_extend_and_length_bounds():
+    pool = PagePool(num_pages=4, page_size=4)
+    pool.reserve(0, 4)
+    assert len(pool.extend(0, 9)) == 3  # grows to 3 pages
+    assert pool.extend(0, 100) is None  # can't cover: unchanged
+    assert len(pool.owned(0)) == 3
+    pool.set_length(0, 12)
+    with pytest.raises(ValueError):
+        pool.set_length(0, 13)  # beyond reserved capacity
+
+
+def test_page_table_correct_under_eviction():
+    pool = PagePool(num_pages=6, page_size=4)
+    p0 = pool.reserve(0, 8)
+    p1 = pool.reserve(1, 8)
+    table = pool.page_table(n_slots=3, width=4)
+    assert table.shape == (3, 4)
+    assert table[0, :2].tolist() == p0 and table[1, :2].tolist() == p1
+    # unreserved entries (and whole free slots) point at the dump page
+    assert (table[0, 2:] == DUMP_PAGE).all() and (table[2] == DUMP_PAGE).all()
+    pool.set_length(0, 7)
+    assert pool.lengths(3).tolist() == [7, 0, 0]
+    # evict slot 0: its table row collapses to the dump page; slot 1 keeps
+    # its pages even though the free list changed underneath
+    pool.release(0)
+    table2 = pool.page_table(3, 4)
+    assert (table2[0] == DUMP_PAGE).all()
+    assert table2[1, :2].tolist() == p1
+    # a new tenant reuses slot 0 with recycled pages, disjoint from slot 1
+    pool.reserve(0, 16)
+    table3 = pool.page_table(3, 4)
+    assert not (set(table3[0].tolist()) - {DUMP_PAGE}) & set(p1)
+
+
+def test_churn_never_leaks():
+    pool = PagePool(num_pages=7, page_size=2)
+    rng = np.random.default_rng(0)
+    live = {}
+    for step in range(300):
+        slot = int(rng.integers(0, 5))
+        if slot in live:
+            pool.release(slot)
+            del live[slot]
+        else:
+            got = pool.try_reserve(slot, int(rng.integers(1, 9)))
+            if got is not None:
+                live[slot] = got
+        used = sum(len(v) for v in live.values())
+        assert pool.pages_in_use == used
+        assert pool.pages_free == 7 - used
+        # no page owned twice
+        owned = [p for v in live.values() for p in v]
+        assert len(owned) == len(set(owned))
+        assert DUMP_PAGE not in owned
+    st = pool.stats()
+    assert st.high_water <= 7 and st.pages_in_use == sum(
+        len(v) for v in live.values())
+
+
+def test_stats_occupancy():
+    pool = PagePool(num_pages=8, page_size=4)
+    pool.reserve(0, 16)
+    pool.set_length(0, 10)
+    st = pool.stats()
+    assert st.pages_in_use == 4 and st.live_tokens == 10
+    assert st.occupancy == pytest.approx(10 / 16)
+    assert st.utilization == pytest.approx(0.5)
+    assert isinstance(st.as_dict()["occupancy"], float)
+
+
+# ---------------------------------------------------------------------------
+# batcher integration
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    cfg = get_config("llama3.2-1b-smoke")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _requests(cfg, seed=0, plens=(3, 5, 4, 2, 6), max_new=4):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i, prompt=rng.integers(0, cfg.vocab, n).astype(np.int32),
+                    max_new=max_new)
+            for i, n in enumerate(plens)]
+
+
+@pytest.mark.slow  # full batched decode run, twice
+def test_paged_matches_dense_run_to_completion(model_and_params):
+    cfg, model, params = model_and_params
+    dense = ContinuousBatcher(model, params, batch_slots=2, max_len=16)
+    for r in _requests(cfg):
+        dense.submit(r)
+    want = {k: v.output for k, v in dense.run_to_completion().items()}
+
+    paged = ContinuousBatcher(model, params, batch_slots=2, max_len=16,
+                              paged=True, page_size=4)
+    for r in _requests(cfg):
+        paged.submit(r)
+    got = {k: v.output for k, v in paged.run_to_completion().items()}
+    assert got == want
+    st = paged.pool_stats()
+    assert st.pages_in_use == 0 and st.high_water > 0  # all pages returned
+
+
+@pytest.mark.slow
+def test_paged_backpressure_completes_everything(model_and_params):
+    """A pool that fits ~one request at a time must still drain the queue
+    (admission back-pressures; nothing crashes, nothing is lost) and the
+    outputs must STILL match the unconstrained dense run."""
+    cfg, model, params = model_and_params
+    dense = ContinuousBatcher(model, params, batch_slots=2, max_len=16)
+    for r in _requests(cfg):
+        dense.submit(r)
+    want = {k: v.output for k, v in dense.run_to_completion().items()}
+
+    tight = ContinuousBatcher(model, params, batch_slots=2, max_len=16,
+                              paged=True, page_size=4, num_pages=3)
+    for r in _requests(cfg):
+        tight.submit(r)
+    got = {k: v.output for k, v in tight.run_to_completion().items()}
+    assert got == want
+    assert tight.pool_stats().high_water <= 3
+
+
+@pytest.mark.slow
+def test_paged_overlong_prompt_truncates_not_crashes(model_and_params):
+    """A prompt longer than max_len exhausts its page reservation mid-
+    prefill; the slot must be truncated and evicted (degrade), never raise
+    out of the serving loop."""
+    cfg, model, params = model_and_params
+    b = ContinuousBatcher(model, params, batch_slots=2, max_len=8,
+                          paged=True, page_size=4)
+    rng = np.random.default_rng(5)
+    b.submit(Request(rid=0, prompt=rng.integers(0, cfg.vocab, 12).astype(np.int32),
+                     max_new=2))
+    b.submit(Request(rid=1, prompt=rng.integers(0, cfg.vocab, 3).astype(np.int32),
+                     max_new=2))
+    fin = b.run_to_completion()
+    assert set(fin) == {0, 1}
+    assert len(fin[1].output) == 2  # the well-formed request is unaffected
+    assert b.pool_stats().pages_in_use == 0  # truncated slot's pages freed
+
+
+def test_dense_rejects_kv_quant(model_and_params):
+    from repro.core.precision import QuantSpec
+
+    cfg, model, params = model_and_params
+    with pytest.raises(ValueError, match="paged"):
+        ContinuousBatcher(model, params, batch_slots=2, max_len=8,
+                          kv_quant=QuantSpec("int8", "tile"))
+
+
+def test_paged_rejects_unsupported_arch(model_and_params):
+    _, _, params = model_and_params
+    cfg = get_config("zamba2-2.7b-smoke")  # shared block + mamba segments
+    model = build_model(cfg)
+    with pytest.raises(ValueError, match="paged"):
+        ContinuousBatcher(model, model.init(jax.random.PRNGKey(0)),
+                          batch_slots=2, max_len=16, paged=True)
+
+
+@pytest.mark.slow
+def test_paged_int8_cache_close_to_f32(model_and_params):
+    """int8 KV cache (per-row scale pages) tracks the f32 cache: same
+    request stream, token outputs mostly identical (greedy decode can flip
+    a near-tie under quantization noise, so demand strong agreement rather
+    than equality)."""
+    from repro.core.precision import QuantSpec
+
+    cfg, model, params = model_and_params
+    f32 = ContinuousBatcher(model, params, batch_slots=2, max_len=16,
+                            paged=True, page_size=4)
+    for r in _requests(cfg):
+        f32.submit(r)
+    want = {k: v.output for k, v in f32.run_to_completion().items()}
+
+    q = ContinuousBatcher(model, params, batch_slots=2, max_len=16,
+                          paged=True, page_size=4,
+                          kv_quant=QuantSpec("int8", "tile"))
+    for r in _requests(cfg):
+        q.submit(r)
+    got = {k: v.output for k, v in q.run_to_completion().items()}
+    assert set(got) == set(want)
+    toks = [(a == b) for k in want for a, b in zip(want[k], got[k])]
+    assert sum(toks) / len(toks) >= 0.75, (want, got)

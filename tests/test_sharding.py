@@ -140,3 +140,53 @@ print("SHARDED_OK", loss0, float(m["loss"]))
                        env={**__import__("os").environ, "PYTHONPATH": "src"},
                        cwd=__import__("pathlib").Path(__file__).resolve().parents[1])
     assert "SHARDED_OK" in r.stdout, f"stdout={r.stdout}\nstderr={r.stderr[-2000:]}"
+
+
+# ---------------------------------------------------------------------------
+# ring-schedule autotuning (CollectivePolicy from the transfer model)
+# ---------------------------------------------------------------------------
+
+
+def test_autotune_prefers_bidir_when_comm_bound():
+    """Comm-bound chunk GEMMs (tiny compute, big transfers vs a slow link):
+    halving per-link bytes wins, so the model must pick 'bidir'."""
+    from repro.core.transfer_model import GemmProblem
+    from repro.parallel.sharding import autotune_collective_policy
+
+    mesh = _mesh((1, 4))
+    problems = [("allgather", GemmProblem(1024, 1024, 8192, 2)),
+                ("reduce_scatter", GemmProblem(1024, 1024, 8192, 2))]
+    pol, rep = autotune_collective_policy(
+        mesh, problems, ici_bw=1e9, peak_flops=1e15)
+    assert pol.direction == "bidir"
+    assert rep["chosen_direction"] == "bidir"
+    assert rep["candidate_time_s"]["bidir"] < rep["candidate_time_s"]["fwd"]
+    assert rep["autotuned"] and rep["n_problems"] == 2
+
+
+def test_autotune_ties_break_to_fwd_when_compute_bound():
+    """Compute-bound rings hide all comm either way — overlapped time is
+    identical, and the tie must break toward 'fwd' (fewer buffers)."""
+    from repro.core.transfer_model import GemmProblem
+    from repro.parallel.sharding import autotune_collective_policy
+
+    mesh = _mesh((1, 4))
+    problems = [("allgather", GemmProblem(4096, 4096, 4096, 2))]
+    pol, rep = autotune_collective_policy(
+        mesh, problems, ici_bw=1e15, peak_flops=1e9)  # comm ~free
+    assert rep["candidate_time_s"]["bidir"] == pytest.approx(
+        rep["candidate_time_s"]["fwd"])
+    assert pol.direction == "fwd"
+    # the chosen overlapped schedule never loses to the serialized one
+    assert min(rep["candidate_time_s"].values()) <= rep["serialized_time_s"]
+
+
+def test_autotune_rejects_unknown_axis():
+    from repro.core.transfer_model import GemmProblem
+    from repro.parallel.sharding import autotune_collective_policy
+
+    mesh = _mesh((2, 2))
+    with pytest.raises(ValueError, match="mesh"):
+        autotune_collective_policy(
+            mesh, [("allgather", GemmProblem(64, 64, 64, 2))],
+            axis="nonexistent", ici_bw=1e9, peak_flops=1e12)

@@ -50,6 +50,26 @@ def test_serve_launcher(tmp_path):
     assert "generated (2, 4)" in r.stdout
 
 
+@pytest.mark.slow
+def test_serve_launcher_paged(tmp_path):
+    r = _run("repro.launch.serve", "--arch", "llama3.2-1b", "--smoke",
+             "--batch", "2", "--prompt-len", "4", "--gen", "3",
+             "--paged", "--page-size", "4")
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "paged cache" in r.stdout
+    assert "pages:" in r.stdout  # pages-in-use report
+
+
+@pytest.mark.slow
+def test_serve_launcher_chunked_prefill(tmp_path):
+    r = _run("repro.launch.serve", "--arch", "llama3.2-1b", "--smoke",
+             "--batch", "2", "--prompt-len", "8", "--gen", "3",
+             "--prefill-chunk", "4")
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "prefill: 8 tokens in chunks of 4" in r.stdout
+    assert "generated (2, 3)" in r.stdout
+
+
 def test_collective_parser_on_canned_hlo():
     from repro.core.roofline import parse_collective_bytes
 

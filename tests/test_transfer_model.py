@@ -116,3 +116,44 @@ def test_hierarchy_traffic_grows_downward(M, N, K):
     t2 = vrf_to_buf(p, 8, 8, 8, 8, 4, 4, inter_k_buffering_vrf=True)
     t3 = buf_to_fpu(p, 8, 4, 4, t_a=4, t_b=4)
     assert t3.total >= t2.total >= t1.total
+
+
+# ---------------------------------------------------------------------------
+# Paged KV decode traffic (serving mapping)
+# ---------------------------------------------------------------------------
+
+
+def test_paged_kv_decode_bytes_scale_with_live_tokens():
+    from repro.core.transfer_model import PagedKVDecode
+
+    m = PagedKVDecode(batch_slots=8, max_len=256, page_size=8,
+                      n_kv_heads=4, head_dim=32, n_layers=2, kv_bytes=2)
+    full = [256] * 8
+    half = [128] * 8
+    quarter = [64] * 8
+    # dense traffic is fill-independent; paged tracks resident pages
+    assert m.dense_step_bytes(half) == m.dense_step_bytes(full)
+    assert m.paged_step_bytes(full) == m.dense_step_bytes(full)  # same rows
+    assert abs(m.traffic_ratio(half) - 0.5) < 0.01
+    assert abs(m.traffic_ratio(quarter) - 0.25) < 0.01
+    # page rounding: lengths one past a boundary cost one extra page
+    assert m.paged_step_bytes([9] * 8) == m.paged_step_bytes([16] * 8)
+    # free slots cost nothing paged, full rectangle dense
+    assert m.paged_step_bytes([0] * 8) == 0
+    assert m.dense_step_bytes([0] * 8) == 8 * 256 * m.row_bytes * 2
+
+
+def test_paged_kv_decode_report_fields():
+    from repro.core.transfer_model import PagedKVDecode
+
+    m = PagedKVDecode(batch_slots=4, max_len=64, page_size=16,
+                      n_kv_heads=2, head_dim=16, n_layers=3,
+                      kv_bytes=1, scale_bytes=4)  # int8 cache + f32 scales
+    rec = m.report([10, 33, 64, 0], hbm_bw=819e9)
+    assert rec["resident_pages"] == 1 + 3 + 4
+    assert rec["traffic_credit_bytes"] == (
+        rec["dense_step_bytes"] - rec["paged_step_bytes"])
+    assert 0 < rec["bytes_ratio"] < 1
+    assert rec["paged_memory_s"] < rec["dense_memory_s"]
+    # int8 payload + sidecar: row_bytes = 2*2*16*1 + 2*2*4
+    assert m.row_bytes == 64 + 16
