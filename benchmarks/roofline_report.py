@@ -5,7 +5,8 @@ from __future__ import annotations
 
 import json
 from pathlib import Path
-from typing import Dict, List, Optional
+from typing import List
+
 
 DRYRUN_DIR = Path("experiments/dryrun")
 

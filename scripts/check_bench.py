@@ -1,0 +1,176 @@
+"""CI bench-regression gate: freshly generated BENCH_*.json vs committed.
+
+The benchmarks (benchmarks/kernel_bench --dtypes, decode_bench,
+collective_bench, prefix_bench) overwrite the repo-root BENCH files in
+place, so after a CI bench step the working tree holds the FRESH numbers
+and `git show HEAD:<file>` still serves the committed BASELINE.  This
+script diffs the two with per-metric-class tolerances and exits nonzero on
+regression:
+
+  - exact-model metrics (bytes, ratios, counts, matched tokens, FLOPs —
+    anything the analytical transfer/prefix models produce): +-1%.  These
+    are deterministic; movement means the model or the measured traffic
+    changed.
+  - relative CPU timings (speedups, step-time ratios, error floats):
+    +-25% — noisy, but machine-load cancels out of a ratio, so only real
+    shifts gate.
+  - absolute walls (us/s, tok/s): reported when they drift, never fatal —
+    the same bench on the same machine shows 2x wall swings under load,
+    and CI runners are not the baseline machine.  The benches' own
+    acceptance asserts (which DO gate, via the boolean class) already
+    bound the walls that matter relative to each other.
+  - booleans (the benches' own acceptance checks): a true in the baseline
+    must stay true.
+
+Keys added by a newer bench pass freely; keys REMOVED relative to the
+baseline are regressions (a silently vanished metric is how gates rot).
+A file absent from HEAD (first run of a new bench) passes with a note.
+
+  python scripts/check_bench.py                       # all four files
+  python scripts/check_bench.py BENCH_decode.json     # just one
+  python scripts/check_bench.py --baseline-dir saved/ # explicit baselines
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+DEFAULT_FILES = ("BENCH_quant.json", "BENCH_decode.json",
+                 "BENCH_collective.json", "BENCH_prefix.json")
+
+EXACT_TOL = 0.01
+TIMING_TOL = 0.25
+
+# path-component patterns (lowercased) classifying a metric.  Absolute
+# walls (seconds/us suffixes, matched at the END only — "paged_step_bytes"
+# is exact-model — and token rates) are informational; ratio-type timing
+# metrics gate at the timing tolerance; everything else is exact-model.
+_WALL_SUFFIXES = ("_us", "_s")
+_WALL_MARKS = ("tok_per_s", "wall")
+_TIMING_MARKS = ("time", "speedup", "ttft", "err", "churn", "occupancy",
+                 "utilization", "headroom", "high_water", "pool")
+
+
+def _metric_class(path: tuple) -> str:
+    for comp in path:
+        c = str(comp).lower()
+        if (c == "us" or c.endswith(_WALL_SUFFIXES)
+                or any(m in c for m in _WALL_MARKS)):
+            return "wall"
+    for comp in path:
+        c = str(comp).lower()
+        if any(m in c for m in _TIMING_MARKS):
+            return "timing"
+    return "exact"
+
+
+def _walk(base, fresh, path, problems):
+    """Recursive compare; appends (path, message) problem tuples."""
+    where = ".".join(str(p) for p in path) or "<root>"
+    if isinstance(base, dict):
+        if not isinstance(fresh, dict):
+            problems.append((where, f"was object, now {type(fresh).__name__}"))
+            return
+        for k, bv in base.items():
+            if k not in fresh:
+                problems.append((f"{where}.{k}", "metric missing from fresh run"))
+                continue
+            _walk(bv, fresh[k], path + (k,), problems)
+        return
+    if isinstance(base, list):
+        if not isinstance(fresh, list) or len(fresh) != len(base):
+            problems.append((where, f"list changed: {base!r} -> {fresh!r}"))
+            return
+        for i, (bv, fv) in enumerate(zip(base, fresh)):
+            _walk(bv, fv, path + (i,), problems)
+        return
+    if isinstance(base, bool):
+        # a passing acceptance check must keep passing
+        if base and fresh is not True:
+            problems.append((where, f"check regressed: true -> {fresh!r}"))
+        return
+    if isinstance(base, (int, float)):
+        if not isinstance(fresh, (int, float)) or isinstance(fresh, bool):
+            problems.append((where, f"was number, now {fresh!r}"))
+            return
+        kind = _metric_class(path)
+        denom = max(abs(base), abs(fresh), 1e-12)
+        rel = abs(fresh - base) / denom
+        if kind == "wall":
+            if rel > TIMING_TOL:  # informational: walls never gate
+                print(f"    note: {where} wall drift {rel:.1%} "
+                      f"({base!r} -> {fresh!r})")
+            return
+        tol = TIMING_TOL if kind == "timing" else EXACT_TOL
+        if rel > tol:
+            label = "timing" if kind == "timing" else "exact-model"
+            problems.append((where, f"{label} drift {rel:.1%} > {tol:.0%} "
+                                    f"({base!r} -> {fresh!r})"))
+        return
+    if base != fresh:
+        problems.append((where, f"changed: {base!r} -> {fresh!r}"))
+
+
+def _baseline(name: str, baseline_dir: Path | None):
+    if baseline_dir is not None:
+        p = baseline_dir / name
+        return json.loads(p.read_text()) if p.exists() else None
+    proc = subprocess.run(["git", "show", f"HEAD:{name}"], cwd=REPO,
+                          capture_output=True, text=True)
+    if proc.returncode != 0:
+        return None
+    return json.loads(proc.stdout)
+
+
+def check_file(name: str, baseline_dir: Path | None) -> list:
+    fresh_path = REPO / name
+    if not fresh_path.exists():
+        return [(name, "fresh file missing (bench did not run?)")]
+    base = _baseline(name, baseline_dir)
+    if base is None:
+        print(f"  {name}: no committed baseline (first run)", end=" -> ")
+        return []
+    fresh = json.loads(fresh_path.read_text())
+    problems = []
+    _walk(base, fresh, (), problems)
+    return [(f"{name}:{w}", msg) for w, msg in problems]
+
+
+def main(argv=None) -> int:
+    global TIMING_TOL
+    ap = argparse.ArgumentParser()
+    ap.add_argument("files", nargs="*", default=None,
+                    help=f"BENCH files to gate (default: {DEFAULT_FILES})")
+    ap.add_argument("--baseline-dir", type=Path, default=None,
+                    help="read baselines from this directory instead of "
+                         "`git show HEAD:<file>`")
+    ap.add_argument("--timing-tol", type=float, default=None,
+                    help=f"override the timing tolerance (default "
+                         f"{TIMING_TOL})")
+    args = ap.parse_args(argv)
+    if args.timing_tol is not None:
+        TIMING_TOL = args.timing_tol
+
+    files = args.files or list(DEFAULT_FILES)
+    all_problems = []
+    for name in files:
+        probs = check_file(name, args.baseline_dir)
+        status = "FAIL" if probs else "ok"
+        if (REPO / name).exists() or probs:
+            print(f"  {name}: {status}")
+        all_problems += probs
+    if all_problems:
+        print(f"\n{len(all_problems)} bench regression(s):", file=sys.stderr)
+        for where, msg in all_problems:
+            print(f"  {where}: {msg}", file=sys.stderr)
+        return 1
+    print("bench gate: all files within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

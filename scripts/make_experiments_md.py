@@ -5,7 +5,6 @@
 from __future__ import annotations
 
 import argparse
-import json
 import sys
 from pathlib import Path
 
@@ -13,7 +12,7 @@ _REPO = Path(__file__).resolve().parents[1]
 sys.path.insert(0, str(_REPO / "src"))
 sys.path.insert(0, str(_REPO))
 
-from benchmarks.roofline_report import fmt_seconds, load_records, markdown_table  # noqa: E402
+from benchmarks.roofline_report import load_records, markdown_table  # noqa: E402
 
 HEADER = """# EXPERIMENTS — MX on TPU v5e meshes (JAX reproduction)
 

@@ -3,7 +3,6 @@ Table IV, plus the tile/sub-tile configurations evaluated there.  Consumed
 by benchmarks/table*.py and examples/tile_explorer.py."""
 from __future__ import annotations
 
-import dataclasses
 from typing import Tuple
 
 # (M=N=K, elem_bytes) pairs from Table IV

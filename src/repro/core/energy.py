@@ -23,7 +23,7 @@ This module is consumed by `benchmarks/table4_perf_energy.py`.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, Sequence
 
 import numpy as np
 

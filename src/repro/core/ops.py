@@ -52,7 +52,6 @@ from .precision import (
     PrecisionPolicy,
     current_precision,
     resolve_precision,
-    use_precision,
 )
 from .tiling import DEFAULT_VMEM_BUDGET, TilePlan, plan_matmul_tiles
 from .transfer_model import GemmProblem

@@ -12,7 +12,8 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, Iterable, Optional
+from typing import Dict, Optional
+
 
 # TPU v5e, per chip (contract-specified):
 PEAK_FLOPS_BF16 = 197e12  # FLOP/s

@@ -13,9 +13,8 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Iterable, List, Optional, Sequence, Tuple
+from typing import Iterable, List, Optional, Tuple
 
-import numpy as np
 
 from .transfer_model import GemmProblem, PallasGemmTiling
 

@@ -16,7 +16,6 @@ and "Arithmetic Intensity" columns of the paper's Table IV *exactly* for all
 from __future__ import annotations
 
 import dataclasses
-from fractions import Fraction
 from typing import Optional
 
 
@@ -491,6 +490,111 @@ class PagedKVDecode:
             rec["dense_memory_s"] = dense / hbm_bw
             rec["paged_memory_s"] = paged / hbm_bw
         return rec
+
+
+@dataclasses.dataclass(frozen=True)
+class SharedPrefixPrefill:
+    """Prefill work a prefix-cache hit avoids (runtime/prefix_cache).
+
+    A request whose first ``matched`` prompt tokens map onto pages some
+    earlier request already prefilled skips, per transformer layer:
+
+      - the prefill GEMMs for those tokens (qkv, attention-out, and the MLP
+        up/gate/down projections — the per-token weight-times-activation
+        FLOPs, exactly the contractions `ops.linear` would have launched);
+      - the weight bytes those GEMM launches would have streamed from HBM
+        once per prefill chunk, and the activation reads/writes around
+        them;
+      - the K/V page writes for the matched rows (the new request
+        *references* the resident rows instead of re-writing them — the
+        tile-buffer reuse argument applied to the cache).
+
+    Attention-score FLOPs are NOT credited: the tail tokens still attend
+    over the shared prefix, so score work against those positions is paid
+    by whoever computes the tail.  ``act_bytes`` is the activation element
+    size of prefill compute; ``kv_bytes`` the cache payload element size
+    (+ ``scale_bytes`` per row per head for quantized caches).
+    """
+
+    d_model: int
+    d_ff: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    n_layers: int = 1
+    gated_mlp: bool = True
+    act_bytes: int = 2
+    kv_bytes: int = 2
+    scale_bytes: int = 0
+    page_size: int = 16
+
+    @property
+    def flops_per_token(self) -> int:
+        """Per-token prefill GEMM FLOPs across the stack (2*MACs)."""
+        d, hd = self.d_model, self.head_dim
+        qkv = d * (self.n_heads + 2 * self.n_kv_heads) * hd
+        out = self.n_heads * hd * d
+        mlp = (3 if self.gated_mlp else 2) * d * self.d_ff
+        return 2 * (qkv + out + mlp) * self.n_layers
+
+    @property
+    def kv_row_bytes(self) -> int:
+        payload = 2 * self.n_kv_heads * self.head_dim * self.kv_bytes
+        sidecar = 2 * self.n_kv_heads * self.scale_bytes
+        return (payload + sidecar) * self.n_layers
+
+    @property
+    def act_bytes_per_token(self) -> int:
+        """Activation HBM bytes around the skipped GEMMs: the layer input
+        read + output write per projection group (x into qkv, attn-out, MLP
+        in/out), the intermediate d_ff row, and the D-row residual —
+        single-pass counts, epilogue fusion assumed (no separate bias/act
+        round-trips)."""
+        d_rows = 4 * self.d_model + self.d_ff
+        return d_rows * self.act_bytes * self.n_layers
+
+    def hit_savings(self, matched: int) -> dict:
+        """Per-hit savings for `matched` prefix tokens."""
+        matched = max(int(matched), 0)
+        return {
+            "matched_tokens": matched,
+            "shared_pages": _ceil_div(matched, self.page_size),
+            "prefill_flops_saved": matched * self.flops_per_token,
+            "kv_write_bytes_saved": matched * self.kv_row_bytes,
+            "act_hbm_bytes_saved": matched * self.act_bytes_per_token,
+            "hbm_bytes_saved": matched * (self.kv_row_bytes
+                                          + self.act_bytes_per_token),
+        }
+
+    def report(self, prompt_len: int, overlaps=(0.0, 0.5, 0.9), *,
+               flops_rate: Optional[float] = None,
+               hbm_bw: Optional[float] = None) -> dict:
+        """Savings table over prefix-overlap fractions of a `prompt_len`
+        prompt (dryrun serve cells / benchmarks/prefix_bench).  Optional
+        rates add roofline seconds: a hit's TTFT credit is the MAX of the
+        compute and memory terms it skips."""
+        out = {
+            "prompt_len": int(prompt_len),
+            "page_size": self.page_size,
+            "n_layers": self.n_layers,
+            "flops_per_token": self.flops_per_token,
+            "kv_row_bytes": self.kv_row_bytes,
+            "overlaps": {},
+        }
+        for ov in overlaps:
+            matched = int(ov * prompt_len)
+            rec = self.hit_savings(matched)
+            rec["overlap"] = ov
+            if flops_rate:
+                rec["compute_s_saved"] = (rec["prefill_flops_saved"]
+                                          / flops_rate)
+            if hbm_bw:
+                rec["memory_s_saved"] = rec["hbm_bytes_saved"] / hbm_bw
+            if flops_rate and hbm_bw:
+                rec["ttft_credit_s"] = max(rec["compute_s_saved"],
+                                           rec["memory_s_saved"])
+            out["overlaps"][f"{ov:.2f}"] = rec
+        return out
 
 
 # ---------------------------------------------------------------------------

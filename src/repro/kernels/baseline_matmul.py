@@ -15,12 +15,10 @@ can be checked against the HLO/interpret traffic of both kernels.
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 from ._compat import CompilerParams
 

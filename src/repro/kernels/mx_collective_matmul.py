@@ -47,7 +47,6 @@ numerics and latency comparisons (tests, benchmarks/collective_bench).
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import List, Optional, Tuple
 
 import jax

@@ -125,3 +125,49 @@ def paged_decode_ref(q, k_pages, v_pages, page_table, lengths, *,
                    preferred_element_type=jnp.float32)
     o = jnp.where(lengths[:, None, None, None] > 0, o, 0.0)
     return o.reshape(B, H, d).astype(q.dtype)
+
+
+def paged_prefill_ref(q, k_pages, v_pages, page_table, index, *,
+                      k_scale=None, v_scale=None):
+    """Multi-query sibling of `paged_decode_ref`: causal attention of S
+    query tokens at positions [index, index+S) over a paged KV cache whose
+    pages already hold every position <= the query's own (the chunked
+    prefill-into-pages path writes the chunk's K/V rows BEFORE attending).
+
+    q: (B, S, H, d); k_pages / v_pages: (P, ps, Hkv, d) flat page pools;
+    page_table: (B, W) physical page ids; index: (B,) each slot's chunk
+    start position.  Optional k_scale / v_scale: (P, ps, Hkv) per-row
+    dequant sidecars (int8 cache).  Query j of slot b attends over cached
+    positions kpos <= index[b] + j — the causal mask doubles as the length
+    mask, so stale rows past the chunk (recycled pages) are dead by
+    construction.
+
+    Gather-based like the decode oracle: materializes each slot's logical
+    (W*ps) KV span once per chunk, which is exactly the prefill traffic a
+    steered-page kernel would avoid; the GEMM work (qkv/out projections)
+    still rides the MX dispatch in the caller.
+    """
+    B, S, H, d = q.shape
+    _, ps, Hkv, _ = k_pages.shape
+    G = H // Hkv
+    W = page_table.shape[1]
+
+    k = k_pages[page_table].astype(jnp.float32)  # (B, W, ps, Hkv, d)
+    v = v_pages[page_table].astype(jnp.float32)
+    if k_scale is not None:
+        k = k * k_scale[page_table][..., None]
+        v = v * v_scale[page_table][..., None]
+    k = k.reshape(B, W * ps, Hkv, d)
+    v = v.reshape(B, W * ps, Hkv, d)
+
+    qh = q.astype(jnp.float32).reshape(B, S, Hkv, G, d)
+    s = jnp.einsum("bqhgd,bshd->bhgqs", qh, k,
+                   preferred_element_type=jnp.float32) / (d ** 0.5)
+    qpos = jnp.asarray(index)[:, None] + jnp.arange(S)  # (B, S)
+    kpos = jnp.arange(W * ps)
+    keep = kpos[None, None, :] <= qpos[:, :, None]      # (B, S, W*ps)
+    s = jnp.where(keep[:, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqs,bshd->bqhgd", p, v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, S, H, d).astype(q.dtype)

@@ -32,17 +32,15 @@ import traceback
 from pathlib import Path
 
 import jax
-import jax.numpy as jnp
 
 from ..configs import ARCH_IDS, SHAPES, cell_applicable, get_config
 from ..core import hlo_census as census_mod
 from ..core.hlo_census import census
-from ..core.roofline import (
-    HBM_BW, ICI_BW, PEAK_FLOPS_BF16, RooflineReport, parse_collective_bytes,
-)
+from ..core.roofline import HBM_BW, ICI_BW, PEAK_FLOPS_BF16, RooflineReport
 from ..core.precision import resolve_precision
 from ..core.transfer_model import (
     GemmProblem, PagedKVDecode, PallasGemmTiling, RingCollectiveGemm,
+    SharedPrefixPrefill,
 )
 from ..launch.mesh import make_production_mesh
 from ..launch.specs import cell_specs
@@ -139,22 +137,26 @@ def quantized_gemm_reports(cfg, tokens_per_step: int) -> dict:
     return out
 
 
-def paged_kv_decode_reports(cfg, preset, *, page_size: int = 128) -> dict:
-    """Decode-step KV traffic model for serve cells: dense (slots, max_len)
-    rectangle vs pages actually resident, at representative live-token fill
-    ratios.  Cache elements modeled in bf16 (the roofline operating point);
-    n_layers counts the attention blocks that hold a KV cache.
-
-    Only emitted for archs the paged decode path actually covers
-    (attention-only segments, no shared block / modality prefix — the
-    `DecoderLM.supports_paged` predicate); reporting a credit the stack
-    cannot realize would misprice the serving roofline."""
+def _paged_attn_layers(cfg) -> int:
+    """Attention-block count when the paged serving paths cover `cfg`
+    (attention-only segments, no shared block / modality prefix / encoder —
+    the `DecoderLM.supports_paged` predicate), else 0.  Gates both paged
+    serve reports: pricing a credit the stack cannot realize would misprice
+    the serving roofline."""
     paged_capable = (not cfg.shared_attn_every and not cfg.frontend_dim
                      and not cfg.enc_layers
                      and all(kind in ("dense", "moe") for kind, _ in cfg.blocks))
     if not paged_capable:
-        return {}
-    n_attn = sum(n for kind, n in cfg.blocks if kind in ("dense", "moe"))
+        return 0
+    return sum(n for kind, n in cfg.blocks if kind in ("dense", "moe"))
+
+
+def paged_kv_decode_reports(cfg, preset, *, page_size: int = 128) -> dict:
+    """Decode-step KV traffic model for serve cells: dense (slots, max_len)
+    rectangle vs pages actually resident, at representative live-token fill
+    ratios.  Cache elements modeled in bf16 (the roofline operating point);
+    n_layers counts the attention blocks that hold a KV cache."""
+    n_attn = _paged_attn_layers(cfg)
     if not n_attn:
         return {}
     model = PagedKVDecode(
@@ -171,6 +173,32 @@ def paged_kv_decode_reports(cfg, preset, *, page_size: int = 128) -> dict:
         lengths = [max(1, int(fill * preset.seq_len))] * preset.global_batch
         out["fills"][f"{fill:.2f}"] = model.report(lengths, hbm_bw=HBM_BW)
     return out
+
+
+def shared_prefix_reports(cfg, preset, *, page_size: int = 128) -> dict:
+    """Prefill FLOPs + HBM bytes a prefix-cache hit saves (serve cells):
+    the `SharedPrefixPrefill` model priced at representative prompt-overlap
+    fractions of the preset's sequence length, with roofline seconds at the
+    PEAK_FLOPS_BF16 / HBM_BW operating point.  Gated on the same
+    paged-capable predicate as `paged_kv_decode_reports` — the prefix cache
+    lives on the page pool."""
+    n_attn = _paged_attn_layers(cfg)
+    if not n_attn:
+        return {}
+    model = SharedPrefixPrefill(
+        d_model=cfg.d_model,
+        d_ff=cfg.d_ff,
+        n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.hd,
+        n_layers=n_attn,
+        gated_mlp=(cfg.activation == "silu"),
+        act_bytes=2,
+        kv_bytes=2,
+        page_size=page_size,
+    )
+    return model.report(preset.seq_len, overlaps=(0.0, 0.5, 0.9),
+                        flops_rate=PEAK_FLOPS_BF16, hbm_bw=HBM_BW)
 
 
 def lower_cell(arch: str, shape: str, mesh_kind: str, *, extra: dict | None = None):
@@ -298,6 +326,8 @@ def lower_cell(arch: str, shape: str, mesh_kind: str, *, extra: dict | None = No
         "quantized_gemms": quantized_gemm_reports(cfg, specs.tokens_per_step),
         "paged_kv_decode": (paged_kv_decode_reports(cfg, preset)
                             if specs.kind == "decode" else {}),
+        "shared_prefix_prefill": (shared_prefix_reports(cfg, preset)
+                                  if specs.kind == "decode" else {}),
         "n_params": cfg.n_params(),
         "n_active_params": n_active,
         "tokens_per_step": specs.tokens_per_step,

@@ -5,6 +5,8 @@ CPU smoke examples:
       --batch 4 --prompt-len 16 --gen 16 --prefill-chunk 8
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
       --paged --page-size 8
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
+      --prefix-cache --prefill-chunk 8   # shared system prompt across requests
 """
 from __future__ import annotations
 
@@ -27,7 +29,10 @@ def _run_continuous(model, cfg, params, args) -> int:
     """Continuous batching: 2x requests stream through --batch decode slots
     (runtime/batcher.py).  --paged swaps the dense (slots, max_len) cache
     for the page-pool backend (runtime/kv_pages + kernels/mx_flash_decode)
-    and reports the allocator's page occupancy."""
+    and reports the allocator's page occupancy.  --prefix-cache additionally
+    shares already-prefilled prompt prefixes across requests (every request
+    gets a common system prompt here, so hits are visible) and reports the
+    index's hit rate and pages shared."""
     from ..runtime.batcher import ContinuousBatcher, Request
 
     B = args.batch
@@ -37,24 +42,38 @@ def _run_continuous(model, cfg, params, args) -> int:
         from ..core.precision import QuantSpec
 
         kv_quant = QuantSpec("int8", "tile")
+    # the prefix cache keeps pinned pages resident across requests: size the
+    # pool above the dense rectangle so pins don't starve admissions
+    num_pages = None
+    if args.prefix_cache:
+        num_pages = (B + 2) * -(-max_len // args.page_size)
     batcher = ContinuousBatcher(
         model, params, batch_slots=B, max_len=max_len,
         paged=args.paged, page_size=args.page_size, kv_quant=kv_quant,
+        num_pages=num_pages, prefix_cache=args.prefix_cache,
+        prefill_chunk=args.prefill_chunk if args.paged else 0,
     )
     rng = np.random.default_rng(0)
     n_req = 2 * B
+    # a shared system prompt (75% of prompt_len) + per-request tails: the
+    # workload shape the prefix cache exists for
+    sys_prompt = rng.integers(0, cfg.vocab, max(1, (3 * args.prompt_len) // 4))
     t0 = time.time()
     for i in range(n_req):
-        plen = int(rng.integers(2, args.prompt_len + 1))
-        batcher.submit(Request(
-            rid=i,
-            prompt=rng.integers(0, cfg.vocab, plen).astype(np.int32),
-            max_new=args.gen,
-        ))
+        if args.prefix_cache:
+            tail = rng.integers(0, cfg.vocab,
+                                max(1, args.prompt_len - len(sys_prompt)))
+            prompt = np.concatenate([sys_prompt, tail]).astype(np.int32)
+        else:
+            plen = int(rng.integers(2, args.prompt_len + 1))
+            prompt = rng.integers(0, cfg.vocab, plen).astype(np.int32)
+        batcher.submit(Request(rid=i, prompt=prompt, max_new=args.gen))
     finished = batcher.run_to_completion()
     wall = time.time() - t0
     total = sum(len(r.prompt) + len(r.output) for r in finished.values())
     mode = "paged" if args.paged else "dense"
+    if args.prefix_cache:
+        mode += "+prefix"
     print(f"continuous batching [{mode} cache]: {len(finished)} requests "
           f"through {B} slots; {total / wall:.1f} tok/s (CPU)")
     if args.paged:
@@ -62,6 +81,15 @@ def _run_continuous(model, cfg, params, args) -> int:
         print(f"  pages: {st.pages_in_use} in use / {st.num_pages} pool "
               f"(high water {st.high_water}, page_size {st.page_size}, "
               f"peak utilization {st.high_water / st.num_pages:.2f})")
+    if args.prefix_cache:
+        ps = batcher.prefix_stats()
+        print(f"  prefix cache: {ps['hits']}/{ps['hits'] + ps['misses']} "
+              f"admissions hit ({ps['hit_rate']:.0%}), "
+              f"{ps['tokens_saved']} prefill tokens skipped, "
+              f"{ps['pages_reused']} pages reused now "
+              f"(peak shared {ps['shared_high_water']}), "
+              f"{ps['cow_copies']} COW copies, "
+              f"{ps['evicted_pages']} pages evicted")
     for rid in sorted(finished)[:2]:
         print(f"  req {rid}: {finished[rid].output[:8]}")
     return 0
@@ -84,6 +112,11 @@ def main(argv=None):
                          "scale with live tokens, not max_len")
     ap.add_argument("--page-size", type=int, default=16,
                     help="tokens per KV page (--paged)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share already-prefilled prompt prefixes across "
+                         "requests (implies --paged): matched spans mount "
+                         "as refcounted shared pages, COW on intra-page "
+                         "divergence, zero prefill GEMMs for the hit span")
     ap.add_argument("--kv-cache", choices=("f32", "int8"), default="f32",
                     help="paged-cache payload dtype (int8 stores per-row "
                          "scale pages via kernels/quant)")
@@ -92,6 +125,8 @@ def main(argv=None):
                          "this many tokens per launch instead of one decode "
                          "step per token (0 = token stepping)")
     args = ap.parse_args(argv)
+    if args.prefix_cache:
+        args.paged = True  # the prefix index lives on the page pool
     if args.kv_cache != "f32" and not args.paged:
         ap.error("--kv-cache int8 requires --paged (the quantized cache "
                  "lives in the page pool)")

@@ -47,7 +47,8 @@ class CellSpecs:
 def _batch_specs(cfg: ArchConfig, preset: ShapePreset, rules: AxisRules,
                  with_labels: bool):
     B, S = preset.global_batch, preset.seq_len
-    dspec = lambda shape, axes: NamedSharding(rules.mesh, rules.spec(shape, axes))
+    def dspec(shape, axes):
+        return NamedSharding(rules.mesh, rules.spec(shape, axes))
     batch: Dict[str, Any] = {}
     shard: Dict[str, Any] = {}
     if cfg.model_kind == "encdec":

@@ -6,7 +6,7 @@ prefix embeddings, encoder-decoder)."""
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -15,14 +15,11 @@ from __future__ import annotations
 
 import argparse
 import csv
-import dataclasses
 import sys
 import time
-from pathlib import Path
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..checkpoint.manager import CheckpointManager
 from ..configs import ARCH_IDS, get_config

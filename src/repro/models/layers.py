@@ -7,7 +7,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -16,7 +16,7 @@ from ..core import ops
 from ..core.precision import QuantSpec
 from ..kernels.mx_flash_decode import mx_flash_decode
 from ..kernels.quant import quantize
-from ..kernels.ref import paged_decode_ref
+from ..kernels.ref import paged_decode_ref, paged_prefill_ref
 from .modules import Builder, Module
 
 
@@ -362,6 +362,33 @@ class Attention(Module):
 
     # ---------------- paged KV-cache decode path ----------------
 
+    def _write_kv_pages(self, cache, page_ids, offs, k_new, v_new):
+        """Scatter K/V rows into the page pools at (page_ids, offs); the
+        single write path shared by decode (one token per slot) and
+        chunked prefill (a chunk per slot — the leading dims of page_ids/
+        offs/k_new/v_new just broadcast).  A quantized cache (pytree
+        self-describes via its "k_scale" key) quantizes on write with a
+        per-(row, head) scale."""
+        cache = dict(cache)
+        if "k_scale" in cache:
+            names = {"int8": "int8", "float8_e4m3fn": "fp8_e4m3"}
+            spec = QuantSpec(names[str(cache["k_pages"].dtype)], "tile")
+            qk, ks = quantize(k_new, spec, axis=-1)
+            qv, vs = quantize(v_new, spec, axis=-1)
+            cache["k_pages"] = cache["k_pages"].at[page_ids, offs].set(qk)
+            cache["v_pages"] = cache["v_pages"].at[page_ids, offs].set(qv)
+            cache["k_scale"] = cache["k_scale"].at[page_ids, offs].set(
+                ks[..., 0])
+            cache["v_scale"] = cache["v_scale"].at[page_ids, offs].set(
+                vs[..., 0])
+        else:
+            dt = cache["k_pages"].dtype
+            cache["k_pages"] = cache["k_pages"].at[page_ids, offs].set(
+                k_new.astype(dt))
+            cache["v_pages"] = cache["v_pages"].at[page_ids, offs].set(
+                v_new.astype(dt))
+        return cache
+
     def init_paged_cache(self, num_pages: int, page_size: int,
                          dtype=jnp.bfloat16, kv_quant: Optional[QuantSpec] = None):
         """Flat page-pool cache: (num_pages, page_size, Hkv, hd) per
@@ -418,24 +445,8 @@ class Attention(Module):
         rows = jnp.arange(b)
         page_ids = page_table[rows, idx_b // ps]
         offs = idx_b % ps
-        k_tok, v_tok = k_new[:, 0], v_new[:, 0]  # (B, Hkv, hd)
-        cache = dict(cache)
-        quantized = "k_scale" in cache
-        if quantized:
-            names = {"int8": "int8", "float8_e4m3fn": "fp8_e4m3"}
-            spec = QuantSpec(names[str(cache["k_pages"].dtype)], "tile")
-            qk, ks = quantize(k_tok, spec, axis=-1)  # per-(slot, head) scale
-            qv, vs = quantize(v_tok, spec, axis=-1)
-            cache["k_pages"] = cache["k_pages"].at[page_ids, offs].set(qk)
-            cache["v_pages"] = cache["v_pages"].at[page_ids, offs].set(qv)
-            cache["k_scale"] = cache["k_scale"].at[page_ids, offs].set(ks[..., 0])
-            cache["v_scale"] = cache["v_scale"].at[page_ids, offs].set(vs[..., 0])
-        else:
-            dt = cache["k_pages"].dtype
-            cache["k_pages"] = cache["k_pages"].at[page_ids, offs].set(
-                k_tok.astype(dt))
-            cache["v_pages"] = cache["v_pages"].at[page_ids, offs].set(
-                v_tok.astype(dt))
+        cache = self._write_kv_pages(cache, page_ids, offs,
+                                     k_new[:, 0], v_new[:, 0])  # (B, Hkv, hd)
         kw = dict(
             k_scale=cache.get("k_scale"), v_scale=cache.get("v_scale"))
         policy = ops.current_policy()
@@ -447,6 +458,38 @@ class Attention(Module):
             o = paged_decode_ref(q[:, 0], cache["k_pages"], cache["v_pages"],
                                  page_table, lengths, **kw)
         o = o.reshape(b, 1, self.n_heads * self.hd)
+        out = ops.linear(o, p["wo"], residual=residual, out_dtype=x.dtype,
+                         tp_mode="reduce_scatter", precision=self.precision)
+        return out, cache
+
+    # ---------------- chunked prefill (paged cache) ----------------
+
+    def prefill_paged(self, p, x, cache, index, page_table, *, residual=None):
+        """Chunked prefill writing K/V DIRECTLY into pages: x (B, S, D)
+        fills cache rows for positions [index, index+S) — S prompt tokens
+        per launch instead of S decode-interleaved steps — then attends
+        causally against the paged prefix (including pages mounted from the
+        prefix cache, which is what makes a shared system prompt cost zero
+        prefill GEMMs for the matched span).  index: (B,) per-slot chunk
+        start positions; page_table: (B, W) physical page ids covering at
+        least positions index+S-1.  Quantized caches ("k_scale" present)
+        quantize-on-write per row, exactly as `decode_paged` does."""
+        b, sq, _ = x.shape
+        ps = cache["k_pages"].shape[1]
+        idx_b = jnp.broadcast_to(jnp.asarray(index), (b,))
+        positions = idx_b[:, None] + jnp.arange(sq)  # (B, S)
+        q, k_new, v_new = self._qkv(p, x, positions)
+        page_ids = jnp.take_along_axis(page_table, positions // ps, axis=1)
+        offs = positions % ps
+        cache = self._write_kv_pages(cache, page_ids, offs, k_new, v_new)
+        # the attention is the gather oracle on every backend: the split-KV
+        # Pallas kernel is single-query (decode); prefill chunks are
+        # compute-bound in the qkv/out GEMMs, which already ride MX dispatch
+        o = paged_prefill_ref(q, cache["k_pages"], cache["v_pages"],
+                              page_table, idx_b,
+                              k_scale=cache.get("k_scale"),
+                              v_scale=cache.get("v_scale"))
+        o = o.reshape(b, sq, self.n_heads * self.hd)
         out = ops.linear(o, p["wo"], residual=residual, out_dtype=x.dtype,
                          tp_mode="reduce_scatter", precision=self.precision)
         return out, cache

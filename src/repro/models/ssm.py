@@ -10,7 +10,6 @@ this module provides the batched/headed jnp formulation (used under the
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

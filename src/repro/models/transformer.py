@@ -12,8 +12,7 @@ Block kinds: "dense" (attn+MLP), "moe" (attn+MoE), "mamba2", "mlstm",
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Dict, Optional, Sequence, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -181,6 +180,20 @@ class TransformerBlock(Module):
             x = ffn(p["ffn"], h, residual=x)
         return x, cache
 
+    def prefill_paged(self, p, x, cache, index, page_table):
+        """Multi-token page-writing step (chunked prefill into pages)."""
+        attn = self._attn()
+        x, cache = attn.prefill_paged(p["attn"], rms_norm(x, p["ln1"]), cache,
+                                      index, page_table, residual=x)
+        ffn = self._ffn()
+        h = rms_norm(x, p["ln2"])
+        if self.use_moe:
+            y, _ = ffn(p["ffn"], h)
+            x = x + y
+        else:
+            x = ffn(p["ffn"], h, residual=x)
+        return x, cache
+
 
 def _wrap_state_block(block):
     """Uniform (y, aux) interface for state blocks (mamba/xlstm)."""
@@ -328,23 +341,26 @@ class DecoderLM(Module):
             x, aux = y, aux + a
         return x, aux
 
+    def _head(self, p, x):
+        """Shared stack epilogue: final norm + LM head -> f32 logits.
+        lm_head is vocab(column)-sharded: ring all-gather ⊗ matmul under a
+        collective policy, plain MX dispatch otherwise; tied embeddings use
+        the transpose-folded jnp.dot (Embedding.attend)."""
+        cfg = self.cfg
+        x = rms_norm(x, p["ln_f"])
+        if cfg.tie_embeddings:
+            return Embedding(cfg.vocab, cfg.d_model).attend(p["embed"], x)
+        return ops.linear(x, p["lm_head"], out_dtype=jnp.float32,
+                          tp_mode="allgather")
+
     def __call__(self, p, tokens, *, prefix_embeds=None):
         """tokens: (B, S) -> logits (B, S_total, vocab) f32, aux loss."""
-        cfg = self.cfg
         x = self._embed_inputs(p, tokens, prefix_embeds)
         aux = jnp.float32(0.0)
         for i, seg in enumerate(self.segments()):
             x, a = self._run_segment(seg, p[f"seg{i}"], x, p.get("shared"))
             aux = aux + a
-        x = rms_norm(x, p["ln_f"])
-        if cfg.tie_embeddings:
-            logits = Embedding(cfg.vocab, cfg.d_model).attend(p["embed"], x)
-        else:
-            # lm_head is vocab(column)-sharded: ring all-gather ⊗ matmul
-            # under a collective policy, plain MX dispatch otherwise.
-            logits = ops.linear(x, p["lm_head"], out_dtype=jnp.float32,
-                                tp_mode="allgather")
-        return logits, aux
+        return self._head(p, x), aux
 
     # ---------------- decode ----------------
 
@@ -451,13 +467,33 @@ class DecoderLM(Module):
             x, new_cache[f"seg{i}"] = jax.lax.scan(
                 body, x, (p[f"seg{i}"], cache[f"seg{i}"])
             )
-        x = rms_norm(x, p["ln_f"])
-        if cfg.tie_embeddings:
-            logits = Embedding(cfg.vocab, cfg.d_model).attend(p["embed"], x)
-        else:
-            logits = ops.linear(x, p["lm_head"], out_dtype=jnp.float32,
-                                tp_mode="allgather")
-        return logits, new_cache
+        return self._head(p, x), new_cache
+
+    def prefill_step_paged(self, p, tokens, cache, index, page_table):
+        """S prompt tokens through the whole stack in ONE step, written
+        DIRECTLY into the paged cache's pages — the paged analogue of
+        `prefill_step`.  tokens: (B, S); index: (B,) per-slot chunk start
+        positions; page_table: (B, W) physical page ids.  Returns
+        (logits, cache); a prefix-cache miss costs O(prompt/chunk) such
+        launches instead of O(prompt) decode-interleaved steps."""
+        if not self.supports_paged():
+            raise ValueError(f"{self.cfg.name}: paged prefill needs "
+                             "attention-only segments")
+        cfg = self.cfg
+        x = self._embed_inputs(p, tokens)
+        new_cache = dict(cache)
+        for i, seg in enumerate(self.segments()):
+            block = make_block(seg.kind, cfg)
+
+            def body(h, scanned):
+                layer_params, layer_cache = scanned
+                return block.prefill_paged(layer_params, h, layer_cache,
+                                           index, page_table)
+
+            x, new_cache[f"seg{i}"] = jax.lax.scan(
+                body, x, (p[f"seg{i}"], cache[f"seg{i}"])
+            )
+        return self._head(p, x), new_cache
 
     # ---- chunked prefill ----
 
@@ -482,13 +518,7 @@ class DecoderLM(Module):
             x, new_cache[f"seg{i}"] = jax.lax.scan(
                 body, x, (p[f"seg{i}"], cache[f"seg{i}"])
             )
-        x = rms_norm(x, p["ln_f"])
-        if cfg.tie_embeddings:
-            logits = Embedding(cfg.vocab, cfg.d_model).attend(p["embed"], x)
-        else:
-            logits = ops.linear(x, p["lm_head"], out_dtype=jnp.float32,
-                                tp_mode="allgather")
-        return logits, new_cache
+        return self._head(p, x), new_cache
 
     def decode_step(self, p, token, cache, index, *, prefix_embeds=None):
         """One token for the whole stack.  token: (B, 1) -> (logits, cache)."""
@@ -538,13 +568,7 @@ class DecoderLM(Module):
                 new_cache[f"shared{i}"] = jax.tree.map(
                     lambda *ts: jnp.stack(ts), *new_sc
                 )
-        x = rms_norm(x, p["ln_f"])
-        if cfg.tie_embeddings:
-            logits = Embedding(cfg.vocab, cfg.d_model).attend(p["embed"], x)
-        else:
-            logits = ops.linear(x, p["lm_head"], out_dtype=jnp.float32,
-                                tp_mode="allgather")
-        return logits, new_cache
+        return self._head(p, x), new_cache
 
 
 # ---------------------------------------------------------------------------

@@ -14,7 +14,6 @@ w.r.t. the recurrent oracle (tests/test_xlstm.py).
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -29,7 +29,8 @@ class AdamW:
     grad_clip_norm: Optional[float] = 1.0
 
     def init(self, params) -> AdamWState:
-        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        def zeros(p):
+            return jnp.zeros(p.shape, jnp.float32)
         return AdamWState(
             count=jnp.zeros((), jnp.int32),
             m=jax.tree.map(zeros, params),
@@ -37,7 +38,8 @@ class AdamW:
         )
 
     def abstract_init(self, abstract_params) -> AdamWState:
-        z = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+        def z(p):
+            return jax.ShapeDtypeStruct(p.shape, jnp.float32)
         return AdamWState(
             count=jax.ShapeDtypeStruct((), jnp.int32),
             m=jax.tree.map(z, abstract_params),
@@ -46,7 +48,8 @@ class AdamW:
 
     def state_axes(self, param_axes) -> AdamWState:
         """Moments share their parameter's logical axes (ZeRO sharding)."""
-        is_axes = lambda x: isinstance(x, tuple)
+        def is_axes(x):
+            return isinstance(x, tuple)
         return AdamWState(
             count=(),
             m=jax.tree.map(lambda a: a, param_axes, is_leaf=is_axes),

@@ -20,7 +20,6 @@ format unchanged: int8 payload, scalar f32 scale = amax/127, clip ±127.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

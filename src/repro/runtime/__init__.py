@@ -3,5 +3,7 @@ from .fault import DeviceFailure, FaultInjector, StragglerDetector, TrainLoop
 __all__ = ["DeviceFailure", "FaultInjector", "StragglerDetector", "TrainLoop", "elastic"]
 from .batcher import ContinuousBatcher, Request  # noqa: E402
 from .kv_pages import DUMP_PAGE, PagePool, PoolExhausted, PoolStats  # noqa: E402
+from .prefix_cache import PrefixHit, PrefixIndex  # noqa: E402
 __all__ += ["ContinuousBatcher", "Request",
-            "DUMP_PAGE", "PagePool", "PoolExhausted", "PoolStats"]
+            "DUMP_PAGE", "PagePool", "PoolExhausted", "PoolStats",
+            "PrefixHit", "PrefixIndex"]

@@ -21,20 +21,39 @@ Two cache backends:
     split-KV Pallas kernel (kernels/mx_flash_decode) under the pallas_mx
     policy and the gather-based oracle on the XLA fallback.
 
+Two paged admission accelerators (the cross-request reuse PR):
+
+  - ``prefix_cache=True``: a content index over the page pool
+    (runtime/prefix_cache) maps each request's longest already-prefilled
+    prompt prefix onto resident pages.  Admission mounts the matched span
+    as SHARED pages (reference counts, runtime/kv_pages) and only
+    reserves + prefills the tail; a divergence inside a page is mounted
+    copy-on-write.  Completed prompts are inserted back into the index,
+    release decrements instead of frees, and pool pressure evicts
+    least-recently-used UNPINNED index pages.
+  - ``prefill_chunk=N``: admission pushes the (unmatched) prompt tail
+    through `model.prefill_step_paged` N tokens per launch, writing K/V
+    directly into the slot's pages — O(prompt/chunk) launches instead of
+    token-by-token decode interleaving.  The prompt's LAST token always
+    goes through the ordinary decode step, so the first generated token's
+    launch is identical with and without prefix sharing / chunking.
+
 CPU-testable end to end with smoke configs (tests/test_batcher.py asserts
 outputs are identical to per-request isolated decoding — slot interference
-would break that; tests/test_kv_pages.py asserts dense/paged parity)."""
+would break that; tests/test_kv_pages.py asserts dense/paged parity;
+tests/test_prefix_cache.py asserts dense == paged == prefix-shared)."""
 from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Callable, Deque, Dict, List, Optional
+from typing import Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from .kv_pages import PagePool
+from .prefix_cache import PrefixIndex
 
 
 @dataclasses.dataclass
@@ -71,12 +90,18 @@ class ContinuousBatcher:
     at max_len, i.e. the dense rectangle's capacity — shrink it to see
     admission back-pressure).  ``kv_quant`` (a quantized
     core.precision.QuantSpec, e.g. QuantSpec("int8")) stores the paged
-    cache as narrow payloads with per-row scale pages."""
+    cache as narrow payloads with per-row scale pages.
+
+    ``prefix_cache=True`` (paged only) shares already-prefilled prompt
+    prefixes across requests via the page-granularity content index;
+    ``prefill_chunk=N`` (paged only) batch-prefills each admitted prompt's
+    unmatched tail N tokens per launch directly into its pages."""
 
     def __init__(self, model, params, batch_slots: int, max_len: int,
                  cache_dtype=jnp.float32, *, paged: bool = False,
                  page_size: int = 16, num_pages: Optional[int] = None,
-                 kv_quant=None):
+                 kv_quant=None, prefix_cache: bool = False,
+                 prefill_chunk: int = 0):
         self.model = model
         self.params = params
         self.B = batch_slots
@@ -85,6 +110,13 @@ class ContinuousBatcher:
         self.slots = [_Slot() for _ in range(batch_slots)]
         self.queue: Deque[Request] = deque()
         self.finished: Dict[int, Request] = {}
+        if (prefix_cache or prefill_chunk) and not paged:
+            raise ValueError("prefix_cache / prefill_chunk require "
+                             "paged=True (they operate on the page pool)")
+        self.prefix: Optional[PrefixIndex] = None
+        self.prefill_chunk = int(prefill_chunk)
+        self.cow_copies = 0
+        self.prefill_launches = 0  # chunked prefill launches issued
 
         if paged:
             if not getattr(model, "supports_paged", lambda: False)():
@@ -108,6 +140,24 @@ class ContinuousBatcher:
                                                table, lengths)
 
             self._step = jax.jit(step_paged)
+            if prefix_cache:
+                self.prefix = PrefixIndex(self.pool)
+            if self.prefill_chunk > 0:
+
+                def prefill_paged(params, tokens, cache, index, table):
+                    return model.prefill_step_paged(params, tokens, cache,
+                                                    index, table)
+
+                self._prefill = jax.jit(prefill_paged)
+
+            def copy_page(cache, src, dst):
+                # paged-cache leaves are layer-stacked (n_layers, P, ...):
+                # the page axis is 1.  COW privatization copies one page's
+                # rows for every layer and operand (incl. scale sidecars).
+                return jax.tree.map(lambda t: t.at[:, dst].set(t[:, src]),
+                                    cache)
+
+            self._copy_page = jax.jit(copy_page)
         else:
             if kv_quant is not None:
                 raise ValueError("kv_quant requires paged=True (the dense "
@@ -130,16 +180,96 @@ class ContinuousBatcher:
                 continue
             req = self.queue.popleft()
             if self.paged:
-                # O(pages touched): reserve the request's worst-case token
-                # footprint up front so decode never fails mid-stream; a
-                # short free list back-pressures the queue (FIFO preserved).
-                tokens = min(self.max_len, len(req.prompt) + req.max_new)
-                if self.pool.try_reserve(i, tokens) is None:
-                    self.queue.appendleft(req)
+                if not self._admit_paged(i, s, req):
+                    self.queue.appendleft(req)  # back-pressure, FIFO kept
                     return
+                continue
             s.req = req
             s.pos = 0
             s.prompt_left = len(req.prompt)
+
+    def _admit_paged(self, i: int, s: _Slot, req: Request) -> bool:
+        """Paged admission: O(pages touched).  Reserves the request's
+        worst-case token footprint up front so decode never fails
+        mid-stream; with the prefix cache, the request's longest
+        already-prefilled prompt prefix mounts as shared pages (plus at
+        most one copy-on-write page at an intra-page divergence) and only
+        the tail costs fresh pages + prefill.  Returns False (nothing
+        changed) when even after index eviction the pool cannot cover the
+        fresh pages — the caller back-pressures."""
+        plen = len(req.prompt)
+        tokens = min(self.max_len, plen + req.max_new)
+        shared: list = []
+        partial_page, partial_m = None, 0
+        # an over-long prompt (truncation path) skips sharing: its indexed
+        # span could exceed the clipped reservation
+        if self.prefix is not None and plen + req.max_new <= self.max_len:
+            hit = self.prefix.lookup(req.prompt)
+            shared = list(hit.pages)
+            partial_page, partial_m = hit.partial_page, hit.partial_tokens
+        # two plans: with the COW page (costs one extra fresh page for the
+        # private copy), then without it
+        for use_partial in ((True, False) if partial_m else (False,)):
+            plan = shared + ([partial_page] if use_partial else [])
+            need_fresh = (self.pool.pages_for(tokens) - len(plan)
+                          + (1 if use_partial else 0))
+            short = need_fresh - self.pool.pages_free
+            if short > 0 and self.prefix is not None:
+                # LRU; never frees pinned pages NOR the plan's own hit
+                # pages (evicting those would invalidate the reservation
+                # we are about to make)
+                self.prefix.evict(short, exclude=plan)
+            if need_fresh > self.pool.pages_free:
+                continue
+            if self.pool.try_reserve(i, tokens, shared=plan) is None:
+                continue
+            if use_partial:
+                # privatize the divergent page: guaranteed a free page by
+                # the need_fresh accounting above (single-threaded admit)
+                src, dst = self.pool.cow(i, len(shared))
+                self.cache = self._copy_page(self.cache, src, dst)
+                self.cow_copies += 1
+            matched = len(shared) * self.page_size + (
+                partial_m if use_partial else 0)
+            if self.prefix is not None:
+                self.prefix.note(matched)
+            s.req = req
+            s.pos = matched          # next cache position to write
+            s.prompt_left = plen - matched
+            if matched:
+                self.pool.set_length(i, matched)
+            if self.prefill_chunk > 0:
+                self._prefill_tail(i, s, req)
+            return True
+        return False
+
+    def _prefill_tail(self, i: int, s: _Slot, req: Request):
+        """Chunked prefill directly into the slot's pages: positions
+        [s.pos, plen-1) go through `prefill_step_paged`, prefill_chunk
+        tokens per launch.  The last prompt token is deliberately LEFT to
+        the decode interleave — its decode launch both writes the final
+        row and produces the first generation logits, identically to the
+        token-stepping path.  An over-long prompt (reservation clipped to
+        max_len) prefills only up to the last reserved row; the decode
+        interleave then writes that row and trips the same out-of-room
+        truncation the token-stepping path degrades through."""
+        cap = len(self.pool.owned(i)) * self.page_size
+        end = min(len(req.prompt) - 1, cap - 1)
+        if s.pos >= end:
+            return
+        table = self.pool.page_table(self.B, self._table_width)[i:i + 1]
+        table = jnp.asarray(table)
+        while s.pos < end:
+            c = min(self.prefill_chunk, end - s.pos)
+            toks = jnp.asarray(req.prompt[s.pos:s.pos + c][None, :])
+            _, self.cache = self._prefill(
+                self.params, toks, self.cache,
+                jnp.asarray([s.pos], np.int32), table,
+            )
+            s.pos += c
+            s.prompt_left -= c
+            self.prefill_launches += 1
+            self.pool.set_length(i, s.pos)
 
     def _reset_slot_cache(self, i: int):
         """Dense backend only: zero slot i's cache rows — an O(max_len)
@@ -164,6 +294,20 @@ class ContinuousBatcher:
     def pool_stats(self):
         """Paged backend's allocator stats (None on the dense backend)."""
         return self.pool.stats() if self.pool is not None else None
+
+    def prefix_stats(self) -> Optional[dict]:
+        """Prefix-cache hit/reuse counters (None when prefix_cache off)."""
+        if self.prefix is None:
+            return None
+        st = self.pool.stats()
+        out = self.prefix.stats()
+        out.update({
+            "cow_copies": self.cow_copies,
+            "pages_shared": st.pages_shared,
+            "pages_reused": st.pages_reused,
+            "shared_high_water": st.shared_high_water,
+        })
+        return out
 
     def _active_width(self) -> int:
         """Page-table width covering the deepest live slot, bucketed to the
@@ -230,6 +374,12 @@ class ContinuousBatcher:
                 continue
             if s.prompt_left == 1:
                 s.prompt_left = 0  # prompt done: this logit starts generation
+                if self.prefix is not None and not out_of_room:
+                    # the prompt's full pages are now immutable (decode
+                    # continues in later pages): publish them for reuse.
+                    # Pages the slot itself mounted shared dedup inside the
+                    # index (existing nodes win, no double pin).
+                    self.prefix.insert(req.prompt, self.pool.owned(i))
             req.output.append(int(next_tok[i]))
             hit_eos = req.eos_id is not None and req.output[-1] == req.eos_id
             if (len(req.output) >= req.max_new or hit_eos

@@ -20,6 +20,18 @@ page-table rows all point at it, so the batched per-slot cache write
 (`models/layers.Attention.decode_paged`) needs no active-slot masking —
 inactive lanes harmlessly scribble on the dump page.
 
+Pages are *reference counted* so they can be shared across owners — the
+cross-request prefix cache (runtime/prefix_cache) maps a request's common
+prompt prefix onto pages some earlier request already prefilled.  A page is
+returned to the free list only when its last reference drops (`decref`);
+`release(slot)` decrements instead of frees.  A slot that must write into
+a page it shares first privatizes it with `cow(slot, idx)` — copy-on-write
+at page granularity: one fresh page is allocated, the shared page loses one
+reference, and the caller copies the device rows.  This is the serving
+analogue of the paper's tile-buffer reuse: operands (here, cached K/V rows)
+stay resident and are *referenced* by new consumers instead of being
+re-computed and re-streamed per request.
+
 Everything here is host-side numpy/Python (the scheduler's bookkeeping);
 the device side consumes only the rendered `page_table()` / `lengths()`
 arrays, which ride to the Pallas decode kernel as scalar-prefetch operands
@@ -50,6 +62,10 @@ class PoolStats:
     pages_free: int
     live_tokens: int
     high_water: int         # max pages_in_use seen since construction
+    pages_touched: int = 0  # sum over slots of ceil(len / page_size)
+    pages_shared: int = 0   # pages with refcount > 1 (incl. index pins)
+    pages_reused: int = 0   # pages mounted from a prefix hit by live slots
+    shared_high_water: int = 0
 
     @property
     def utilization(self) -> float:
@@ -58,10 +74,24 @@ class PoolStats:
 
     @property
     def occupancy(self) -> float:
-        """Live tokens / capacity of the reserved pages — internal
-        fragmentation (1.0 = every reserved page row holds a live token)."""
-        cap = self.pages_in_use * self.page_size
+        """Live tokens / capacity of the pages the live lengths actually
+        touch — internal fragmentation (1.0 = every touched page row holds
+        a live token).  The denominator counts the last, partially-filled
+        page of every slot (ceil(len / page_size) pages), NOT the full
+        reservation: a slot admitted mid-page contributes its partial page
+        the moment it has one live token, so occupancy is consistent across
+        the token-by-token and chunked prefill paths."""
+        cap = self.pages_touched * self.page_size
         return self.live_tokens / cap if cap else 1.0
+
+    @property
+    def reserved_headroom(self) -> float:
+        """Fraction of reserved pages not yet touched by a live token —
+        the admission-time worst-case reservation the slots may still grow
+        into (distinct from `occupancy`'s within-page fragmentation)."""
+        if not self.pages_in_use:
+            return 0.0
+        return max(0, self.pages_in_use - self.pages_touched) / self.pages_in_use
 
     def as_dict(self) -> dict:
         return {
@@ -71,18 +101,29 @@ class PoolStats:
             "pages_free": self.pages_free,
             "live_tokens": self.live_tokens,
             "high_water": self.high_water,
+            "pages_touched": self.pages_touched,
+            "pages_shared": self.pages_shared,
+            "pages_reused": self.pages_reused,
+            "shared_high_water": self.shared_high_water,
             "utilization": self.utilization,
             "occupancy": self.occupancy,
+            "reserved_headroom": self.reserved_headroom,
         }
 
 
 class PagePool:
-    """Free-list page allocator over `num_pages` allocatable pages.
+    """Reference-counted free-list page allocator over `num_pages`
+    allocatable pages.
 
     ``total_pages`` (what the physical cache arrays are sized to) is
     ``num_pages + 1``: page 0 is the reserved dump page.  Pages are
     recycled LIFO — the most recently freed pages are reallocated first,
     which keeps the working set of hot pages small.
+
+    A page may be referenced by several owners at once (slots sharing a
+    prompt prefix, plus the prefix index pinning it for future requests);
+    it returns to the free list only when the count hits zero.  Owners
+    never write into a shared page — `cow` privatizes first.
     """
 
     def __init__(self, num_pages: int, page_size: int):
@@ -94,9 +135,12 @@ class PagePool:
         self.page_size = int(page_size)
         # LIFO free list of allocatable ids (1..num_pages); 0 is the dump page
         self._free: List[int] = list(range(self.num_pages, 0, -1))
+        self._refs: Dict[int, int] = {}          # page id -> reference count
         self._owned: Dict[int, List[int]] = {}   # slot -> page ids, in order
         self._lengths: Dict[int, int] = {}       # slot -> live token count
+        self._mounted: Dict[int, int] = {}       # slot -> pages mounted shared
         self._high_water = 0
+        self._shared_high_water = 0
 
     # ------------------------------------------------------------------
     # allocation / release
@@ -119,30 +163,117 @@ class PagePool:
         """Pages needed to hold `tokens` positions."""
         return -(-max(int(tokens), 0) // self.page_size)
 
-    def try_reserve(self, slot: int, tokens: int) -> Optional[List[int]]:
+    # ---- reference counting ----
+
+    def refcount(self, page: int) -> int:
+        """Current reference count (0 = free / never allocated)."""
+        return self._refs.get(int(page), 0)
+
+    def incref(self, page: int) -> int:
+        """Add a reference to an allocated page; returns the new count.
+        Referencing a free page is an error — there is nothing to share."""
+        page = int(page)
+        if page not in self._refs:
+            raise ValueError(f"page {page} is not allocated; cannot incref")
+        self._refs[page] += 1
+        self._track_sharing()
+        return self._refs[page]
+
+    def decref(self, page: int) -> int:
+        """Drop a reference; frees the page (back to the LIFO free list, no
+        zeroing) when the count reaches zero.  Returns the new count.
+        A double-release — decref of a page that is already free — is an
+        error: it means two owners both believed they held the last
+        reference, and silently honoring it would hand the same physical
+        page to two future tenants."""
+        page = int(page)
+        if page not in self._refs:
+            raise ValueError(
+                f"page {page} is already free (double release)")
+        self._refs[page] -= 1
+        if self._refs[page] == 0:
+            del self._refs[page]
+            self._free.append(page)
+            return 0
+        return self._refs[page]
+
+    def _alloc_one(self) -> int:
+        page = self._free.pop()
+        self._refs[page] = 1
+        return page
+
+    def _track_sharing(self) -> None:
+        self._shared_high_water = max(self._shared_high_water,
+                                      self.pages_shared)
+
+    @property
+    def pages_shared(self) -> int:
+        """Pages currently referenced by more than one owner."""
+        return sum(1 for c in self._refs.values() if c > 1)
+
+    def try_reserve(self, slot: int, tokens: int,
+                    shared: Optional[List[int]] = None) -> Optional[List[int]]:
         """Reserve pages covering `tokens` positions for `slot`.
 
+        ``shared`` prepends already-resident pages (a prefix-cache hit):
+        each gains a reference instead of costing a fresh page, and only
+        ceil(tokens/page_size) - len(shared) pages come off the free list.
+
         Returns the slot's page-id list, or None (and changes NOTHING) when
-        the free list cannot cover it — the caller back-pressures.  A slot
-        must be released before it can be reserved again."""
+        the free list cannot cover the fresh tail — the caller
+        back-pressures.  A slot must be released before it can be reserved
+        again."""
         if slot in self._owned:
             raise ValueError(f"slot {slot} already holds a reservation")
-        need = self.pages_for(tokens)
+        shared = [int(p) for p in (shared or [])]
+        for p in shared:
+            if p not in self._refs:
+                raise ValueError(f"shared page {p} is not allocated")
+        need = self.pages_for(tokens) - len(shared)
         if need > len(self._free):
             return None
-        pages = [self._free.pop() for _ in range(need)]
+        for p in shared:
+            self._refs[p] += 1
+        pages = shared + [self._alloc_one() for _ in range(max(need, 0))]
         self._owned[slot] = pages
+        self._mounted[slot] = len(shared)
         self._lengths[slot] = 0
         self._high_water = max(self._high_water, self.pages_in_use)
+        self._track_sharing()
         return list(pages)
 
-    def reserve(self, slot: int, tokens: int) -> List[int]:
+    def cow(self, slot: int, idx: int) -> Optional[tuple]:
+        """Copy-on-write: privatize the slot's idx-th page before a write.
+
+        If the page is exclusively held (refcount 1) it is returned as-is —
+        (page, page), nothing to copy.  Otherwise ONE fresh page is
+        allocated, the shared page loses exactly one reference (the other
+        sharers keep theirs), and (old, new) is returned so the caller can
+        copy the device rows old -> new.  Returns None (state unchanged)
+        when the pool cannot supply the fresh page."""
+        if slot not in self._owned:
+            raise KeyError(f"slot {slot} has no reservation")
+        old = self._owned[slot][idx]
+        if self._refs[old] == 1:
+            return (old, old)
+        if not self._free:
+            return None
+        new = self._alloc_one()
+        self._refs[old] -= 1  # never reaches 0: it was > 1
+        self._owned[slot][idx] = new
+        if idx < self._mounted.get(slot, 0):
+            self._mounted[slot] -= 1  # the private copy is no longer reuse
+        self._high_water = max(self._high_water, self.pages_in_use)
+        return (old, new)
+
+    def reserve(self, slot: int, tokens: int,
+                shared: Optional[List[int]] = None) -> List[int]:
         """Strict variant of `try_reserve`: raises PoolExhausted."""
-        got = self.try_reserve(slot, tokens)
+        got = self.try_reserve(slot, tokens, shared)
         if got is None:
             raise PoolExhausted(
-                f"need {self.pages_for(tokens)} pages for slot {slot}, "
-                f"only {len(self._free)} free"
+                f"need {self.pages_for(tokens) - len(shared or [])} fresh "
+                f"pages for slot {slot}, only {len(self._free)} free"
             )
         return got
 
@@ -157,19 +288,26 @@ class PagePool:
             return list(self._owned[slot])
         if need > len(self._free):
             return None
-        self._owned[slot].extend(self._free.pop() for _ in range(need))
+        self._owned[slot].extend(self._alloc_one() for _ in range(need))
         self._high_water = max(self._high_water, self.pages_in_use)
         return list(self._owned[slot])
 
     def release(self, slot: int) -> int:
-        """Return the slot's pages to the free list (no zeroing — stale
-        contents are masked by length).  Returns the page count freed."""
+        """Drop the slot's reference on each of its pages; pages whose LAST
+        reference this was return to the free list (no zeroing — stale
+        contents are masked by length).  Pages still referenced elsewhere
+        (prefix-index pins, other slots sharing the prefix) stay resident.
+        Returns the page count actually freed."""
         pages = self._owned.pop(slot, None)
         self._lengths.pop(slot, None)
+        self._mounted.pop(slot, None)
         if not pages:
             return 0
-        self._free.extend(reversed(pages))  # LIFO: hot pages recycle first
-        return len(pages)
+        freed = 0
+        for p in reversed(pages):  # LIFO: hot pages recycle first
+            if self.decref(p) == 0:
+                freed += 1
+        return freed
 
     def set_length(self, slot: int, tokens: int) -> None:
         """Record the slot's live token count (for occupancy stats and the
@@ -219,4 +357,9 @@ class PagePool:
             pages_free=len(self._free),
             live_tokens=sum(self._lengths.values()),
             high_water=self._high_water,
+            pages_touched=sum(self.pages_for(ln)
+                              for ln in self._lengths.values()),
+            pages_shared=self.pages_shared,
+            pages_reused=sum(self._mounted.values()),
+            shared_high_water=self._shared_high_water,
         )

@@ -25,7 +25,6 @@ import random
 import sys
 import types
 
-import pytest
 
 
 def pytest_configure(config):

@@ -1,7 +1,4 @@
 """Checkpoint manager: roundtrip, async, atomicity, GC, elastic restore."""
-import json
-import os
-import threading
 
 import jax
 import jax.numpy as jnp

@@ -2,7 +2,6 @@
 the full forward pass (greedy-equivalence within cache-dtype tolerance)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import get_config

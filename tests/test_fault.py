@@ -1,6 +1,5 @@
 """Fault tolerance: failure/restart loop, straggler detection, elastic
 re-mesh, determinism of the data pipeline under seek()."""
-import time
 
 import jax
 import jax.numpy as jnp

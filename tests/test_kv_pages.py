@@ -5,7 +5,6 @@ leaks), exhaustion back-pressures instead of crashing, page tables stay
 correct under eviction/readmission, and a paged `ContinuousBatcher`
 produces EXACTLY the dense batcher's outputs."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -99,9 +98,13 @@ def test_churn_never_leaks():
             pool.release(slot)
             del live[slot]
         else:
-            got = pool.try_reserve(slot, int(rng.integers(1, 9)))
+            toks = int(rng.integers(1, 9))
+            got = pool.try_reserve(slot, toks)
             if got is not None:
                 live[slot] = got
+                # admit mid-page: a partial live length, as the token-by-
+                # token prefill path produces between steps
+                pool.set_length(slot, int(rng.integers(1, toks + 1)))
         used = sum(len(v) for v in live.values())
         assert pool.pages_in_use == used
         assert pool.pages_free == 7 - used
@@ -109,6 +112,14 @@ def test_churn_never_leaks():
         owned = [p for v in live.values() for p in v]
         assert len(owned) == len(set(owned))
         assert DUMP_PAGE not in owned
+        # occupancy accounting stays consistent under churn: every partial
+        # page is counted (ceil per slot), so touched <= reserved and the
+        # ratio never exceeds 1
+        st = pool.stats()
+        assert st.pages_touched == sum(
+            -(-ln // 2) for ln in (pool.lengths(5)[s] for s in live))
+        assert st.pages_touched <= st.pages_in_use
+        assert st.occupancy <= 1.0
     st = pool.stats()
     assert st.high_water <= 7 and st.pages_in_use == sum(
         len(v) for v in live.values())
@@ -120,9 +131,31 @@ def test_stats_occupancy():
     pool.set_length(0, 10)
     st = pool.stats()
     assert st.pages_in_use == 4 and st.live_tokens == 10
-    assert st.occupancy == pytest.approx(10 / 16)
+    # occupancy is live tokens over pages TOUCHED (ceil(10/4) = 3, counting
+    # the final partial page), not over the 4-page worst-case reservation —
+    # a slot admitted mid-page contributes its partial page immediately
+    assert st.pages_touched == 3
+    assert st.occupancy == pytest.approx(10 / 12)
+    assert st.reserved_headroom == pytest.approx(1 / 4)
     assert st.utilization == pytest.approx(0.5)
     assert isinstance(st.as_dict()["occupancy"], float)
+
+
+def test_occupancy_counts_partial_page_mid_admission():
+    """A request admitted mid-page (one live token in a fresh page) must
+    show up in pages_touched/occupancy right away — the token-by-token
+    prefill path used to leave the last partially-filled page unaccounted
+    until it was full."""
+    pool = PagePool(num_pages=8, page_size=4)
+    pool.reserve(0, 8)
+    pool.set_length(0, 1)  # first prefill token: partial page, counted
+    st = pool.stats()
+    assert st.pages_touched == 1
+    assert st.occupancy == pytest.approx(1 / 4)
+    pool.set_length(0, 5)  # spills into the second page mid-fill
+    st = pool.stats()
+    assert st.pages_touched == 2
+    assert st.occupancy == pytest.approx(5 / 8)
 
 
 # ---------------------------------------------------------------------------

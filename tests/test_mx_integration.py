@@ -2,7 +2,6 @@
 Pallas MX kernel path (interpret mode) and matches the XLA path — the
 "paper's technique as a first-class framework feature" claim, end to end."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

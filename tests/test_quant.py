@@ -449,7 +449,7 @@ res = jnp.asarray(rng.normal(size=(M, N)), jnp.float32)
 spec = QuantSpec("int8", "tile")
 qa, a_s = quantize_operand(x, spec, "a")
 qb, b_s = quantize_operand(w, spec, "b")
-deq = lambda q, s: dequantize(q, s)
+deq = dequantize
 ref_ag = jax.nn.gelu(deq(qa, a_s) @ deq(qb, b_s) + bias) + res
 ref_rs = (deq(qa, a_s) @ deq(qb, b_s) + bias) + res
 

@@ -1,5 +1,4 @@
 """Tile planner and energy model tests."""
-import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
