@@ -1,0 +1,227 @@
+"""Fault-injected serving benchmark -> BENCH_chaos.json.
+
+Runs the same request mix through five fault profiles on the paged
+prefix-cached batcher and measures what the recovery paths (retry,
+quarantine, preemption-with-page-backed-recompute) cost:
+
+  - ``fault_free``: the reference run — its per-request outputs are the
+    ground truth the exactness checks compare against;
+  - ``step_faults``: ~10% transient DeviceFailure per step + latency
+    spikes; every failure retries, so outputs must be bitwise identical to
+    fault-free and goodput pays exactly the retry launches;
+  - ``preempt``: a low-priority request is preempted mid-decode (the
+    public `preempt()` API — deterministic), its pages published into the
+    prefix index, and resumed; its output must match fault-free bitwise
+    and the resume latency / recompute cost is measured;
+  - ``pool_pressure``: seeded page-seizure episodes squeeze admissions
+    (back-pressure, eviction, preemption when a lower-priority victim
+    exists); goodput degrades but every completed request stays exact;
+  - ``poison``: scheduled non-finite logits quarantine one slot per hit;
+    the victim fails typed ("failed"), all other requests stay exact.
+
+Goodput is completed-request tokens per DEVICE LAUNCH (steps + retries):
+denominated in the scheduler's own clock it is seeded-deterministic —
+retries, back-pressure stalls, and recompute all show up in it — where
+tok/s would inherit machine noise (wall tok/s is reported informationally).
+Checks gated by CI (scripts/check_bench.py): goodput under ~10% faults
+>= 0.7x fault-free, exactness booleans (unaffected + resumed requests
+match fault-free bitwise), and every request terminating with a typed
+finish_reason.
+
+  PYTHONPATH=src python -m benchmarks.chaos_bench [--seed 0] [--gen 12]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.runtime.batcher import ContinuousBatcher, Request
+from repro.runtime.lifecycle import (
+    ChaosConfig, ChaosInjector, FinishReason, RetryPolicy,
+)
+
+BENCH_CHAOS_OUT = Path(__file__).resolve().parent.parent / "BENCH_chaos.json"
+
+
+def _make_requests(cfg, rng, n_req: int, plen: int, gen: int):
+    """Deterministic mix: a shared system prompt + per-request tails (the
+    prefix cache's workload), alternating priorities, ample deadlines."""
+    sys_prompt = rng.integers(0, cfg.vocab // 2, (3 * plen) // 4)
+    reqs = []
+    for i in range(n_req):
+        tail = rng.integers(cfg.vocab // 2, cfg.vocab, plen - len(sys_prompt))
+        tail[0] = cfg.vocab // 2 + i  # unique divergence token
+        prompt = np.concatenate([sys_prompt, tail]).astype(np.int32)
+        reqs.append(Request(rid=i, prompt=prompt, max_new=gen,
+                            priority=i % 2,
+                            deadline_steps=20 * (plen + gen)))
+    return reqs
+
+
+def _run_profile(model, params, cfg, reqs, max_len, page_size, chunk,
+                 chaos, preempt_rid=None, preempt_after_tokens=2):
+    width = -(-max_len // page_size)
+    batcher = ContinuousBatcher(
+        model, params, batch_slots=2, max_len=max_len, paged=True,
+        page_size=page_size, prefix_cache=True, prefill_chunk=chunk,
+        # headroom for index pins + both slots + pressure seizures
+        num_pages=width * 6, chaos=chaos,
+        retry=RetryPolicy(max_retries=4, backoff_s=0.0),
+    )
+    t0 = time.perf_counter()
+    for r in reqs:
+        batcher.submit(r)
+    if preempt_rid is not None:
+        # deterministic preemption: once the victim has decoded a couple of
+        # tokens, yank it; its resident pages (prompt AND generated tokens)
+        # publish into the prefix index, so the resume recomputes only the
+        # partial-page tail
+        victim = reqs[preempt_rid]
+        while (victim.finish_reason is None
+               and len(victim.output) < preempt_after_tokens):
+            batcher.step()
+        batcher.preempt(preempt_rid)
+    fin = batcher.run_to_completion(max_steps=4000)
+    wall = time.perf_counter() - t0
+    good_tokens = sum(
+        len(r.output) for r in fin.values()
+        if r.finish_reason in FinishReason.COMPLETED)
+    hs = batcher.health_summary()
+    launches = batcher.steps_run + hs["retries"]
+    return {
+        "wall_s": wall,
+        "steps": batcher.steps_run,
+        "launches": launches,
+        "goodput_tok_per_launch": good_tokens / max(launches, 1),
+        "tok_per_s": good_tokens / wall,
+        "completed": sum(1 for r in fin.values()
+                         if r.finish_reason in FinishReason.COMPLETED),
+        "retries": hs["retries"],
+        "preemptions": hs["preemptions"],
+        "resumes": hs["resumes"],
+        "resume_latency_steps_mean": hs["resume_latency_steps_mean"],
+        "quarantined": hs["quarantined"],
+        "finish_reasons": hs["finish_reasons"],
+        "chaos": hs["chaos"],
+    }, fin
+
+
+def run(arch: str, seed: int, plen: int, gen: int, page_size: int,
+        chunk: int, n_req: int):
+    cfg = get_config(arch + "-smoke")
+    model = build_model(cfg)
+    import jax
+
+    params = model.init(jax.random.PRNGKey(0))
+    max_len = plen + gen
+
+    profiles = {
+        "fault_free": (None, None),
+        "step_faults": (ChaosConfig(seed=seed, step_failure_rate=0.10,
+                                    latency_spike_rate=0.10), None),
+        "preempt": (None, 0),  # preempt rid 0 (priority 0) mid-decode
+        "pool_pressure": (ChaosConfig(seed=seed, pool_pressure_rate=0.15,
+                                      pool_pressure_pages=4,
+                                      pool_pressure_steps=4), None),
+        "poison": (ChaosConfig(seed=seed, poison_at_steps=(plen + 3,)),
+                   None),
+    }
+    results, outputs = {}, {}
+    for name, (ccfg, preempt_rid) in profiles.items():
+        rng = np.random.default_rng(7)  # same request mix every profile
+        reqs = _make_requests(cfg, rng, n_req, plen, gen)
+        chaos = ChaosInjector(ccfg) if ccfg else None
+        rec, fin = _run_profile(model, params, cfg, reqs, max_len,
+                                page_size, chunk, chaos,
+                                preempt_rid=preempt_rid)
+        results[name] = rec
+        outputs[name] = {r.rid: (r.finish_reason, tuple(r.output))
+                         for r in fin.values()}
+
+    ref = outputs["fault_free"]
+    base = results["fault_free"]["goodput_tok_per_launch"]
+
+    def exact_vs_ref(name: str) -> bool:
+        """Every request the faults did not kill matches fault-free
+        bitwise (quarantined/expired requests are the faults' victims —
+        excluded here, but they must carry a typed reason)."""
+        return all(
+            (reason, out) == ref[rid]
+            for rid, (reason, out) in outputs[name].items()
+            if reason in FinishReason.COMPLETED)
+
+    def ratio(name: str) -> float:
+        return results[name]["goodput_tok_per_launch"] / base
+
+    checks = {
+        "goodput_faults_ratio": ratio("step_faults"),
+        "goodput_preempt_ratio": ratio("preempt"),
+        "goodput_pressure_ratio": ratio("pool_pressure"),
+        "goodput_faults_ge_0p7": bool(ratio("step_faults") >= 0.7),
+        "goodput_preempt_ge_0p7": bool(ratio("preempt") >= 0.7),
+        "goodput_pressure_ge_0p7": bool(ratio("pool_pressure") >= 0.7),
+        # retries recompute from unchanged inputs: EVERY request bitwise
+        "faults_all_exact": bool(
+            outputs["step_faults"] == ref
+            and results["step_faults"]["completed"] == n_req),
+        "resumed_exact": bool(
+            exact_vs_ref("preempt")
+            and results["preempt"]["resumes"] >= 1
+            and results["preempt"]["completed"] == n_req),
+        "pressure_completed_exact": exact_vs_ref("pool_pressure"),
+        "unaffected_exact_under_poison": exact_vs_ref("poison"),
+        "poison_quarantined": bool(results["poison"]["quarantined"] >= 1),
+        "all_typed_finish": all(
+            reason in FinishReason.ALL
+            for prof in outputs.values()
+            for reason, _ in prof.values()),
+    }
+    result = {
+        "arch": arch, "seed": seed, "prompt_len": plen, "gen": gen,
+        "page_size": page_size, "prefill_chunk": chunk, "n_req": n_req,
+        "backend": "xla(cpu)", "profiles": results, "checks": checks,
+    }
+    BENCH_CHAOS_OUT.write_text(json.dumps(result, indent=2))
+    rows = [(f"chaos_goodput_{k}", v["goodput_tok_per_launch"],
+             f"steps={v['steps']}_retries={v['retries']}"
+             f"_preempt={v['preemptions']}")
+            for k, v in results.items()]
+    rows.append(("chaos_resume_latency_steps",
+                 results["preempt"]["resume_latency_steps_mean"],
+                 f"resumes={results['preempt']['resumes']}"))
+    rows.append(("chaos_artifact", 0.0, f"wrote_{BENCH_CHAOS_OUT.name}"))
+    for k in ("goodput_faults_ge_0p7", "goodput_preempt_ge_0p7",
+              "goodput_pressure_ge_0p7", "faults_all_exact",
+              "resumed_exact", "pressure_completed_exact",
+              "unaffected_exact_under_poison", "poison_quarantined",
+              "all_typed_finish"):
+        assert checks[k], (k, {p: results[p]["finish_reasons"]
+                               for p in results})
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--gen", type=int, default=12)
+    ap.add_argument("--page-size", type=int, default=4)
+    ap.add_argument("--chunk", type=int, default=8)
+    ap.add_argument("--n-req", type=int, default=6)
+    args = ap.parse_args()
+    print("name,value,derived")
+    for name, v, derived in run(args.arch, args.seed, args.prompt_len,
+                                args.gen, args.page_size, args.chunk,
+                                args.n_req):
+        print(f"{name},{v:.4f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,7 +1,7 @@
 """CI bench-regression gate: freshly generated BENCH_*.json vs committed.
 
 The benchmarks (benchmarks/kernel_bench --dtypes, decode_bench,
-collective_bench, prefix_bench) overwrite the repo-root BENCH files in
+collective_bench, prefix_bench, chaos_bench) overwrite the repo-root BENCH files in
 place, so after a CI bench step the working tree holds the FRESH numbers
 and `git show HEAD:<file>` still serves the committed BASELINE.  This
 script diffs the two with per-metric-class tolerances and exits nonzero on
@@ -26,7 +26,7 @@ Keys added by a newer bench pass freely; keys REMOVED relative to the
 baseline are regressions (a silently vanished metric is how gates rot).
 A file absent from HEAD (first run of a new bench) passes with a note.
 
-  python scripts/check_bench.py                       # all four files
+  python scripts/check_bench.py                       # all default files
   python scripts/check_bench.py BENCH_decode.json     # just one
   python scripts/check_bench.py --baseline-dir saved/ # explicit baselines
 """
@@ -40,7 +40,8 @@ from pathlib import Path
 
 REPO = Path(__file__).resolve().parent.parent
 DEFAULT_FILES = ("BENCH_quant.json", "BENCH_decode.json",
-                 "BENCH_collective.json", "BENCH_prefix.json")
+                 "BENCH_collective.json", "BENCH_prefix.json",
+                 "BENCH_chaos.json")
 
 EXACT_TOL = 0.01
 TIMING_TOL = 0.25
@@ -52,7 +53,8 @@ TIMING_TOL = 0.25
 _WALL_SUFFIXES = ("_us", "_s")
 _WALL_MARKS = ("tok_per_s", "wall")
 _TIMING_MARKS = ("time", "speedup", "ttft", "err", "churn", "occupancy",
-                 "utilization", "headroom", "high_water", "pool")
+                 "utilization", "headroom", "high_water", "pool",
+                 "goodput", "latency", "resume")
 
 
 def _metric_class(path: tuple) -> str:

@@ -10,8 +10,17 @@ Layout:
 Properties required at 1000-node scale and tested here:
   - atomicity: a step directory is staged under `.tmp_step_x` and renamed
     only after fsync — a crash mid-save never corrupts LATEST;
-  - async: device->host transfer happens at save() call time (cheap), file
-    IO runs on a background thread; `wait()` joins before the next save;
+  - async, double-buffered: device->host transfer happens at save() call
+    time (cheap), file IO runs on a background thread, and up to TWO saves
+    may be in flight — each save() snapshots into its own staging buffer,
+    so the train loop only stalls when both buffers are busy (it joins the
+    OLDEST in-flight write, pipelining checkpoint IO behind compute);
+  - typed failure surfacing: a failed in-flight write never crashes the
+    writer thread's owner mid-step — it is re-raised as `CheckpointError`
+    from the NEXT save()/wait()/restore(), where the caller (e.g.
+    runtime/fault.TrainLoop) can log it as a typed event and decide;
+  - LATEST is monotonic: out-of-order completion of concurrent saves can
+    never move the pointer backwards to an older step;
   - elasticity: restore() takes the *target* sharding tree — a checkpoint
     written on an N-device mesh restores onto an M-device mesh (the restore
     path re-shards via device_put);
@@ -24,11 +33,22 @@ import os
 import shutil
 import threading
 from pathlib import Path
-from typing import Any, Optional
+from typing import Any, List, Optional
 
 import jax
 import ml_dtypes  # noqa: F401 — registers bfloat16 & friends with numpy
 import numpy as np
+
+
+class CheckpointError(RuntimeError):
+    """An async checkpoint write failed.  Raised from the save()/wait()
+    AFTER the failure (never from the background thread), carrying the
+    failed step; the original exception rides as __cause__."""
+
+    def __init__(self, step: int, cause: BaseException):
+        super().__init__(f"checkpoint save for step {step} failed: {cause!r}")
+        self.step = step
+        self.cause = cause
 
 
 def _flatten(tree):
@@ -52,20 +72,50 @@ def _from_disk(raw: np.ndarray, dtype_name: str, shape) -> np.ndarray:
 
 
 class CheckpointManager:
-    def __init__(self, directory: str | Path, keep_last_k: int = 3):
+    def __init__(self, directory: str | Path, keep_last_k: int = 3,
+                 max_inflight: int = 2):
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep_last_k = keep_last_k
-        self._thread: Optional[threading.Thread] = None
-        self._error: Optional[BaseException] = None
+        self.max_inflight = max(1, max_inflight)  # 2 = double buffering
+        self._inflight: List[threading.Thread] = []
+        self._errors: List[CheckpointError] = []
+        self._lock = threading.Lock()  # _errors + LATEST/_gc serialization
+        self._latest_written = self._read_latest_pointer()
+
+    def _read_latest_pointer(self) -> int:
+        f = self.dir / "LATEST"
+        try:
+            return int(f.read_text().strip()) if f.exists() else -1
+        except ValueError:
+            return -1
+
+    def _raise_pending(self):
+        with self._lock:
+            if not self._errors:
+                return
+            err, self._errors = self._errors[0], []
+        raise err
+
+    def _reap(self):
+        self._inflight = [t for t in self._inflight if t.is_alive()]
 
     # ----------------- save -----------------
 
     def save(self, step: int, tree: Any, *, blocking: bool = False):
-        """Snapshot `tree` (pytree of jax/np arrays) for `step`."""
-        self.wait()
+        """Snapshot `tree` (pytree of jax/np arrays) for `step`.
+
+        Non-blocking saves overlap with compute: each call stages into its
+        own buffer (`host_leaves` below) and only blocks when
+        `max_inflight` writes are already running — then it joins the
+        oldest one (double buffering).  A previously failed write surfaces
+        here as `CheckpointError` BEFORE the new save starts."""
+        self._reap()
+        self._raise_pending()
         leaves, treedef = _flatten(tree)
-        # device->host now (cheap, synchronous); IO async
+        # device->host now (cheap, synchronous); IO async.  This copy IS
+        # the staging buffer: the caller may mutate/donate its arrays the
+        # moment save() returns.
         host_leaves = [np.asarray(x) for x in leaves]
         manifest = {
             "step": step,
@@ -81,35 +131,52 @@ class CheckpointManager:
                 if tmp.exists():
                     shutil.rmtree(tmp)
                 tmp.mkdir(parents=True)
-                for i, a in enumerate(host_leaves):
-                    np.save(tmp / f"leaf_{i:05d}.npy", _to_disk(a))
+                self._write_leaves(tmp, host_leaves)
                 (tmp / "manifest.json").write_text(json.dumps(manifest))
                 final = self.dir / f"step_{step:09d}"
                 if final.exists():
                     shutil.rmtree(final)
                 os.rename(tmp, final)
-                latest_tmp = self.dir / ".LATEST.tmp"
-                latest_tmp.write_text(str(step))
-                os.replace(latest_tmp, self.dir / "LATEST")
-                self._gc()
-            except BaseException as e:  # noqa: BLE001 — surfaced via wait()
-                self._error = e
+                with self._lock:
+                    # monotonic LATEST: concurrent saves may finish out of
+                    # order; never point at an older step than already
+                    # published
+                    if step > self._latest_written:
+                        latest_tmp = self.dir / ".LATEST.tmp"
+                        latest_tmp.write_text(str(step))
+                        os.replace(latest_tmp, self.dir / "LATEST")
+                        self._latest_written = step
+                    self._gc()
+            except BaseException as e:  # noqa: BLE001 — surfaced next call
+                with self._lock:
+                    self._errors.append(CheckpointError(step, e))
 
         if blocking:
             _write()
-            if self._error:
-                raise self._error
+            self._raise_pending()
         else:
-            self._thread = threading.Thread(target=_write, daemon=True)
-            self._thread.start()
+            if len(self._inflight) >= self.max_inflight:
+                self._inflight.pop(0).join()  # oldest buffer drains first
+                self._raise_pending()
+            t = threading.Thread(target=_write, daemon=True)
+            self._inflight.append(t)
+            t.start()
+
+    def _write_leaves(self, tmp: Path, host_leaves) -> None:
+        """One file per leaf (tests monkeypatch this to gate/fail IO)."""
+        for i, a in enumerate(host_leaves):
+            np.save(tmp / f"leaf_{i:05d}.npy", _to_disk(a))
 
     def wait(self):
-        if self._thread is not None:
-            self._thread.join()
-            self._thread = None
-        if self._error:
-            err, self._error = self._error, None
-            raise err
+        """Join ALL in-flight writes; re-raise the first pending failure."""
+        while self._inflight:
+            self._inflight.pop(0).join()
+        self._raise_pending()
+
+    @property
+    def inflight_saves(self) -> int:
+        self._reap()
+        return len(self._inflight)
 
     def _gc(self):
         steps = sorted(self.all_steps())

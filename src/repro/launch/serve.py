@@ -7,6 +7,9 @@ CPU smoke examples:
       --paged --page-size 8
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
       --prefix-cache --prefill-chunk 8   # shared system prompt across requests
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
+      --prefix-cache --chaos --fault-rate 0.1 --chaos-seed 0
+      # fault-injected serving: typed finish reasons + per-step health
 """
 from __future__ import annotations
 
@@ -32,8 +35,13 @@ def _run_continuous(model, cfg, params, args) -> int:
     and reports the allocator's page occupancy.  --prefix-cache additionally
     shares already-prefilled prompt prefixes across requests (every request
     gets a common system prompt here, so hits are visible) and reports the
-    index's hit rate and pages shared."""
+    index's hit rate and pages shared.  --chaos additionally threads a
+    seeded `ChaosInjector` through every step (transient step failures,
+    one-slot logit poisoning, pool-pressure episodes, latency spikes) and
+    reports the per-step health record: typed finish reasons, retries,
+    preempt/resume counts, quarantines, straggler flags."""
     from ..runtime.batcher import ContinuousBatcher, Request
+    from ..runtime.lifecycle import ChaosConfig, ChaosInjector, RetryPolicy
 
     B = args.batch
     max_len = args.max_len or (args.prompt_len + args.gen)
@@ -47,11 +55,22 @@ def _run_continuous(model, cfg, params, args) -> int:
     num_pages = None
     if args.prefix_cache:
         num_pages = (B + 2) * -(-max_len // args.page_size)
+    chaos = None
+    if args.chaos:
+        chaos = ChaosInjector(ChaosConfig(
+            seed=args.chaos_seed,
+            step_failure_rate=args.fault_rate,
+            poison_rate=args.fault_rate / 4,
+            latency_spike_rate=args.fault_rate,
+            pool_pressure_rate=args.fault_rate / 2 if args.paged else 0.0,
+            pool_pressure_pages=2,
+        ))
     batcher = ContinuousBatcher(
         model, params, batch_slots=B, max_len=max_len,
         paged=args.paged, page_size=args.page_size, kv_quant=kv_quant,
         num_pages=num_pages, prefix_cache=args.prefix_cache,
         prefill_chunk=args.prefill_chunk if args.paged else 0,
+        chaos=chaos, retry=RetryPolicy(max_retries=3, backoff_s=0.0),
     )
     rng = np.random.default_rng(0)
     n_req = 2 * B
@@ -67,13 +86,21 @@ def _run_continuous(model, cfg, params, args) -> int:
         else:
             plen = int(rng.integers(2, args.prompt_len + 1))
             prompt = rng.integers(0, cfg.vocab, plen).astype(np.int32)
-        batcher.submit(Request(rid=i, prompt=prompt, max_new=args.gen))
+        # under chaos, stagger priorities and give every request a generous
+        # step deadline so expiry/preemption paths are visible end to end
+        kw = {}
+        if args.chaos:
+            kw = dict(priority=i % 2,
+                      deadline_steps=8 * (args.prompt_len + args.gen))
+        batcher.submit(Request(rid=i, prompt=prompt, max_new=args.gen, **kw))
     finished = batcher.run_to_completion()
     wall = time.time() - t0
     total = sum(len(r.prompt) + len(r.output) for r in finished.values())
     mode = "paged" if args.paged else "dense"
     if args.prefix_cache:
         mode += "+prefix"
+    if args.chaos:
+        mode += "+chaos"
     print(f"continuous batching [{mode} cache]: {len(finished)} requests "
           f"through {B} slots; {total / wall:.1f} tok/s (CPU)")
     if args.paged:
@@ -90,6 +117,24 @@ def _run_continuous(model, cfg, params, args) -> int:
               f"(peak shared {ps['shared_high_water']}), "
               f"{ps['cow_copies']} COW copies, "
               f"{ps['evicted_pages']} pages evicted")
+    if args.chaos:
+        hs = batcher.health_summary()
+        print(f"  chaos [seed {args.chaos_seed}]: "
+              f"{hs['chaos']['failures_injected']} step failures "
+              f"({hs['retries']} retries), "
+              f"{hs['chaos']['poisons_injected']} poisons "
+              f"({hs['quarantined']} quarantined), "
+              f"{hs['preemptions']} preemptions / {hs['resumes']} resumes "
+              f"(mean resume latency "
+              f"{hs['resume_latency_steps_mean']:.1f} steps), "
+              f"{hs['stragglers']} straggler steps")
+        reasons = hs["finish_reasons"]
+        print("  finish reasons: "
+              + ", ".join(f"{k}={v}" for k, v in sorted(reasons.items())))
+        slow = max(batcher.health, key=lambda h: h.dt_s)
+        print(f"  health: {hs['steps']} steps recorded; slowest step "
+              f"{slow.step} at {slow.dt_s * 1e3:.1f}ms "
+              f"(active {slow.active}, queued {slow.queued})")
     for rid in sorted(finished)[:2]:
         print(f"  req {rid}: {finished[rid].output[:8]}")
     return 0
@@ -120,11 +165,22 @@ def main(argv=None):
     ap.add_argument("--kv-cache", choices=("f32", "int8"), default="f32",
                     help="paged-cache payload dtype (int8 stores per-row "
                          "scale pages via kernels/quant)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="fault-injected serving (implies --continuous): "
+                         "seeded step failures, logit poisoning, pool "
+                         "pressure, latency spikes; reports typed finish "
+                         "reasons + per-step health (runtime/lifecycle)")
+    ap.add_argument("--chaos-seed", type=int, default=0,
+                    help="chaos schedule seed (same seed => same faults)")
+    ap.add_argument("--fault-rate", type=float, default=0.1,
+                    help="per-step fault probability under --chaos")
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help="batch prefill: push the prompt through the cache "
                          "this many tokens per launch instead of one decode "
                          "step per token (0 = token stepping)")
     args = ap.parse_args(argv)
+    if args.chaos:
+        args.continuous = True  # chaos lives in the batcher's step loop
     if args.prefix_cache:
         args.paged = True  # the prefix index lives on the page pool
     if args.kv_cache != "f32" and not args.paged:

@@ -3,7 +3,13 @@ from .fault import DeviceFailure, FaultInjector, StragglerDetector, TrainLoop
 __all__ = ["DeviceFailure", "FaultInjector", "StragglerDetector", "TrainLoop", "elastic"]
 from .batcher import ContinuousBatcher, Request  # noqa: E402
 from .kv_pages import DUMP_PAGE, PagePool, PoolExhausted, PoolStats  # noqa: E402
+from .lifecycle import (  # noqa: E402
+    ChaosConfig, ChaosInjector, FinishReason, RequestState, RetryPolicy,
+    StepHealth,
+)
 from .prefix_cache import PrefixHit, PrefixIndex  # noqa: E402
 __all__ += ["ContinuousBatcher", "Request",
             "DUMP_PAGE", "PagePool", "PoolExhausted", "PoolStats",
+            "ChaosConfig", "ChaosInjector", "FinishReason", "RequestState",
+            "RetryPolicy", "StepHealth",
             "PrefixHit", "PrefixIndex"]

@@ -1,11 +1,11 @@
-"""Continuous-batching serving scheduler.
+"""Continuous-batching serving scheduler with a fault-tolerant lifecycle.
 
 Fixed B decode slots; requests stream in, each slot decodes at its own
 position (the per-slot `index` vector threaded through Attention.decode).
-When a slot finishes (max_new reached or EOS), it is evicted and the next
-queued request is admitted — its prompt is prefilled by stepping tokens
-through the slot while the other slots keep decoding (token-level
-interleaving, vLLM-style scheduling at batch granularity).
+When a slot finishes, it is evicted and the next queued request is
+admitted — its prompt is prefilled by stepping tokens through the slot
+while the other slots keep decoding (token-level interleaving, vLLM-style
+scheduling at batch granularity).
 
 Two cache backends:
 
@@ -16,62 +16,85 @@ Two cache backends:
     pages from the free list (back-pressuring the queue when the pool is
     exhausted instead of crashing), eviction returns them with NO zeroing,
     and each decode step attends only over pages the live sequences
-    actually touch — decode bytes scale with live tokens, not max_len.
-    The device step is `model.decode_step_paged`, whose attention runs the
-    split-KV Pallas kernel (kernels/mx_flash_decode) under the pallas_mx
-    policy and the gather-based oracle on the XLA fallback.
+    actually touch.  The device step is `model.decode_step_paged`
+    (kernels/mx_flash_decode under the pallas_mx policy).
 
 Two paged admission accelerators (the cross-request reuse PR):
 
   - ``prefix_cache=True``: a content index over the page pool
     (runtime/prefix_cache) maps each request's longest already-prefilled
-    prompt prefix onto resident pages.  Admission mounts the matched span
-    as SHARED pages (reference counts, runtime/kv_pages) and only
-    reserves + prefills the tail; a divergence inside a page is mounted
-    copy-on-write.  Completed prompts are inserted back into the index,
-    release decrements instead of frees, and pool pressure evicts
-    least-recently-used UNPINNED index pages.
-  - ``prefill_chunk=N``: admission pushes the (unmatched) prompt tail
-    through `model.prefill_step_paged` N tokens per launch, writing K/V
-    directly into the slot's pages — O(prompt/chunk) launches instead of
-    token-by-token decode interleaving.  The prompt's LAST token always
-    goes through the ordinary decode step, so the first generated token's
-    launch is identical with and without prefix sharing / chunking.
+    prefix onto resident pages; admission mounts the matched span as
+    SHARED (refcounted) pages, COWs at an intra-page divergence, and only
+    reserves + prefills the tail.
+  - ``prefill_chunk=N``: admission pushes the unmatched tail through
+    `model.prefill_step_paged` N tokens per launch, writing K/V directly
+    into the slot's pages.  The prompt's LAST token always rides the
+    ordinary decode step, so the first generated token's launch is
+    identical across all admission paths.
+
+The fault-tolerant lifecycle (runtime/lifecycle) on top of both:
+
+  - every request terminates with a typed ``finish_reason`` — including
+    over-long prompts ("truncated") and requests still live or queued when
+    `run_to_completion` hits max_steps ("deadline", or
+    "preempted_requeued" for a preempted request that never got back in) —
+    instead of the old bare ``done`` flag and silently-absent entries;
+  - priorities + step-denominated TTFT/total deadlines with admission
+    load-shedding (a request whose remaining budget cannot cover even its
+    optimistic remaining work is shed with "deadline" instead of wasting
+    prefill on it) and per-step expiry during prefill and decode;
+  - **preemption with page-backed recompute**: under pool exhaustion a
+    strictly-lower-priority slot is preempted — its FULL pages (prompt
+    *and already-generated tokens*) are published into the `PrefixIndex`
+    before release, so re-admission remounts them as shared pages and
+    recomputes only the unshared tail (cf. vLLM recompute preemption,
+    riding our prefix trie; rollback-free resume is a metadata operation
+    thanks to the COW/refcount pool).  Without the prefix index the same
+    path degrades to full recompute from the request's token log.
+  - chaos injection (`ChaosInjector`) threaded through `step()`:
+    transient step failures retry with backoff (the step is functional, a
+    retry is a pure recompute), non-finite logits quarantine ONLY the
+    poisoned slot ("failed"; other slots' outputs are untouched — greedy
+    decode keeps them bitwise identical to a fault-free run), pool
+    pressure drives the preemption path, and latency spikes feed the
+    `StragglerDetector` watchdog;
+  - a per-step `StepHealth` record (`health`, `health_summary()`)
+    surfaced by ``serve --chaos`` and benchmarks/chaos_bench.py.
 
 CPU-testable end to end with smoke configs (tests/test_batcher.py asserts
-outputs are identical to per-request isolated decoding — slot interference
-would break that; tests/test_kv_pages.py asserts dense/paged parity;
-tests/test_prefix_cache.py asserts dense == paged == prefix-shared)."""
+outputs are identical to per-request isolated decoding; tests/test_kv_pages
+asserts dense/paged parity; tests/test_prefix_cache asserts dense == paged
+== prefix-shared; tests/test_lifecycle.py asserts preempt->resume and
+under-chaos exactness)."""
+
 from __future__ import annotations
 
-import dataclasses
-from collections import deque
+import time
+from collections import Counter, deque
 from typing import Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .fault import DeviceFailure, StragglerDetector
 from .kv_pages import PagePool
+from .lifecycle import (
+    ChaosInjector, FinishReason, Request, RequestState, RetryPolicy,
+    StepHealth,
+)
 from .prefix_cache import PrefixIndex
 
-
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray  # (L,) int32
-    max_new: int
-    eos_id: Optional[int] = None
-    # filled by the batcher:
-    output: List[int] = dataclasses.field(default_factory=list)
-    done: bool = False
+__all__ = ["ContinuousBatcher", "Request", "FinishReason"]
 
 
-@dataclasses.dataclass
 class _Slot:
-    req: Optional[Request] = None
-    pos: int = 0  # next cache position to write
-    prompt_left: int = 0  # tokens of the prompt still to prefill
+    def __init__(self):
+        self.req: Optional[Request] = None
+        self.pos = 0           # next cache position to write
+        self.prompt_left = 0   # tokens of seq still to feed
+        self.seq: Optional[np.ndarray] = None  # prompt + prior output
+        self.admit_order = 0   # preemption tie-break: newest victim first
 
     @property
     def free(self) -> bool:
@@ -93,15 +116,27 @@ class ContinuousBatcher:
     cache as narrow payloads with per-row scale pages.
 
     ``prefix_cache=True`` (paged only) shares already-prefilled prompt
-    prefixes across requests via the page-granularity content index;
+    prefixes across requests via the page-granularity content index
+    (``prefix_max_pinned`` caps how many pages the index may pin);
     ``prefill_chunk=N`` (paged only) batch-prefills each admitted prompt's
-    unmatched tail N tokens per launch directly into its pages."""
+    unmatched tail N tokens per launch directly into its pages.
+
+    ``chaos`` (a lifecycle.ChaosInjector) injects step faults; ``retry``
+    controls the transient-failure retry policy; non-finite-logit
+    quarantine is on whenever chaos is (it needs a host copy of the
+    logits, so the fault-free hot path skips it by default —
+    ``nonfinite_guard=True`` forces it on)."""
 
     def __init__(self, model, params, batch_slots: int, max_len: int,
                  cache_dtype=jnp.float32, *, paged: bool = False,
                  page_size: int = 16, num_pages: Optional[int] = None,
                  kv_quant=None, prefix_cache: bool = False,
-                 prefill_chunk: int = 0):
+                 prefill_chunk: int = 0,
+                 prefix_max_pinned: Optional[int] = None,
+                 chaos: Optional[ChaosInjector] = None,
+                 retry: Optional[RetryPolicy] = None,
+                 nonfinite_guard: Optional[bool] = None,
+                 straggler: Optional[StragglerDetector] = None):
         self.model = model
         self.params = params
         self.B = batch_slots
@@ -117,6 +152,20 @@ class ContinuousBatcher:
         self.prefill_chunk = int(prefill_chunk)
         self.cow_copies = 0
         self.prefill_launches = 0  # chunked prefill launches issued
+
+        # lifecycle / fault state
+        self.chaos = chaos
+        self.retry = retry or RetryPolicy()
+        self.guard = bool(nonfinite_guard) if nonfinite_guard is not None \
+            else chaos is not None
+        self.watchdog = straggler or StragglerDetector()
+        self.steps_run = 0
+        self.health: Deque[StepHealth] = deque(maxlen=4096)
+        self.preemptions_total = 0
+        self.resumes_total = 0
+        self.resume_latencies: List[int] = []  # steps preempted -> readmitted
+        self.retries_total = 0
+        self._submit_order = 0
 
         if paged:
             if not getattr(model, "supports_paged", lambda: False)():
@@ -141,7 +190,8 @@ class ContinuousBatcher:
 
             self._step = jax.jit(step_paged)
             if prefix_cache:
-                self.prefix = PrefixIndex(self.pool)
+                self.prefix = PrefixIndex(self.pool,
+                                          max_pinned_pages=prefix_max_pinned)
             if self.prefill_chunk > 0:
 
                 def prefill_paged(params, tokens, cache, index, table):
@@ -171,40 +221,202 @@ class ContinuousBatcher:
 
             self._step = jax.jit(step)
 
+    # ------------------------------------------------------------------
+    # lifecycle entry points
+    # ------------------------------------------------------------------
+
     def submit(self, req: Request):
+        req.submitted_at = self.steps_run
+        req.state = RequestState.QUEUED
+        req.log_event("submitted", self.steps_run)
+        req._order = self._submit_order  # FIFO tie-break within a priority
+        self._submit_order += 1
         self.queue.append(req)
 
-    def _admit(self):
+    def cancel(self, rid: int) -> bool:
+        """Cancel a queued or running request ("cancelled"); returns False
+        when the rid is unknown or already finished."""
+        for req in self.queue:
+            if req.rid == rid:
+                self.queue.remove(req)
+                self._finalize(req, FinishReason.CANCELLED)
+                return True
         for i, s in enumerate(self.slots):
-            if not (s.free and self.queue):
+            if not s.free and s.req.rid == rid:
+                self._finish_slot(i, FinishReason.CANCELLED)
+                return True
+        return False
+
+    def preempt(self, rid: int) -> bool:
+        """Preempt a running request: publish its full pages into the
+        prefix index (page-backed resume), release the slot, and requeue it
+        with its generated tokens retained.  Returns False when the rid is
+        not currently running.  `_admit` calls the same path automatically
+        under pool exhaustion when a higher-priority request is waiting."""
+        for i, s in enumerate(self.slots):
+            if not s.free and s.req.rid == rid:
+                self._preempt_slot(i)
+                return True
+        return False
+
+    # ------------------------------------------------------------------
+    # admission / preemption
+    # ------------------------------------------------------------------
+
+    def _pick_next(self) -> Optional[Request]:
+        """Highest priority first; FIFO within a priority (a preempted
+        request keeps its original submit order, so it re-enters ahead of
+        later arrivals of the same priority)."""
+        if not self.queue:
+            return None
+        return min(self.queue,
+                   key=lambda r: (-r.priority, getattr(r, "_order", 0)))
+
+    def _pick_victim(self, min_priority: int) -> Optional[int]:
+        """Preemption victim: the strictly-lower-priority active slot with
+        the lowest priority; ties break to the most recently admitted (its
+        unshared tail — the only real recompute cost — is shortest)."""
+        best, best_key = None, None
+        for i, s in enumerate(self.slots):
+            if s.free or s.req.priority >= min_priority:
                 continue
-            req = self.queue.popleft()
+            key = (s.req.priority, -s.admit_order)
+            if best_key is None or key < best_key:
+                best, best_key = i, key
+        return best
+
+    def _estimate_steps(self, req: Request) -> int:
+        """Optimistic steps-to-finish if admitted right now, assuming no
+        prefix hit (pessimistic on prefill, optimistic on queue wait: the
+        remaining budget shrinks every queued step, so a request is shed
+        the moment elapsed-wait + this estimate overruns the deadline —
+        queue depth times deadline budget, applied incrementally)."""
+        prefill = 1 if self.prefill_chunk > 0 else max(len(req.sequence()), 1)
+        return prefill - 1 + req.remaining_new()
+
+    def _expire_queued(self, health: StepHealth):
+        now = self.steps_run
+        for req in list(self.queue):
+            waited = now - req.submitted_at
+            if ((req.deadline_steps is not None
+                 and waited >= req.deadline_steps)
+                    or (req.ttft_steps is not None and not req.output
+                        and waited >= req.ttft_steps)):
+                self.queue.remove(req)
+                req.log_event("expired", now)
+                self._finalize(req, FinishReason.DEADLINE)
+                health.shed.append(req.rid)
+
+    def _shed_hopeless(self, health: StepHealth):
+        """Load shedding — only for requests STILL QUEUED after this step's
+        admissions: their wait keeps growing, and once elapsed wait plus an
+        optimistic steps-to-finish estimate overruns the deadline, burning
+        prefill on them would only steal goodput from feasible requests.
+        A next-in-line request is never shed here: it gets admitted
+        optimistically and the per-step expiry catches it if it does run
+        out of budget mid-prefill or mid-decode."""
+        now = self.steps_run
+        for req in list(self.queue):
+            waited = now - req.submitted_at
+            if ((req.deadline_steps is not None
+                 and waited + self._estimate_steps(req) > req.deadline_steps)
+                    or (req.ttft_steps is not None and not req.output
+                        and waited + self._estimate_steps(req)
+                        - req.remaining_new() + 1 > req.ttft_steps)):
+                self.queue.remove(req)
+                req.log_event("shed", now)
+                self._finalize(req, FinishReason.DEADLINE)
+                health.shed.append(req.rid)
+
+    def _expire_running(self, health: StepHealth):
+        now = self.steps_run
+        for i, s in enumerate(self.slots):
+            if s.free:
+                continue
+            req = s.req
+            waited = now - req.submitted_at
+            if ((req.deadline_steps is not None
+                 and waited >= req.deadline_steps)
+                    or (req.ttft_steps is not None and not req.output
+                        and waited >= req.ttft_steps)):
+                req.log_event("expired", now)
+                self._finish_slot(i, FinishReason.DEADLINE)
+                health.shed.append(req.rid)
+
+    def _admit(self, health: StepHealth):
+        self._expire_queued(health)
+        try:
+            self._fill_slots(health)
+        finally:
+            self._shed_hopeless(health)
+
+    def _fill_slots(self, health: StepHealth):
+        while self.queue:
+            idx = next((i for i, s in enumerate(self.slots) if s.free), None)
+            if idx is None:
+                return
+            req = self._pick_next()
             if self.paged:
-                if not self._admit_paged(i, s, req):
-                    self.queue.appendleft(req)  # back-pressure, FIFO kept
-                    return
-                continue
-            s.req = req
-            s.pos = 0
-            s.prompt_left = len(req.prompt)
+                if not self._admit_paged(idx, self.slots[idx], req):
+                    # pool exhausted: preempt strictly-lower-priority slots
+                    # (publishing their pages for page-backed resume) until
+                    # the reservation fits or no victim remains
+                    admitted = False
+                    while not admitted:
+                        victim = self._pick_victim(req.priority)
+                        if victim is None:
+                            break
+                        health.preempted.append(self.slots[victim].req.rid)
+                        self._preempt_slot(victim)
+                        admitted = self._admit_paged(idx, self.slots[idx],
+                                                     req)
+                    if not admitted:
+                        return  # back-pressure: req stays queued, FIFO kept
+                self.queue.remove(req)
+            else:
+                self.queue.remove(req)
+                s = self.slots[idx]
+                s.req = req
+                s.seq = req.sequence()
+                s.pos = 0
+                s.prompt_left = len(s.seq)
+                self._mark_admitted(s, req)
+
+    def _mark_admitted(self, s: _Slot, req: Request):
+        now = self.steps_run
+        s.admit_order = self._submit_order
+        self._submit_order += 1
+        req.state = RequestState.PREFILL
+        if req.preemptions and req.state != RequestState.FINISHED:
+            req.log_event("resumed", now)
+            self.resumes_total += 1
+            for kind, at in reversed(req.events):
+                if kind == "preempted":
+                    self.resume_latencies.append(now - at)
+                    break
+        else:
+            req.log_event("admitted", now)
 
     def _admit_paged(self, i: int, s: _Slot, req: Request) -> bool:
         """Paged admission: O(pages touched).  Reserves the request's
-        worst-case token footprint up front so decode never fails
-        mid-stream; with the prefix cache, the request's longest
-        already-prefilled prompt prefix mounts as shared pages (plus at
-        most one copy-on-write page at an intra-page divergence) and only
-        the tail costs fresh pages + prefill.  Returns False (nothing
-        changed) when even after index eviction the pool cannot cover the
-        fresh pages — the caller back-pressures."""
-        plen = len(req.prompt)
-        tokens = min(self.max_len, plen + req.max_new)
+        worst-case remaining token footprint up front so decode never
+        fails mid-stream; with the prefix cache, the longest
+        already-prefilled prefix of the request's token stream (prompt
+        plus any generated tokens a preemption left behind) mounts as
+        shared pages (plus at most one copy-on-write page at an intra-page
+        divergence) and only the tail costs fresh pages + prefill.
+        Returns False (nothing changed) when even after index eviction the
+        pool cannot cover the fresh pages — the caller back-pressures or
+        preempts."""
+        seq = req.sequence()
+        slen = len(seq)
+        tokens = min(self.max_len, slen + req.remaining_new())
         shared: list = []
         partial_page, partial_m = None, 0
         # an over-long prompt (truncation path) skips sharing: its indexed
         # span could exceed the clipped reservation
-        if self.prefix is not None and plen + req.max_new <= self.max_len:
-            hit = self.prefix.lookup(req.prompt)
+        if self.prefix is not None and slen + req.remaining_new() <= self.max_len:
+            hit = self.prefix.lookup(seq)
             shared = list(hit.pages)
             partial_page, partial_m = hit.partial_page, hit.partial_tokens
         # two plans: with the COW page (costs one extra fresh page for the
@@ -234,34 +446,38 @@ class ContinuousBatcher:
             if self.prefix is not None:
                 self.prefix.note(matched)
             s.req = req
+            s.seq = seq
             s.pos = matched          # next cache position to write
-            s.prompt_left = plen - matched
+            s.prompt_left = slen - matched
             if matched:
                 self.pool.set_length(i, matched)
+            self._mark_admitted(s, req)
             if self.prefill_chunk > 0:
-                self._prefill_tail(i, s, req)
+                self._prefill_tail(i, s)
             return True
         return False
 
-    def _prefill_tail(self, i: int, s: _Slot, req: Request):
+    def _prefill_tail(self, i: int, s: _Slot):
         """Chunked prefill directly into the slot's pages: positions
-        [s.pos, plen-1) go through `prefill_step_paged`, prefill_chunk
-        tokens per launch.  The last prompt token is deliberately LEFT to
-        the decode interleave — its decode launch both writes the final
-        row and produces the first generation logits, identically to the
-        token-stepping path.  An over-long prompt (reservation clipped to
-        max_len) prefills only up to the last reserved row; the decode
-        interleave then writes that row and trips the same out-of-room
-        truncation the token-stepping path degrades through."""
+        [s.pos, len(seq)-1) go through `prefill_step_paged`, prefill_chunk
+        tokens per launch.  The last token is deliberately LEFT to the
+        decode interleave — its decode launch both writes the final row
+        and produces the next-token logits, identically to the
+        token-stepping path (and, for a preempted request being resumed,
+        identically to the step the preemption interrupted).  An over-long
+        prompt (reservation clipped to max_len) prefills only up to the
+        last reserved row; the decode interleave then writes that row and
+        trips the same out-of-room truncation the token-stepping path
+        degrades through."""
         cap = len(self.pool.owned(i)) * self.page_size
-        end = min(len(req.prompt) - 1, cap - 1)
+        end = min(len(s.seq) - 1, cap - 1)
         if s.pos >= end:
             return
         table = self.pool.page_table(self.B, self._table_width)[i:i + 1]
         table = jnp.asarray(table)
         while s.pos < end:
             c = min(self.prefill_chunk, end - s.pos)
-            toks = jnp.asarray(req.prompt[s.pos:s.pos + c][None, :])
+            toks = jnp.asarray(s.seq[s.pos:s.pos + c][None, :])
             _, self.cache = self._prefill(
                 self.params, toks, self.cache,
                 jnp.asarray([s.pos], np.int32), table,
@@ -270,6 +486,56 @@ class ContinuousBatcher:
             s.prompt_left -= c
             self.prefill_launches += 1
             self.pool.set_length(i, s.pos)
+
+    def _preempt_slot(self, i: int):
+        """Preemption with page-backed recompute: the slot's FULL pages —
+        covering the prompt and every already-generated token whose K/V
+        row is resident — are published into the prefix index before
+        release, so re-admission mounts them shared and recomputes only
+        the unshared tail (the partial last page plus the token the
+        interrupted step would have fed).  Without the index the request
+        still resumes exactly, via full recompute from its token log."""
+        s = self.slots[i]
+        req = s.req
+        now = self.steps_run
+        if self.paged:
+            written = s.pos  # rows actually resident (seq[:written])
+            if self.prefix is not None and written >= self.page_size:
+                self.prefix.insert(s.seq[:written], self.pool.owned(i))
+            self.pool.release(i)
+        else:
+            self._reset_slot_cache(i)
+        req.preemptions += 1
+        req.state = RequestState.QUEUED
+        req.log_event("preempted", now)
+        self.preemptions_total += 1
+        s.req = None
+        s.seq = None
+        s.pos = 0
+        s.prompt_left = 0
+        self.queue.append(req)  # _order is kept: re-enters ahead of peers
+
+    # ------------------------------------------------------------------
+    # termination
+    # ------------------------------------------------------------------
+
+    def _finalize(self, req: Request, reason: str):
+        assert reason in FinishReason.ALL, reason
+        req.finish_reason = reason
+        req.state = RequestState.FINISHED
+        req.finished_at = self.steps_run
+        req.log_event(f"finished:{reason}", self.steps_run)
+        self.finished[req.rid] = req
+
+    def _finish_slot(self, i: int, reason: str):
+        s = self.slots[i]
+        self._finalize(s.req, reason)
+        s.req = None
+        s.seq = None
+        if self.paged:
+            self.pool.release(i)  # O(1); no zeroing
+        else:
+            self._reset_slot_cache(i)
 
     def _reset_slot_cache(self, i: int):
         """Dense backend only: zero slot i's cache rows — an O(max_len)
@@ -286,6 +552,10 @@ class ContinuousBatcher:
             return t
 
         self.cache = jax.tree.map(zero_row, self.cache)
+
+    # ------------------------------------------------------------------
+    # introspection
+    # ------------------------------------------------------------------
 
     @property
     def active(self) -> int:
@@ -309,6 +579,27 @@ class ContinuousBatcher:
         })
         return out
 
+    def health_summary(self) -> dict:
+        """Aggregate watchdog view over the run so far."""
+        reasons = Counter(r.finish_reason for r in self.finished.values())
+        return {
+            "steps": self.steps_run,
+            "retries": self.retries_total,
+            "preemptions": self.preemptions_total,
+            "resumes": self.resumes_total,
+            "resume_latency_steps_mean": (
+                float(np.mean(self.resume_latencies))
+                if self.resume_latencies else 0.0),
+            "quarantined": sum(1 for r in self.finished.values()
+                               if r.finish_reason == FinishReason.FAILED),
+            "shed_or_expired": sum(1 for r in self.finished.values()
+                                   if r.finish_reason
+                                   == FinishReason.DEADLINE),
+            "stragglers": len(self.watchdog.flagged),
+            "finish_reasons": dict(reasons),
+            "chaos": self.chaos.summary() if self.chaos else None,
+        }
+
     def _active_width(self) -> int:
         """Page-table width covering the deepest live slot, bucketed to the
         next power of two: the decode step's gather/grid scales with pages
@@ -318,10 +609,45 @@ class ContinuousBatcher:
         return min(_next_pow2(self.pool.pages_for(deepest)),
                    self._table_width)
 
+    # ------------------------------------------------------------------
+    # the step
+    # ------------------------------------------------------------------
+
+    def _device_step(self, args, fail_first: bool):
+        """One device step under the retry policy.  The injected (or real)
+        DeviceFailure is transient: the step function is pure, so a retry
+        recomputes from unchanged inputs.  Retries beyond the policy
+        re-raise — a permanently failing device is not a serving-loop
+        decision."""
+        attempts = 0
+        while True:
+            try:
+                if fail_first and attempts == 0:
+                    raise self.chaos.make_failure(self.steps_run)
+                return self._step(*args), attempts
+            except DeviceFailure:
+                attempts += 1
+                self.retries_total += 1
+                if attempts > self.retry.max_retries:
+                    raise
+                if self.retry.backoff_s:
+                    time.sleep(self.retry.delay(attempts))
+
     def step(self) -> int:
         """One batched decode step across all slots; returns #active slots."""
-        self._admit()
+        now = self.steps_run
+        health = StepHealth(step=now)
+        t0 = time.perf_counter()
+        if self.chaos is not None:
+            self.chaos.begin_step(now, self.pool)
+        self._expire_running(health)
+        self._admit(health)
+        health.active = self.active
+        health.queued = len(self.queue)
+        if self.pool is not None:
+            health.pages_free = self.pool.pages_free
         if self.active == 0:
+            self._flush_health(health, t0, ran_device_step=False)
             return 0
         tokens = np.zeros((self.B, 1), np.int32)
         index = np.zeros((self.B,), np.int32)
@@ -330,11 +656,12 @@ class ContinuousBatcher:
                 index[i] = 0
                 continue
             req = s.req
-            if s.prompt_left > 0:  # prefill phase: feed the next prompt token
-                tokens[i, 0] = req.prompt[len(req.prompt) - s.prompt_left]
+            if s.prompt_left > 0:  # prefill phase: feed the next seq token
+                tokens[i, 0] = s.seq[len(s.seq) - s.prompt_left]
             else:  # decode phase: feed the last generated token
                 tokens[i, 0] = req.output[-1]
             index[i] = s.pos
+        fail = self.chaos.wants_failure(now) if self.chaos else False
         if self.paged:
             for i, s in enumerate(self.slots):
                 if not s.free:
@@ -342,60 +669,103 @@ class ContinuousBatcher:
             w = self._active_width()
             table = jnp.asarray(self.pool.page_table(self.B, w))
             lengths = jnp.asarray(self.pool.lengths(self.B))
-            logits, self.cache = self._step(
-                self.params, jnp.asarray(tokens), self.cache,
-                jnp.asarray(index), table, lengths,
-            )
+            (logits, self.cache), health.retries = self._device_step(
+                (self.params, jnp.asarray(tokens), self.cache,
+                 jnp.asarray(index), table, lengths), fail)
         else:
-            logits, self.cache = self._step(
-                self.params, jnp.asarray(tokens), self.cache, jnp.asarray(index)
-            )
+            (logits, self.cache), health.retries = self._device_step(
+                (self.params, jnp.asarray(tokens), self.cache,
+                 jnp.asarray(index)), fail)
         next_tok = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
+        finite = None
+        if self.guard:
+            last = np.array(logits[:, -1])  # copy: poisoning writes into it
+            if self.chaos is not None:
+                victim = self.chaos.poison_slot(
+                    now, [i for i, s in enumerate(self.slots) if not s.free])
+                if victim is not None:
+                    last[victim] = np.nan  # the fault the guard must catch
+            finite = np.isfinite(last).all(axis=-1)
         for i, s in enumerate(self.slots):
             if s.free:
                 continue
             req = s.req
             s.pos += 1
+            if finite is not None and not finite[i]:
+                # quarantine: ONLY this slot fails; its pages are released
+                # and nothing it produced this step is kept or published
+                health.poisoned.append(req.rid)
+                req.log_event("quarantined", now)
+                self._finish_slot(i, FinishReason.FAILED)
+                continue
             # a slot that exhausted its page reservation (an over-long
             # prompt) is truncated and evicted — capacity exhaustion must
             # degrade, never crash the serving loop.  The dense rectangle
-            # has the same cap at max_len (checked with the finish tests
-            # below); the paged cap can be lower when the reservation was
-            # clipped to min(max_len, prompt + max_new).
+            # has the same cap at max_len; the paged cap can be lower when
+            # the reservation was clipped to min(max_len, prompt + max_new).
             out_of_room = self.paged and s.pos >= len(
                 self.pool.owned(i)) * self.page_size
             if s.prompt_left > 1:
                 s.prompt_left -= 1  # still prefilling; ignore the logit
                 if out_of_room:
-                    req.done = True
-                    self.finished[req.rid] = req
-                    s.req = None
-                    self.pool.release(i)
+                    self._finish_slot(i, FinishReason.TRUNCATED)
                 continue
             if s.prompt_left == 1:
-                s.prompt_left = 0  # prompt done: this logit starts generation
+                s.prompt_left = 0  # prompt done: this logit starts (or, on
+                req.state = RequestState.DECODE  # resume, continues) decode
                 if self.prefix is not None and not out_of_room:
-                    # the prompt's full pages are now immutable (decode
+                    # the sequence's full pages are now immutable (decode
                     # continues in later pages): publish them for reuse.
                     # Pages the slot itself mounted shared dedup inside the
                     # index (existing nodes win, no double pin).
-                    self.prefix.insert(req.prompt, self.pool.owned(i))
+                    self.prefix.insert(s.seq, self.pool.owned(i))
             req.output.append(int(next_tok[i]))
+            if req.first_token_at is None:
+                req.first_token_at = now
+                req.log_event("first_token", now)
             hit_eos = req.eos_id is not None and req.output[-1] == req.eos_id
-            if (len(req.output) >= req.max_new or hit_eos
-                    or s.pos >= self.max_len or out_of_room):
-                req.done = True
-                self.finished[req.rid] = req
-                s.req = None
-                if self.paged:
-                    self.pool.release(i)  # O(1); no zeroing
-                else:
-                    self._reset_slot_cache(i)
+            if hit_eos:
+                self._finish_slot(i, FinishReason.EOS)
+            elif len(req.output) >= req.max_new:
+                self._finish_slot(i, FinishReason.MAX_NEW)
+            elif s.pos >= self.max_len:
+                self._finish_slot(i, FinishReason.MAX_LEN)
+            elif out_of_room:
+                self._finish_slot(i, FinishReason.TRUNCATED)
+        self._flush_health(health, t0, ran_device_step=True)
         return self.active
 
+    def _flush_health(self, health: StepHealth, t0: float,
+                      ran_device_step: bool):
+        dt = time.perf_counter() - t0
+        if self.chaos is not None:
+            dt += self.chaos.latency_spike(health.step)
+        health.dt_s = dt
+        if ran_device_step:
+            health.straggler = self.watchdog.observe(health.step, dt)
+        self.health.append(health)
+        self.steps_run += 1
+
     def run_to_completion(self, max_steps: int = 10_000) -> Dict[int, Request]:
+        """Drain the queue.  Hitting max_steps is an overload deadline, not
+        a silent drop: still-running and still-queued requests terminate
+        with "deadline" (a preempted request that never got re-admitted
+        with "preempted_requeued"), so every submitted request appears in
+        the returned dict with a typed finish_reason."""
         steps = 0
         while (self.queue or self.active) and steps < max_steps:
             self.step()
             steps += 1
+        if self.queue or self.active:
+            for i, s in enumerate(self.slots):
+                if not s.free:
+                    self._finish_slot(i, FinishReason.DEADLINE)
+            while self.queue:
+                req = self.queue.popleft()
+                self._finalize(
+                    req,
+                    FinishReason.PREEMPTED_REQUEUED if req.preemptions
+                    else FinishReason.DEADLINE)
+        if self.chaos is not None:
+            self.chaos.end(self.pool)
         return self.finished

@@ -20,7 +20,7 @@ import math
 import time
 from typing import Any, Callable, Dict, List, Optional
 
-from ..checkpoint.manager import CheckpointManager
+from ..checkpoint.manager import CheckpointError, CheckpointManager
 
 
 class DeviceFailure(RuntimeError):
@@ -89,7 +89,8 @@ class TrainLoop:
         (params, opt_state, history dict)."""
         step = start_step
         restarts = 0
-        history: Dict[str, Any] = {"restarts": 0, "steps_run": 0, "stragglers": []}
+        history: Dict[str, Any] = {"restarts": 0, "steps_run": 0,
+                                   "stragglers": [], "ckpt_events": []}
         while step < total_steps:
             try:
                 data.seek(step)
@@ -116,8 +117,21 @@ class TrainLoop:
                         self.on_metrics(step, metrics)
                     step += 1
                     if step % self.checkpoint_every == 0 or step == total_steps:
-                        self.ckpt.save(step, {"params": params, "opt": opt_state,
-                                              "step": step})
+                        # an EARLIER async save's failure surfaces here as
+                        # CheckpointError; the run continues (a lost
+                        # snapshot widens the replay window, it is not a
+                        # training failure) but the event is typed+logged,
+                        # and the save that raised it is retried once.
+                        try:
+                            self.ckpt.save(step, {"params": params,
+                                                  "opt": opt_state,
+                                                  "step": step})
+                        except CheckpointError as e:
+                            history["ckpt_events"].append(
+                                ("save_failed", e.step, repr(e.cause)))
+                            self.ckpt.save(step, {"params": params,
+                                                  "opt": opt_state,
+                                                  "step": step})
             except DeviceFailure:
                 restarts += 1
                 history["restarts"] = restarts
@@ -125,8 +139,11 @@ class TrainLoop:
                     raise
                 try:
                     self.ckpt.wait()  # an async save may still be in flight
-                except Exception:  # noqa: BLE001 — a failed save can't block recovery
-                    pass
+                except CheckpointError as e:
+                    # a failed save can't block recovery — but it is no
+                    # longer swallowed: the typed event lands in history
+                    history["ckpt_events"].append(
+                        ("save_failed", e.step, repr(e.cause)))
                 latest = self.ckpt.latest_step()
                 if latest is None:
                     step = start_step  # no checkpoint yet: cold restart
@@ -137,5 +154,9 @@ class TrainLoop:
                 params, opt_state = state["params"], state["opt"]
                 step = latest
         history["stragglers"] = list(self.straggler.flagged)
-        self.ckpt.wait()
+        try:
+            self.ckpt.wait()
+        except CheckpointError as e:
+            history["ckpt_events"].append(
+                ("save_failed", e.step, repr(e.cause)))
         return params, opt_state, history

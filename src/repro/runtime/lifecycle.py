@@ -1,0 +1,293 @@
+"""Serving request lifecycle + serving-side chaos injection.
+
+The paper's argument is *sustained* utilization from reuse of what is
+already resident; a serving runtime only delivers that if overload,
+stragglers, and poisoned steps degrade gracefully instead of crashing the
+batch or silently truncating requests.  This module holds the vocabulary
+the fault-aware `ContinuousBatcher` (runtime/batcher) speaks:
+
+  - `Request` with a full lifecycle: priority, step-denominated TTFT /
+    total deadlines, cancellation, a per-request typed event log, and a
+    typed `finish_reason` replacing the old bare ``done`` flag.  Every
+    submitted request terminates with exactly one reason — "absent from
+    finished" is no longer a possible outcome.
+  - `ChaosInjector`: step-level fault injection for the SERVING loop
+    (transient DeviceFailure, non-finite-logit poisoning of one slot,
+    simulated pool pressure that seizes free pages for a few steps,
+    synthetic latency spikes for the watchdog).  The schedule for step t
+    is a pure function of (seed, t) — independent rng streams per step —
+    so a fault-free and an injected run decode *bitwise identical* tokens
+    for every request the faults did not touch, which is what the chaos
+    suite asserts (tests/test_lifecycle.py).
+  - `StepHealth`: the per-step watchdog record (wall time, queue depth,
+    pool headroom, retries, quarantines, preemptions, straggler flag)
+    surfaced through ``serve --chaos`` and benchmarks/chaos_bench.py.
+
+Deadlines are denominated in BATCHER STEPS, not wall seconds: the step is
+the scheduler's clock tick, and a step-based budget makes expiry exactly
+reproducible in tests (a wall-clock policy can be layered on top by the
+caller converting measured step time into a step budget).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from .fault import DeviceFailure
+from .kv_pages import PagePool
+
+
+class FinishReason:
+    """Typed terminal states.  Exactly one is set on every request that
+    enters the batcher, including the ones the old code dropped on the
+    floor (over-long prompts, requests still queued at max_steps)."""
+
+    EOS = "eos"                      # hit the request's eos_id
+    MAX_NEW = "max_new"              # generated max_new tokens
+    MAX_LEN = "max_len"              # ran into the cache's max_len
+    TRUNCATED = "truncated"          # page reservation exhausted mid-prefill
+    DEADLINE = "deadline"            # step deadline expired / load-shed
+    PREEMPTED_REQUEUED = "preempted_requeued"  # preempted, never re-admitted
+    FAILED = "failed"                # quarantined (non-finite logits)
+    CANCELLED = "cancelled"          # caller cancelled
+
+    ALL = frozenset({EOS, MAX_NEW, MAX_LEN, TRUNCATED, DEADLINE,
+                     PREEMPTED_REQUEUED, FAILED, CANCELLED})
+    # reasons that mean "the request delivered its tokens" (goodput)
+    COMPLETED = frozenset({EOS, MAX_NEW, MAX_LEN})
+
+
+class RequestState:
+    QUEUED = "queued"
+    PREFILL = "prefill"
+    DECODE = "decode"
+    PREEMPTED = "preempted"
+    FINISHED = "finished"
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (L,) int32
+    max_new: int
+    eos_id: Optional[int] = None
+    priority: int = 0                      # higher = more important
+    deadline_steps: Optional[int] = None   # total budget, steps from submit
+    ttft_steps: Optional[int] = None       # first-token budget from submit
+    # filled by the batcher:
+    output: List[int] = dataclasses.field(default_factory=list)
+    finish_reason: Optional[str] = None
+    state: str = RequestState.QUEUED
+    submitted_at: int = -1
+    first_token_at: Optional[int] = None
+    finished_at: Optional[int] = None
+    preemptions: int = 0
+    events: List[Tuple[str, int]] = dataclasses.field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        """Back-compat view of the typed reason (the old bare flag)."""
+        return self.finish_reason is not None
+
+    def sequence(self) -> np.ndarray:
+        """prompt + already-generated tokens: the token stream a resumed
+        (preempted) request must have resident in cache.  For a fresh
+        request this is just the prompt."""
+        if not self.output:
+            return np.asarray(self.prompt, np.int32)
+        return np.concatenate(
+            [np.asarray(self.prompt, np.int32),
+             np.asarray(self.output, np.int32)])
+
+    def log_event(self, kind: str, step: int) -> None:
+        self.events.append((kind, step))
+
+    def remaining_new(self) -> int:
+        return max(self.max_new - len(self.output), 0)
+
+
+@dataclasses.dataclass
+class RetryPolicy:
+    """Retry-with-backoff for transient step failures.  The device step is
+    functional (inputs -> (logits, new cache)); a failed attempt left no
+    partial state, so a retry is a pure recompute."""
+
+    max_retries: int = 3
+    backoff_s: float = 0.0  # base; attempt k sleeps backoff * 2**(k-1)
+
+    def delay(self, attempt: int) -> float:
+        return self.backoff_s * (2 ** max(attempt - 1, 0))
+
+
+@dataclasses.dataclass
+class StepHealth:
+    """One watchdog record per batcher step."""
+
+    step: int
+    dt_s: float = 0.0
+    active: int = 0
+    queued: int = 0
+    pages_free: Optional[int] = None
+    retries: int = 0
+    poisoned: List[int] = dataclasses.field(default_factory=list)   # rids
+    preempted: List[int] = dataclasses.field(default_factory=list)  # rids
+    shed: List[int] = dataclasses.field(default_factory=list)       # rids
+    straggler: bool = False
+    chaos: List[str] = dataclasses.field(default_factory=list)
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class ChaosEvent:
+    step: int
+    kind: str
+    detail: str = ""
+
+
+@dataclasses.dataclass
+class ChaosConfig:
+    """Fault mix.  Rates draw from per-(seed, step) rng streams; the
+    ``*_at_steps`` schedules are the deterministic variant the exactness
+    tests use (rate and schedule compose with `or`)."""
+
+    seed: int = 0
+    step_failure_rate: float = 0.0     # P(transient DeviceFailure per step)
+    fail_at_steps: tuple = ()
+    poison_rate: float = 0.0           # P(one slot's logits go non-finite)
+    poison_at_steps: tuple = ()
+    pool_pressure_rate: float = 0.0    # P(start a page-seizure episode)
+    pressure_at_steps: tuple = ()
+    pool_pressure_pages: int = 0       # pages seized per episode
+    pool_pressure_steps: int = 3       # episode length in steps
+    latency_spike_rate: float = 0.0    # P(synthetic watchdog spike)
+    latency_spike_s: float = 0.25      # spike size fed to the detector
+
+
+class ChaosInjector:
+    """Deterministic, step-keyed fault injection for `ContinuousBatcher`.
+
+    Every decision for step t comes from `default_rng([seed, t, stream])`,
+    so the schedule does not depend on how many draws earlier steps made —
+    two runs with the same seed inject the same faults at the same steps,
+    and requests the faults never touch decode identical tokens (greedy
+    decode is exact; slot isolation is already asserted by the batcher
+    suite).
+
+    Pool pressure seizes `pool_pressure_pages` pages under a sentinel slot
+    id for `pool_pressure_steps` steps — from the scheduler's point of
+    view this is indistinguishable from real exhaustion, so it drives the
+    preemption/recompute path end to end.
+    """
+
+    PRESSURE_SLOT = -99  # sentinel pool slot (never rendered into tables)
+
+    def __init__(self, config: ChaosConfig):
+        self.cfg = config
+        self.events: List[ChaosEvent] = []
+        self._pressure_until: Optional[int] = None
+        # counters for health / bench reporting
+        self.failures_injected = 0
+        self.poisons_injected = 0
+        self.pressure_episodes = 0
+        self.spikes_injected = 0
+
+    def _rng(self, step: int, stream: int) -> np.random.Generator:
+        return np.random.default_rng([self.cfg.seed, int(step), stream])
+
+    # ---- per-step decisions ----
+
+    def wants_failure(self, step: int) -> bool:
+        if step in self.cfg.fail_at_steps:
+            hit = True
+        elif self.cfg.step_failure_rate > 0:
+            hit = bool(self._rng(step, 0).random()
+                       < self.cfg.step_failure_rate)
+        else:
+            hit = False
+        if hit:
+            self.failures_injected += 1
+            self.events.append(ChaosEvent(step, "step_failure"))
+        return hit
+
+    def make_failure(self, step: int) -> DeviceFailure:
+        return DeviceFailure(f"chaos: injected step failure at step {step}")
+
+    def poison_slot(self, step: int, active_slots: List[int]) -> Optional[int]:
+        """Pick one active slot whose logits come back non-finite this
+        step (None = no poisoning).  The victim choice is part of the
+        (seed, step) schedule."""
+        if not active_slots:
+            return None
+        if step in self.cfg.poison_at_steps:
+            pass
+        elif not (self.cfg.poison_rate > 0
+                  and self._rng(step, 1).random() < self.cfg.poison_rate):
+            return None
+        victim = int(active_slots[
+            int(self._rng(step, 2).integers(len(active_slots)))])
+        self.poisons_injected += 1
+        self.events.append(ChaosEvent(step, "poison", f"slot={victim}"))
+        return victim
+
+    def latency_spike(self, step: int) -> float:
+        """Synthetic seconds to add to the watchdog's observed step time
+        (no real sleep: the detector sees the spike, the suite stays
+        fast)."""
+        if (self.cfg.latency_spike_rate > 0
+                and self._rng(step, 3).random() < self.cfg.latency_spike_rate):
+            self.spikes_injected += 1
+            self.events.append(ChaosEvent(step, "latency_spike",
+                                          f"{self.cfg.latency_spike_s}s"))
+            return self.cfg.latency_spike_s
+        return 0.0
+
+    # ---- pool-pressure episodes ----
+
+    def begin_step(self, step: int, pool: Optional[PagePool]) -> None:
+        """Advance pressure-episode state.  Called at the top of every
+        batcher step, before admission, so a fresh episode back-pressures
+        (or preempts) THIS step's admissions."""
+        if pool is None:
+            return
+        if self._pressure_until is not None and step >= self._pressure_until:
+            pool.release(self.PRESSURE_SLOT)
+            self._pressure_until = None
+            self.events.append(ChaosEvent(step, "pool_pressure_off"))
+        if self._pressure_until is not None:
+            return
+        want = step in self.cfg.pressure_at_steps or (
+            self.cfg.pool_pressure_rate > 0
+            and self._rng(step, 4).random() < self.cfg.pool_pressure_rate)
+        if not (want and self.cfg.pool_pressure_pages > 0):
+            return
+        tokens = self.cfg.pool_pressure_pages * pool.page_size
+        if pool.try_reserve(self.PRESSURE_SLOT, tokens) is None:
+            self.events.append(ChaosEvent(step, "pool_pressure_skipped",
+                                          "pool already exhausted"))
+            return
+        self._pressure_until = step + self.cfg.pool_pressure_steps
+        self.pressure_episodes += 1
+        self.events.append(ChaosEvent(
+            step, "pool_pressure_on",
+            f"{self.cfg.pool_pressure_pages} pages for "
+            f"{self.cfg.pool_pressure_steps} steps"))
+
+    def end(self, pool: Optional[PagePool]) -> None:
+        """Release any held pressure reservation (end of a serving run)."""
+        if pool is not None and self._pressure_until is not None:
+            pool.release(self.PRESSURE_SLOT)
+            self._pressure_until = None
+
+    def summary(self) -> dict:
+        return {
+            "failures_injected": self.failures_injected,
+            "poisons_injected": self.poisons_injected,
+            "pressure_episodes": self.pressure_episodes,
+            "spikes_injected": self.spikes_injected,
+            "events": len(self.events),
+        }

@@ -70,9 +70,14 @@ class PrefixHit:
 class PrefixIndex:
     """Token-chunk trie -> physical page ids, with LRU eviction."""
 
-    def __init__(self, pool: PagePool):
+    def __init__(self, pool: PagePool,
+                 max_pinned_pages: Optional[int] = None):
         self.pool = pool
         self.page_size = pool.page_size
+        # budget cap on index pins: a hot index can otherwise pin the pool
+        # into admission starvation (every entry holds one page reference).
+        # None = uncapped (bounded only by `evict` under pool pressure).
+        self.max_pinned_pages = max_pinned_pages
         self._roots: Dict[Tuple[int, ...], _Node] = {}
         self._tick = 0
         # counters (serve/bench reporting)
@@ -143,14 +148,29 @@ class PrefixIndex:
         slot's page list, in order).  Existing nodes are kept — a chunk
         already indexed stays bound to its original page (first writer
         wins); new nodes pin their page with one pool reference.  Returns
-        the number of new entries."""
+        the number of new entries.
+
+        When ``max_pinned_pages`` is set, inserting past the cap first
+        drops LRU leaf entries (never this insert's own pages); if nothing
+        is evictable the insert stops early — the prefix up to that point
+        is still indexed, deeper pages simply are not pinned."""
         self._tick += 1
         added = 0
         node: Optional[_Node] = None
         level = self._roots
+        # protect this insert's own pages AND the nodes already walked on
+        # its path (evicting a just-traversed leaf would orphan the
+        # subtree about to attach under it)
+        own = set(int(p) for p in pages)
         for i, chunk in enumerate(self._chunks(prompt)):
             nxt = level.get(chunk)
             if nxt is None:
+                if (self.max_pinned_pages is not None
+                        and self.entries >= self.max_pinned_pages
+                        and self.evict(self.entries + 1
+                                       - self.max_pinned_pages,
+                                       exclude=own) == 0):
+                    break
                 page = int(pages[i])
                 self.pool.incref(page)  # the index's pin
                 nxt = _Node(chunk=chunk, page=page, parent=node)
@@ -158,6 +178,7 @@ class PrefixIndex:
                 self.entries += 1
                 added += 1
             nxt.last_used = self._tick
+            own.add(nxt.page)
             node, level = nxt, nxt.children
         return added
 
@@ -215,4 +236,6 @@ class PrefixIndex:
             "hit_rate": self.hits / total if total else 0.0,
             "tokens_saved": self.tokens_saved,
             "evicted_pages": self.evicted_pages,
+            "pinned_pages": self.entries,  # one pool pin per entry
+            "max_pinned_pages": self.max_pinned_pages,
         }

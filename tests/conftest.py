@@ -31,6 +31,10 @@ def pytest_configure(config):
     config.addinivalue_line(
         "markers", "slow: multi-second test (system/subprocess/property-heavy);"
         " deselect with -m 'not slow'")
+    config.addinivalue_line(
+        "markers", "chaos: randomized fault-injection sweep (seed from "
+        "CHAOS_SEED env, rotated in CI, printed on failure); the "
+        "deterministic chaos tests are unmarked and stay tier-1")
 
 
 def _examples_cap() -> int:

@@ -1,11 +1,15 @@
-"""Checkpoint manager: roundtrip, async, atomicity, GC, elastic restore."""
+"""Checkpoint manager: roundtrip, async double-buffering, atomicity, GC,
+typed failure surfacing, elastic restore."""
+
+import threading
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.manager import CheckpointError, CheckpointManager
 
 
 def _tree(key=0):
@@ -36,6 +40,77 @@ def test_async_save_then_wait(tmp_path):
     mgr.save(2, _tree(2))  # implicitly waits for save(1)
     mgr.wait()
     assert sorted(mgr.all_steps()) == [1, 2]
+
+
+def test_double_buffered_saves_do_not_stall(tmp_path):
+    """Two saves may be in flight at once: the second save() must return
+    while the first write is still running (the old single-buffer manager
+    joined save(1) inside save(2))."""
+    mgr = CheckpointManager(tmp_path, max_inflight=2)
+    gate = threading.Event()
+    real = mgr._write_leaves
+
+    def gated(tmp, leaves):
+        assert gate.wait(timeout=30), "gate never opened"
+        real(tmp, leaves)
+
+    mgr._write_leaves = gated
+    t0 = time.perf_counter()
+    mgr.save(1, _tree(1))
+    mgr.save(2, _tree(2))  # second staging buffer: must not join save(1)
+    assert time.perf_counter() - t0 < 5.0
+    assert mgr.inflight_saves == 2
+    gate.set()
+    mgr.wait()
+    assert mgr.inflight_saves == 0
+    assert sorted(mgr.all_steps()) == [1, 2]
+    assert mgr.latest_step() == 2
+
+
+def test_failed_async_save_surfaces_on_wait(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    real = mgr._write_leaves
+
+    def failing(tmp, leaves):
+        raise OSError("disk on fire")
+
+    mgr._write_leaves = failing
+    mgr.save(1, _tree(1))
+    with pytest.raises(CheckpointError) as ei:
+        mgr.wait()
+    assert ei.value.step == 1
+    assert isinstance(ei.value.cause, OSError)
+    assert mgr.latest_step() is None  # the failed step was never published
+    # the manager stays usable once the error has been consumed
+    mgr._write_leaves = real
+    mgr.save(2, _tree(2))
+    mgr.wait()
+    assert mgr.latest_step() == 2
+
+
+def test_failed_async_save_surfaces_on_next_save(tmp_path):
+    """The fault.py path: a background failure is re-raised from the NEXT
+    save() call, before the new save starts, never from the thread."""
+    mgr = CheckpointManager(tmp_path)
+
+    def failing(tmp, leaves):
+        raise OSError("nope")
+
+    mgr._write_leaves = failing
+    mgr.save(1, _tree(1))
+    for t in list(mgr._inflight):  # let the failure land
+        t.join()
+    with pytest.raises(CheckpointError):
+        mgr.save(2, _tree(2))
+    assert mgr.all_steps() == []  # the raising call did not start a write
+
+
+def test_latest_pointer_monotonic_under_out_of_order_saves(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(5, _tree(5), blocking=True)
+    mgr.save(3, _tree(3), blocking=True)  # an older step landing late
+    assert mgr.latest_step() == 5
+    assert sorted(mgr.all_steps()) == [3, 5]
 
 
 def test_gc_keeps_last_k(tmp_path):

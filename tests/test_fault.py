@@ -128,6 +128,39 @@ def test_elastic_rescale(tmp_path):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+def test_failed_ckpt_save_logged_as_typed_event(setup, tmp_path):
+    """A failed async checkpoint write must not be swallowed: the loop
+    finishes, and history["ckpt_events"] carries the typed
+    ("save_failed", step, cause) record."""
+    cfg, params, opt_state, _ = setup
+
+    def ok_step(params, opt_state, batch):
+        return params, opt_state, {"loss": jnp.float32(1.0)}
+
+    ckpt = CheckpointManager(tmp_path)
+    real = ckpt._write_leaves
+    state = {"failed": False}
+
+    def fail_once(tmp, leaves):
+        if not state["failed"]:
+            state["failed"] = True
+            raise OSError("boom: transient storage outage")
+        real(tmp, leaves)
+
+    ckpt._write_leaves = fail_once
+    data = SyntheticLM(cfg, seq_len=16, global_batch=2)
+    loop = TrainLoop(train_step=ok_step, ckpt=ckpt, checkpoint_every=2)
+    _, _, hist = loop.run(params, opt_state, data, total_steps=6)
+    events = hist["ckpt_events"]
+    assert len(events) == 1
+    kind, step, cause = events[0]
+    assert kind == "save_failed"
+    assert step == 2  # the first save is the one that was failed
+    assert "boom" in cause
+    # the run itself is unaffected; later saves (incl. any retry) published
+    assert ckpt.latest_step() == 6
+
+
 def test_nan_loss_raises(setup, tmp_path):
     """A diverged run surfaces immediately instead of training on NaNs."""
     from repro.runtime.fault import NanLossError

@@ -1,0 +1,474 @@
+"""Request lifecycle + chaos: typed finish reasons, deadlines, cancel,
+preempt-with-page-backed-recompute exactness, retry/quarantine recovery,
+and the seeded randomized fault sweep.
+
+Greedy decode is exact, so the recovery paths have bitwise ground truth:
+a request the faults never touched must decode the SAME tokens as in a
+fault-free run, and a preempted-then-resumed request must finish with
+exactly the output it would have produced uninterrupted."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.runtime.batcher import ContinuousBatcher, Request
+from repro.runtime.fault import DeviceFailure
+from repro.runtime.kv_pages import PagePool
+from repro.runtime.lifecycle import (
+    ChaosConfig, ChaosInjector, FinishReason, RetryPolicy,
+)
+from repro.runtime.prefix_cache import PrefixIndex
+
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    cfg = get_config("llama3.2-1b-smoke")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _isolated_decode(model, params, prompt, max_new, max_len):
+    """Reference: one request alone in a batch-1 dense loop."""
+    cache = model.make_cache(1, max_len, mode="init", dtype=jnp.float32)
+    out, pos = [], 0
+    for t in prompt:
+        logits, cache = model.decode_step(
+            params, jnp.asarray([[t]], jnp.int32), cache, pos)
+        pos += 1
+    for _ in range(max_new):
+        tok = int(jnp.argmax(logits[0, -1]))
+        out.append(tok)
+        logits, cache = model.decode_step(
+            params, jnp.asarray([[tok]], jnp.int32), cache, pos)
+        pos += 1
+    return out
+
+
+def _prompt(cfg, n, seed=0):
+    return np.random.default_rng(seed).integers(
+        0, cfg.vocab, n).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# typed finish reasons
+# ---------------------------------------------------------------------------
+
+def test_finish_reason_max_new(model_and_params):
+    cfg, model, params = model_and_params
+    b = ContinuousBatcher(model, params, batch_slots=1, max_len=8)
+    b.submit(Request(rid=0, prompt=_prompt(cfg, 2), max_new=3))
+    fin = b.run_to_completion()
+    assert fin[0].finish_reason == FinishReason.MAX_NEW
+    assert fin[0].done  # back-compat view of the typed reason
+    assert len(fin[0].output) == 3
+    assert fin[0].first_token_at is not None
+    assert fin[0].finished_at >= fin[0].first_token_at
+
+
+def test_finish_reason_eos(model_and_params):
+    cfg, model, params = model_and_params
+    p = _prompt(cfg, 3, seed=1)
+    probe = _isolated_decode(model, params, p, 1, 8)
+    b = ContinuousBatcher(model, params, batch_slots=1, max_len=8)
+    b.submit(Request(rid=0, prompt=p, max_new=4, eos_id=probe[0]))
+    fin = b.run_to_completion()
+    assert fin[0].finish_reason == FinishReason.EOS
+    assert fin[0].output == probe
+
+
+def test_finish_reason_max_len(model_and_params):
+    cfg, model, params = model_and_params
+    # cache rows run out (4 prompt + 2 generated) before max_new=10 does
+    b = ContinuousBatcher(model, params, batch_slots=1, max_len=6)
+    b.submit(Request(rid=0, prompt=_prompt(cfg, 4), max_new=10))
+    fin = b.run_to_completion()
+    assert fin[0].finish_reason == FinishReason.MAX_LEN
+    # rows 0..5 hold prompt(4) + 2 fed tokens; the 3rd needs no row
+    assert len(fin[0].output) == 3
+
+
+def test_overlong_prompt_truncated_reason(model_and_params):
+    """The old path finished an over-long prompt with indistinguishable
+    done=True; it must now say "truncated" (and still free its pages)."""
+    cfg, model, params = model_and_params
+    b = ContinuousBatcher(model, params, batch_slots=1, max_len=8,
+                          paged=True, page_size=4, num_pages=2)
+    b.submit(Request(rid=0, prompt=_prompt(cfg, 12), max_new=4))
+    fin = b.run_to_completion()
+    assert fin[0].finish_reason == FinishReason.TRUNCATED
+    assert fin[0].output == []
+    assert b.pool.pages_free == 2  # reservation fully returned
+
+
+def test_max_steps_marks_deadline_not_absent(model_and_params):
+    """run_to_completion hitting max_steps used to silently drop live and
+    queued requests from the result; both must now carry "deadline"."""
+    cfg, model, params = model_and_params
+    b = ContinuousBatcher(model, params, batch_slots=1, max_len=16)
+    b.submit(Request(rid=0, prompt=_prompt(cfg, 2), max_new=10))
+    b.submit(Request(rid=1, prompt=_prompt(cfg, 2, seed=2), max_new=2))
+    fin = b.run_to_completion(max_steps=3)
+    assert set(fin) == {0, 1}
+    assert fin[0].finish_reason == FinishReason.DEADLINE  # was running
+    assert fin[1].finish_reason == FinishReason.DEADLINE  # never admitted
+    assert fin[1].output == []
+
+
+def test_preempted_never_readmitted_reason(model_and_params):
+    cfg, model, params = model_and_params
+    b = ContinuousBatcher(model, params, batch_slots=1, max_len=16,
+                          paged=True, page_size=4, num_pages=4)
+    b.submit(Request(rid=0, prompt=_prompt(cfg, 4), max_new=8))
+    for _ in range(6):
+        b.step()
+    assert b.preempt(0)
+    fin = b.run_to_completion(max_steps=0)
+    assert fin[0].finish_reason == FinishReason.PREEMPTED_REQUEUED
+    assert fin[0].preemptions == 1
+
+
+# ---------------------------------------------------------------------------
+# deadlines / shedding / cancellation
+# ---------------------------------------------------------------------------
+
+def test_deadline_expires_during_prefill(model_and_params):
+    cfg, model, params = model_and_params
+    b = ContinuousBatcher(model, params, batch_slots=1, max_len=16)
+    b.submit(Request(rid=0, prompt=_prompt(cfg, 6), max_new=4,
+                     deadline_steps=3))
+    fin = b.run_to_completion()
+    assert fin[0].finish_reason == FinishReason.DEADLINE
+    assert fin[0].output == []  # expired before the first token
+    assert fin[0].finished_at == 3
+    assert ("expired", 3) in fin[0].events
+
+
+def test_deadline_expires_during_decode(model_and_params):
+    cfg, model, params = model_and_params
+    b = ContinuousBatcher(model, params, batch_slots=1, max_len=16)
+    b.submit(Request(rid=0, prompt=_prompt(cfg, 2), max_new=10,
+                     deadline_steps=6))
+    fin = b.run_to_completion()
+    assert fin[0].finish_reason == FinishReason.DEADLINE
+    # partial output delivered before expiry: prompt takes 2 steps, then
+    # one token per step until the budget runs out at step 6
+    assert len(fin[0].output) == 5
+    want = _isolated_decode(model, params, fin[0].prompt, 5, 16)
+    assert fin[0].output == want  # the partial tokens are still exact
+
+
+def test_ttft_deadline_expires_in_queue(model_and_params):
+    cfg, model, params = model_and_params
+    b = ContinuousBatcher(model, params, batch_slots=1, max_len=16)
+    b.submit(Request(rid=0, prompt=_prompt(cfg, 2), max_new=8))
+    b.submit(Request(rid=1, prompt=_prompt(cfg, 2, seed=2), max_new=2,
+                     ttft_steps=2))
+    fin = b.run_to_completion()
+    assert fin[0].finish_reason == FinishReason.MAX_NEW
+    assert fin[1].finish_reason == FinishReason.DEADLINE
+    assert fin[1].output == []
+
+
+def test_load_shed_hopeless_queued_request(model_and_params):
+    """A request whose remaining budget can no longer cover even an
+    optimistic estimate is shed FROM THE QUEUE ("shed" event), while the
+    next-in-line request is admitted optimistically, not shed."""
+    cfg, model, params = model_and_params
+    b = ContinuousBatcher(model, params, batch_slots=1, max_len=16)
+    b.submit(Request(rid=0, prompt=_prompt(cfg, 2), max_new=8))
+    # est = 1 prompt step + 4 decode = 5; feasible at step 0, hopeless
+    # (waited 1 + 5 > 5) one step later, long before expiry at step 5
+    b.submit(Request(rid=1, prompt=_prompt(cfg, 2, seed=2), max_new=4,
+                     deadline_steps=5))
+    fin = b.run_to_completion()
+    assert fin[1].finish_reason == FinishReason.DEADLINE
+    assert any(kind == "shed" for kind, _ in fin[1].events)
+    assert fin[1].finished_at < 5  # shed early, not expiry at the deadline
+
+
+def test_cancel_queued_and_running(model_and_params):
+    cfg, model, params = model_and_params
+    b = ContinuousBatcher(model, params, batch_slots=1, max_len=16)
+    b.submit(Request(rid=0, prompt=_prompt(cfg, 2), max_new=8))
+    b.submit(Request(rid=1, prompt=_prompt(cfg, 2, seed=2), max_new=2))
+    for _ in range(4):
+        b.step()
+    assert b.cancel(1)       # still queued
+    assert b.cancel(0)       # running
+    assert not b.cancel(99)  # unknown rid
+    b.submit(Request(rid=2, prompt=_prompt(cfg, 2, seed=3), max_new=2))
+    fin = b.run_to_completion()
+    assert fin[0].finish_reason == FinishReason.CANCELLED
+    assert fin[1].finish_reason == FinishReason.CANCELLED
+    assert fin[1].output == []
+    assert fin[2].finish_reason == FinishReason.MAX_NEW  # slot was freed
+
+
+# ---------------------------------------------------------------------------
+# preemption with page-backed recompute
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("preempt_after", [4, 2],
+                         ids=["page_boundary", "mid_page"])
+def test_preempt_resume_exact(model_and_params, preempt_after):
+    """Preempt mid-decode, resume, and the final output must be bitwise
+    identical to an uninterrupted run.  preempt_after=4 puts the preemption
+    point exactly on a page boundary (prompt 8 + 4 tokens = 3 full pages,
+    zero recompute beyond the interrupted step); preempt_after=2 lands
+    mid-page (2-token unshared tail recomputes)."""
+    cfg, model, params = model_and_params
+    p = _prompt(cfg, 8, seed=5)
+    want = _isolated_decode(model, params, p, 8, 16)
+    b = ContinuousBatcher(model, params, batch_slots=1, max_len=16,
+                          paged=True, page_size=4, num_pages=8,
+                          prefix_cache=True)
+    req = Request(rid=0, prompt=p, max_new=8)
+    b.submit(req)
+    while len(req.output) < preempt_after:
+        b.step()
+    assert b.preempt(0)
+    assert req.state == "queued" and req.preemptions == 1
+    fin = b.run_to_completion()
+    assert fin[0].finish_reason == FinishReason.MAX_NEW
+    assert fin[0].output == want
+    assert b.resumes_total == 1
+    # the resume actually remounted published pages instead of recomputing
+    # the whole sequence: at least the prompt's two full pages were matched
+    st = b.prefix_stats()
+    assert st["hits"] >= 1
+    assert st["tokens_saved"] >= 8
+
+
+def test_double_preemption_exact(model_and_params):
+    cfg, model, params = model_and_params
+    p = _prompt(cfg, 8, seed=6)
+    want = _isolated_decode(model, params, p, 8, 16)
+    b = ContinuousBatcher(model, params, batch_slots=1, max_len=16,
+                          paged=True, page_size=4, num_pages=8,
+                          prefix_cache=True)
+    req = Request(rid=0, prompt=p, max_new=8)
+    b.submit(req)
+    for after in (2, 5):
+        while len(req.output) < after:
+            b.step()
+        assert b.preempt(0)
+    fin = b.run_to_completion()
+    assert fin[0].finish_reason == FinishReason.MAX_NEW
+    assert fin[0].output == want
+    assert fin[0].preemptions == 2
+    assert b.resumes_total == 2
+
+
+def test_pool_exhaustion_preempts_lower_priority(model_and_params):
+    """The scheduler-driven path: a higher-priority admission that cannot
+    reserve pages preempts a strictly-lower-priority slot, runs, and the
+    victim resumes afterwards — both exact."""
+    cfg, model, params = model_and_params
+    pa, pb = _prompt(cfg, 4, seed=7), _prompt(cfg, 4, seed=8)
+    want_a = _isolated_decode(model, params, pa, 4, 12)
+    want_b = _isolated_decode(model, params, pb, 4, 12)
+    # each reservation needs 2 pages; the pool holds 3, so two cannot fly
+    b = ContinuousBatcher(model, params, batch_slots=2, max_len=12,
+                          paged=True, page_size=4, num_pages=3,
+                          prefix_cache=True)
+    ra = Request(rid=0, prompt=pa, max_new=4, priority=0)
+    b.submit(ra)
+    while len(ra.output) < 1:
+        b.step()
+    b.submit(Request(rid=1, prompt=pb, max_new=4, priority=1))
+    fin = b.run_to_completion()
+    assert fin[0].preemptions == 1          # evicted for the VIP request
+    assert fin[1].preemptions == 0
+    assert fin[1].finished_at < fin[0].finished_at
+    assert fin[0].output == want_a          # resumed exactly
+    assert fin[1].output == want_b
+    assert b.preemptions_total == 1 and b.resumes_total == 1
+
+
+def test_equal_priority_never_preempts(model_and_params):
+    """Back-pressure, not preemption, between equal-priority requests —
+    the pre-lifecycle scheduling behavior is preserved exactly."""
+    cfg, model, params = model_and_params
+    b = ContinuousBatcher(model, params, batch_slots=2, max_len=12,
+                          paged=True, page_size=4, num_pages=3)
+    for i in range(3):
+        b.submit(Request(rid=i, prompt=_prompt(cfg, 4, seed=i), max_new=4))
+    fin = b.run_to_completion()
+    assert b.preemptions_total == 0
+    assert all(r.finish_reason == FinishReason.MAX_NEW
+               for r in fin.values())
+
+
+# ---------------------------------------------------------------------------
+# chaos recovery: retries, quarantine, pool pressure
+# ---------------------------------------------------------------------------
+
+def test_transient_failures_retry_exact(model_and_params):
+    cfg, model, params = model_and_params
+    p = _prompt(cfg, 2, seed=9)
+    want = _isolated_decode(model, params, p, 6, 8)
+    chaos = ChaosInjector(ChaosConfig(fail_at_steps=(1, 3)))
+    b = ContinuousBatcher(model, params, batch_slots=1, max_len=8,
+                          chaos=chaos, retry=RetryPolicy(max_retries=2))
+    b.submit(Request(rid=0, prompt=p, max_new=6))
+    fin = b.run_to_completion()
+    assert fin[0].output == want            # retries recompute exactly
+    assert b.retries_total == 2
+    assert chaos.failures_injected == 2
+    assert [h.retries for h in b.health if h.retries] == [1, 1]
+
+
+def test_retry_exhaustion_reraises(model_and_params):
+    cfg, model, params = model_and_params
+    b = ContinuousBatcher(model, params, batch_slots=1, max_len=8,
+                          retry=RetryPolicy(max_retries=2))
+    b.submit(Request(rid=0, prompt=_prompt(cfg, 2), max_new=2))
+
+    def permafail(*a, **k):
+        raise DeviceFailure("permafail")
+
+    b._step = permafail
+    with pytest.raises(DeviceFailure):
+        b.step()
+    # initial try + 2 retries all failed before the loop gave up
+    assert b.retries_total == 3
+
+
+def test_poison_quarantines_only_victim(model_and_params):
+    """Non-finite logits fail exactly one slot; the other request's output
+    stays bitwise identical to a fault-free run."""
+    cfg, model, params = model_and_params
+    prompts = [_prompt(cfg, 2, seed=10), _prompt(cfg, 3, seed=11)]
+
+    def run(chaos):
+        b = ContinuousBatcher(model, params, batch_slots=2, max_len=12,
+                              chaos=chaos, nonfinite_guard=True)
+        for i, p in enumerate(prompts):
+            b.submit(Request(rid=i, prompt=p, max_new=6))
+        return b.run_to_completion()
+
+    ref = run(None)
+    assert all(r.finish_reason == FinishReason.MAX_NEW for r in ref.values())
+    fin = run(ChaosInjector(ChaosConfig(seed=3, poison_at_steps=(3,))))
+    failed = [r for r in fin.values()
+              if r.finish_reason == FinishReason.FAILED]
+    assert len(failed) == 1
+    assert ("quarantined", 3) in failed[0].events
+    survivor = next(r for r in fin.values()
+                    if r.finish_reason != FinishReason.FAILED)
+    assert survivor.finish_reason == FinishReason.MAX_NEW
+    assert survivor.output == ref[survivor.rid].output
+
+
+def test_pool_pressure_backpressures_then_recovers(model_and_params):
+    """A pressure episode seizes pages before admission; the request waits
+    it out, admits once the seizure lifts, and decodes exactly."""
+    cfg, model, params = model_and_params
+    p = _prompt(cfg, 4, seed=12)
+    want = _isolated_decode(model, params, p, 4, 8)
+    chaos = ChaosInjector(ChaosConfig(pressure_at_steps=(0,),
+                                      pool_pressure_pages=3,
+                                      pool_pressure_steps=3))
+    b = ContinuousBatcher(model, params, batch_slots=1, max_len=8,
+                          paged=True, page_size=4, num_pages=4, chaos=chaos)
+    req = Request(rid=0, prompt=p, max_new=4)
+    b.submit(req)
+    fin = b.run_to_completion()
+    assert chaos.pressure_episodes == 1
+    assert fin[0].finish_reason == FinishReason.MAX_NEW
+    assert fin[0].output == want
+    # admission was actually delayed by the episode (3 idle steps)
+    assert ("admitted", 3) in fin[0].events
+    assert b.pool.pages_free == 4  # seizure fully released
+
+
+def test_health_records_and_summary(model_and_params):
+    cfg, model, params = model_and_params
+    chaos = ChaosInjector(ChaosConfig(latency_spike_rate=1.0,
+                                      latency_spike_s=0.05))
+    b = ContinuousBatcher(model, params, batch_slots=1, max_len=8,
+                          chaos=chaos)
+    b.submit(Request(rid=0, prompt=_prompt(cfg, 2), max_new=3))
+    b.run_to_completion()
+    assert len(b.health) == b.steps_run
+    assert all(h.dt_s >= 0.05 for h in b.health)  # spikes fed the watchdog
+    hs = b.health_summary()
+    assert hs["finish_reasons"] == {FinishReason.MAX_NEW: 1}
+    assert hs["chaos"]["spikes_injected"] == b.steps_run
+    assert hs["retries"] == 0 and hs["preemptions"] == 0
+
+
+@pytest.mark.chaos
+def test_randomized_chaos_sweep(model_and_params):
+    """Seeded end-to-end sweep: random step failures, poisons, pressure
+    episodes, and latency spikes together.  CI rotates CHAOS_SEED per run;
+    any failure message carries the seed for local reproduction."""
+    cfg, model, params = model_and_params
+    seed = int(os.environ.get("CHAOS_SEED", "0"))
+    prompts = [_prompt(cfg, 6, seed=100 + i) for i in range(4)]
+
+    def run(chaos):
+        b = ContinuousBatcher(model, params, batch_slots=2, max_len=16,
+                              paged=True, page_size=4, num_pages=10,
+                              prefix_cache=True, chaos=chaos,
+                              retry=RetryPolicy(max_retries=4))
+        for i, p in enumerate(prompts):
+            b.submit(Request(rid=i, prompt=p, max_new=8, priority=i % 2))
+        return b.run_to_completion(max_steps=2000), b
+
+    ref, _ = run(None)
+    fin, b = run(ChaosInjector(ChaosConfig(
+        seed=seed, step_failure_rate=0.10, poison_rate=0.03,
+        latency_spike_rate=0.10, pool_pressure_rate=0.05,
+        pool_pressure_pages=2)))
+    ctx = f"CHAOS_SEED={seed} (reproduce with this env var)"
+    assert set(fin) == set(ref), ctx
+    for rid, r in fin.items():
+        assert r.finish_reason in FinishReason.ALL, f"{ctx}: rid {rid}"
+        if r.finish_reason in FinishReason.COMPLETED:
+            assert r.output == ref[rid].output, (
+                f"{ctx}: rid {rid} diverged from fault-free run")
+    # pool coherence: with every slot drained and the pressure seizure
+    # released, each allocated page is held by exactly one index pin
+    assert b.pool.pages_free == 10 - b.prefix.entries, ctx
+
+
+# ---------------------------------------------------------------------------
+# prefix-index pinned-page budget
+# ---------------------------------------------------------------------------
+
+def test_prefix_pinned_page_cap():
+    pool = PagePool(8, 4)
+    idx = PrefixIndex(pool, max_pinned_pages=2)
+    toks = np.arange(8, dtype=np.int32)
+    pages_a = pool.try_reserve(0, 8)
+    idx.insert(toks, pages_a)
+    assert idx.entries == 2
+    pool.release(0)
+    pages_b = pool.try_reserve(1, 8)
+    idx.insert(toks + 100, pages_b)
+    pool.release(1)
+    # LRU eviction at insert kept the pin count at the cap
+    assert idx.entries == 2
+    st = idx.stats()
+    assert st["pinned_pages"] == 2
+    assert st["max_pinned_pages"] == 2
+    assert st["evicted_pages"] == 2  # A's entries made room for B's
+    # B's chunks are the ones still indexed
+    assert idx.lookup(np.concatenate([toks + 100, [0]])).pages == [
+        int(p) for p in pages_b]
+
+
+def test_prefix_uncapped_stats_report_pins():
+    pool = PagePool(8, 4)
+    idx = PrefixIndex(pool)
+    pages = pool.try_reserve(0, 8)
+    idx.insert(np.arange(8, dtype=np.int32), pages)
+    st = idx.stats()
+    assert st["pinned_pages"] == 2
+    assert st["max_pinned_pages"] is None

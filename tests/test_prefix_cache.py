@@ -435,8 +435,10 @@ def test_admission_never_evicts_its_own_hit_pages(model_and_params):
         [prompt_a, rng.integers(0, cfg.vocab, 4)]).astype(np.int32)
     b.submit(Request(rid=1, prompt=prompt_b, max_new=4))
     fin = b.run_to_completion(max_steps=30)
-    assert 1 not in fin          # still queued, not crashed, not lost
-    assert len(b.queue) == 1
+    # not crashed, not silently lost: terminated with a typed reason at
+    # max_steps (the lifecycle contract replaced "absent from finished")
+    assert fin[1].finish_reason == "deadline"
+    assert fin[1].output == []   # never admitted, never decoded
     assert b.prefix.entries == 2  # the hit pages survived
 
 
