@@ -1,0 +1,278 @@
+"""Disaggregated-serving benchmark -> BENCH_serve.json.
+
+Streams a mixed-length trace (~1k requests: bucketed prompt lengths and
+generation budgets, ~1/3 sharing a system prompt) through the
+prefill-worker/decode-pool engine (runtime/disagg.DisaggEngine) under four
+profiles:
+
+  - ``fault_free``: 4 healthy prefill workers, shared-pool page-table
+    handoff — the ground-truth outputs every exactness check compares
+    against;
+  - ``worker_kill``: one prefill worker is chaos-killed mid-prefill (plus
+    a burst of handoff drops); the engine detects the corpse by heartbeat,
+    republishes its completed pages, and re-dispatches its request — the
+    acceptance bar is goodput >= 0.6x fault-free with untouched AND
+    killed-then-rerouted requests decoding bitwise-identical streams;
+  - ``degraded``: every worker is killed at step 0, so after detection the
+    decode pool absorbs chunked prefill at reduced admission — every
+    request must still complete with zero failed finish reasons;
+  - ``migration``: a smaller trace across DISJOINT pools (explicit page
+    copy + re-mount per handoff), priced by
+    `core.transfer_model.PageMigration`, outputs still exact.
+
+Goodput is completed-request tokens per DEVICE LAUNCH (decode steps +
+retries + worker and decode-side prefill launches): denominated in the
+scheduler's own clock it is seeded-deterministic — recovery recompute,
+handoff retries, and degraded-mode admission throttling all show up in
+it — where tok/s would inherit machine noise (wall tok/s is reported
+informationally).  TTFT/TPOT percentiles are in engine STEPS for the same
+reason.  Checks are gated in CI by scripts/check_bench.py.
+
+  PYTHONPATH=src python -m benchmarks.serve_bench [--seed 0] [--n-req 1024]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.transfer_model import PageMigration
+from repro.models import build_model
+from repro.runtime.disagg import DisaggEngine
+from repro.runtime.lifecycle import (
+    ChaosConfig, ChaosInjector, FinishReason, Request, RetryPolicy,
+)
+
+BENCH_SERVE_OUT = Path(__file__).resolve().parent.parent / "BENCH_serve.json"
+
+PLENS = (8, 16, 24, 32)
+GENS = (4, 8, 12, 16)
+
+# events that mean a fault (or its recovery) touched this request
+FAULT_EVENTS = ("chaos_worker_kill", "chaos_worker_hang",
+                "chaos_handoff_drop", "worker_lost", "handoff_reroute",
+                "handoff_fallback_decode", "degraded_forward")
+
+
+def _make_requests(cfg, seed: int, n_req: int):
+    """Deterministic mixed-length trace.  Every third request shares a
+    system prompt (the prefix index's workload); prompt lengths and
+    generation budgets cycle through buckets so slots churn constantly."""
+    rng = np.random.default_rng(seed)
+    sys_prompt = rng.integers(0, cfg.vocab // 2, 12)
+    reqs = []
+    for i in range(n_req):
+        plen = PLENS[i % len(PLENS)]
+        gen = GENS[(i // len(PLENS)) % len(GENS)]
+        if i % 3 == 0:
+            tail = rng.integers(cfg.vocab // 2, cfg.vocab,
+                                max(plen - len(sys_prompt), 1))
+            tail[0] = cfg.vocab // 2 + (i % (cfg.vocab // 2))  # divergence
+            prompt = np.concatenate([sys_prompt, tail]).astype(np.int32)
+        else:
+            prompt = rng.integers(0, cfg.vocab, plen).astype(np.int32)
+        reqs.append(Request(rid=i, prompt=prompt, max_new=gen))
+    return reqs
+
+
+def _percentiles(xs):
+    if not xs:
+        return {"p50": 0.0, "p95": 0.0, "p99": 0.0}
+    a = np.asarray(xs, np.float64)
+    return {"p50": float(np.percentile(a, 50)),
+            "p95": float(np.percentile(a, 95)),
+            "p99": float(np.percentile(a, 99))}
+
+
+def _run_profile(model, params, cfg, reqs, *, workers, batch, max_len,
+                 page_size, chunk, shared_pool=True, chaos=None):
+    eng = DisaggEngine(
+        model, params, prefill_workers=workers, batch_slots=batch,
+        max_len=max_len, page_size=page_size, prefill_chunk=chunk,
+        shared_pool=shared_pool, prefix_max_pinned=4 * workers,
+        chaos=chaos, retry=RetryPolicy(max_retries=4, backoff_s=0.0),
+    )
+    t0 = time.perf_counter()
+    for r in reqs:
+        eng.submit(r)
+    fin = eng.run_to_completion(max_steps=100_000)
+    wall = time.perf_counter() - t0
+    good_tokens = sum(len(r.output) for r in fin.values()
+                      if r.finish_reason in FinishReason.COMPLETED)
+    s = eng.summary()
+    launches = (eng.batcher.steps_run + eng.batcher.retries_total
+                + eng.prefill_launches + eng.batcher.prefill_launches)
+    done = [r for r in fin.values()
+            if r.finish_reason in FinishReason.COMPLETED]
+    ttft = [r.first_token_at - r.submitted_at for r in done
+            if r.first_token_at is not None]
+    tpot = [(r.finished_at - r.first_token_at)
+            / max(len(r.output) - 1, 1)
+            for r in done if r.first_token_at is not None]
+    return {
+        "wall_s": wall,
+        "steps": eng.batcher.steps_run,
+        "launches": launches,
+        "goodput_tok_per_launch": good_tokens / max(launches, 1),
+        "tok_per_s": good_tokens / wall,
+        "completed": len(done),
+        "ttft_steps": _percentiles(ttft),
+        "tpot_steps": _percentiles(tpot),
+        "handoffs_completed": s["handoffs_completed"],
+        "handoff_drops": s["handoff_drops"],
+        "reroutes": s["reroutes"],
+        "recoveries": s["recoveries"],
+        "degraded_forwards": s["degraded_forwards"],
+        "migrated_pages": s["migrated_pages"],
+        "prefill_launches_workers": eng.prefill_launches,
+        "prefill_launches_decode": eng.batcher.prefill_launches,
+        "finish_reasons": s["batcher"]["finish_reasons"],
+    }, fin
+
+
+def run(arch: str, seed: int, page_size: int, chunk: int, n_req: int,
+        workers: int, batch: int):
+    cfg = get_config(arch + "-smoke")
+    model = build_model(cfg)
+    import jax
+
+    params = model.init(jax.random.PRNGKey(0))
+    max_len = max(PLENS) + max(GENS)
+    n_attn = sum(n for kind, n in cfg.blocks if kind in ("dense", "moe"))
+    pricing = PageMigration(page_size=page_size, n_kv_heads=cfg.n_kv_heads,
+                            head_dim=cfg.hd, n_layers=n_attn,
+                            kv_bytes=4)  # the f32 smoke cache
+    kw = dict(workers=workers, batch=batch, max_len=max_len,
+              page_size=page_size, chunk=chunk)
+    kill_step = 30  # mid-run: every worker is busy by then
+    n_mig = min(n_req, 128)
+
+    profiles = {}
+    outputs = {}
+
+    def go(name, reqs, **over):
+        rec, fin = _run_profile(model, params, cfg, reqs, **{**kw, **over})
+        profiles[name] = rec
+        outputs[name] = {r.rid: (r.finish_reason, tuple(r.output), r.events)
+                        for r in fin.values()}
+
+    go("fault_free", _make_requests(cfg, seed, n_req))
+    go("worker_kill", _make_requests(cfg, seed, n_req),
+       chaos=ChaosInjector(ChaosConfig(
+           seed=seed, kill_worker_at=((kill_step, 1),),
+           drop_handoff_at=(kill_step + 5, kill_step + 6))))
+    go("degraded", _make_requests(cfg, seed, n_req),
+       chaos=ChaosInjector(ChaosConfig(
+           seed=seed,
+           kill_worker_at=tuple((0, w) for w in range(workers)))))
+    go("migration", _make_requests(cfg, seed, n_mig), shared_pool=False)
+
+    ref = {rid: (reason, out)
+           for rid, (reason, out, _) in outputs["fault_free"].items()}
+    base = profiles["fault_free"]["goodput_tok_per_launch"]
+    kill_ratio = profiles["worker_kill"]["goodput_tok_per_launch"] / base
+
+    def touched(events):
+        return any(kind.startswith(f) for kind, _ in events
+                   for f in FAULT_EVENTS)
+
+    kill_out = outputs["worker_kill"]
+    untouched = [rid for rid, (_, _, ev) in kill_out.items()
+                 if not touched(ev)]
+    rerouted = [rid for rid, (_, _, ev) in kill_out.items()
+                if any(k.startswith("worker_lost") for k, _ in ev)]
+
+    def exact(name, rids):
+        out = outputs[name]
+        return all((out[rid][0], out[rid][1]) == ref[rid] for rid in rids)
+
+    checks = {
+        "worker_kill_goodput_ratio": kill_ratio,
+        "worker_kill_goodput_ge_0p6": bool(kill_ratio >= 0.6),
+        # requests no fault event ever touched decode bitwise-identically
+        "untouched_exact": bool(untouched
+                                and exact("worker_kill", untouched)),
+        # the killed worker's requests — recovered, republished, rerouted —
+        # decode the same argmax stream as the undisturbed run
+        "rerouted_exact": bool(rerouted and exact("worker_kill", rerouted)),
+        "worker_kill_all_completed": bool(
+            profiles["worker_kill"]["completed"] == n_req),
+        "degraded_all_completed": bool(
+            profiles["degraded"]["completed"] == n_req),
+        "degraded_zero_failed": bool(not any(
+            reason in (FinishReason.FAILED, FinishReason.HANDOFF_FAILED)
+            for reason, _, _ in outputs["degraded"].values())),
+        "degraded_exact": exact("degraded", list(range(n_req))),
+        "migrate_exact": exact("migration", list(range(n_mig))),
+        # the shared-pool handoff ships only the page table
+        "shared_handoff_zero_copy": bool(
+            profiles["fault_free"]["migrated_pages"] == 0
+            and profiles["worker_kill"]["migrated_pages"] == 0),
+        "all_typed_finish": all(
+            reason in FinishReason.ALL
+            for prof in outputs.values()
+            for reason, _, _ in prof.values()),
+    }
+    migration_bytes = pricing.migrate_bytes(
+        profiles["migration"]["migrated_pages"])
+    result = {
+        "arch": arch, "seed": seed, "n_req": n_req, "workers": workers,
+        "batch_slots": batch, "page_size": page_size,
+        "prefill_chunk": chunk, "max_len": max_len, "backend": "xla(cpu)",
+        "profiles": {k: v for k, v in profiles.items()},
+        "pricing": {
+            "page_bytes": pricing.page_bytes,
+            "shared_handoff_bytes_per_page": pricing.handoff_bytes(
+                1, shared_pool=True),
+            "migrated_pages": profiles["migration"]["migrated_pages"],
+            "migration_bytes": migration_bytes,
+        },
+        "checks": checks,
+    }
+    BENCH_SERVE_OUT.write_text(json.dumps(result, indent=2))
+    rows = [(f"serve_goodput_{k}", v["goodput_tok_per_launch"],
+             f"steps={v['steps']}_handoffs={v['handoffs_completed']}"
+             f"_recoveries={v['recoveries']}")
+            for k, v in profiles.items()]
+    for prof in ("fault_free", "worker_kill", "degraded"):
+        p = profiles[prof]
+        rows.append((f"serve_ttft_p50_{prof}", p["ttft_steps"]["p50"],
+                     f"p95={p['ttft_steps']['p95']:.1f}"))
+        rows.append((f"serve_tpot_p50_{prof}", p["tpot_steps"]["p50"],
+                     f"p95={p['tpot_steps']['p95']:.1f}"))
+    rows.append(("serve_migration_bytes", float(migration_bytes),
+                 f"pages={profiles['migration']['migrated_pages']}"))
+    rows.append(("serve_artifact", 0.0, f"wrote_{BENCH_SERVE_OUT.name}"))
+    for k in ("worker_kill_goodput_ge_0p6", "untouched_exact",
+              "rerouted_exact", "worker_kill_all_completed",
+              "degraded_all_completed", "degraded_zero_failed",
+              "degraded_exact", "migrate_exact",
+              "shared_handoff_zero_copy", "all_typed_finish"):
+        assert checks[k], (k, {p: profiles[p]["finish_reasons"]
+                               for p in profiles})
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--chunk", type=int, default=8)
+    ap.add_argument("--n-req", type=int, default=1024)
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=8)
+    args = ap.parse_args()
+    print("name,value,derived")
+    for name, v, derived in run(args.arch, args.seed, args.page_size,
+                                args.chunk, args.n_req, args.workers,
+                                args.batch):
+        print(f"{name},{v:.4f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

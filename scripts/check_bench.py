@@ -1,8 +1,8 @@
 """CI bench-regression gate: freshly generated BENCH_*.json vs committed.
 
 The benchmarks (benchmarks/kernel_bench --dtypes, decode_bench,
-collective_bench, prefix_bench, chaos_bench) overwrite the repo-root BENCH files in
-place, so after a CI bench step the working tree holds the FRESH numbers
+collective_bench, prefix_bench, chaos_bench, serve_bench) overwrite the
+repo-root BENCH files in place, so after a CI bench step the working tree holds the FRESH numbers
 and `git show HEAD:<file>` still serves the committed BASELINE.  This
 script diffs the two with per-metric-class tolerances and exits nonzero on
 regression:
@@ -24,7 +24,11 @@ regression:
 
 Keys added by a newer bench pass freely; keys REMOVED relative to the
 baseline are regressions (a silently vanished metric is how gates rot).
-A file absent from HEAD (first run of a new bench) passes with a note.
+A file absent from HEAD — the first CI run after a bench lands, before
+its artifact is committed — is a BASELINE BOOTSTRAP: the fresh file
+passes with a note and becomes the baseline once merged.  An unreadable
+committed baseline is treated the same way (the fresh run re-seeds it)
+rather than failing every PR until someone hand-edits JSON.
 
   python scripts/check_bench.py                       # all default files
   python scripts/check_bench.py BENCH_decode.json     # just one
@@ -41,7 +45,7 @@ from pathlib import Path
 REPO = Path(__file__).resolve().parent.parent
 DEFAULT_FILES = ("BENCH_quant.json", "BENCH_decode.json",
                  "BENCH_collective.json", "BENCH_prefix.json",
-                 "BENCH_chaos.json")
+                 "BENCH_chaos.json", "BENCH_serve.json")
 
 EXACT_TOL = 0.01
 TIMING_TOL = 0.25
@@ -118,14 +122,30 @@ def _walk(base, fresh, path, problems):
 
 
 def _baseline(name: str, baseline_dir: Path | None):
+    """Committed baseline, or None when this run bootstraps one.  A
+    baseline that exists but will not parse also returns None: gating a
+    fresh run against garbage helps nobody, and the fresh artifact
+    re-seeds the baseline at merge."""
     if baseline_dir is not None:
         p = baseline_dir / name
-        return json.loads(p.read_text()) if p.exists() else None
+        if not p.exists():
+            return None
+        try:
+            return json.loads(p.read_text())
+        except (json.JSONDecodeError, OSError) as e:
+            print(f"    note: {name} baseline unreadable ({e}); "
+                  f"re-seeding from fresh run")
+            return None
     proc = subprocess.run(["git", "show", f"HEAD:{name}"], cwd=REPO,
                           capture_output=True, text=True)
     if proc.returncode != 0:
         return None
-    return json.loads(proc.stdout)
+    try:
+        return json.loads(proc.stdout)
+    except json.JSONDecodeError as e:
+        print(f"    note: {name} committed baseline unreadable ({e}); "
+              f"re-seeding from fresh run")
+        return None
 
 
 def check_file(name: str, baseline_dir: Path | None) -> list:
@@ -134,7 +154,8 @@ def check_file(name: str, baseline_dir: Path | None) -> list:
         return [(name, "fresh file missing (bench did not run?)")]
     base = _baseline(name, baseline_dir)
     if base is None:
-        print(f"  {name}: no committed baseline (first run)", end=" -> ")
+        print(f"  {name}: baseline bootstrap (no usable committed "
+              f"baseline; fresh run seeds it)", end=" -> ")
         return []
     fresh = json.loads(fresh_path.read_text())
     problems = []

@@ -493,6 +493,76 @@ class PagedKVDecode:
 
 
 @dataclasses.dataclass(frozen=True)
+class PageMigration:
+    """KV-page handoff cost between a prefill pool and a decode pool
+    (runtime/disagg.DisaggEngine).
+
+    The paper's tile-buffer argument applied to disaggregation: handoff and
+    recovery cost scales with the bytes NOT already resident on the
+    receiving side.
+
+      - shared pool: the handoff ships the page *table* (incref + index
+        publish + remount) — zero cache bytes move; only the metadata row,
+        which is noise next to any page payload.
+      - disjoint pools: every migrated full page's rows are read from the
+        prefill cache and written into the decode cache, per layer and per
+        K/V operand (+ scale sidecars for quantized caches).
+
+    ``row_bytes`` matches `PagedKVDecode.row_bytes` per layer so the two
+    models price the same cache layout consistently.
+    """
+
+    page_size: int
+    n_kv_heads: int
+    head_dim: int
+    n_layers: int = 1
+    kv_bytes: int = 2
+    scale_bytes: int = 0
+
+    @property
+    def row_bytes(self) -> int:
+        """One cached position: K + V across the kv heads (+ sidecar),
+        single layer."""
+        payload = 2 * self.n_kv_heads * self.head_dim * self.kv_bytes
+        sidecar = 2 * self.n_kv_heads * self.scale_bytes
+        return payload + sidecar
+
+    @property
+    def page_bytes(self) -> int:
+        """One full page's cache payload across all layers."""
+        return self.page_size * self.row_bytes * self.n_layers
+
+    def migrate_bytes(self, pages: int) -> int:
+        """HBM traffic of copying `pages` full pages across pools: one read
+        + one write of every row (both memories are touched)."""
+        return 2 * max(int(pages), 0) * self.page_bytes
+
+    def handoff_bytes(self, pages: int, *, shared_pool: bool) -> int:
+        """Cache bytes a handoff of `pages` pages moves: zero under the
+        shared-pool metadata handoff, the full migration traffic across
+        disjoint pools."""
+        return 0 if shared_pool else self.migrate_bytes(pages)
+
+    def migrate_seconds(self, pages: int, bw: float) -> float:
+        """Memory-term seconds for a migration at `bw` bytes/s."""
+        return self.migrate_bytes(pages) / bw if bw else 0.0
+
+    def report(self, pages: int, *, bw: Optional[float] = None) -> dict:
+        rec = {
+            "pages": int(pages),
+            "page_bytes": self.page_bytes,
+            "row_bytes": self.row_bytes,
+            "n_layers": self.n_layers,
+            "shared_pool_handoff_bytes": self.handoff_bytes(
+                pages, shared_pool=True),
+            "migrated_bytes": self.migrate_bytes(pages),
+        }
+        if bw:
+            rec["migrate_s"] = self.migrate_seconds(pages, bw)
+        return rec
+
+
+@dataclasses.dataclass(frozen=True)
 class SharedPrefixPrefill:
     """Prefill work a prefix-cache hit avoids (runtime/prefix_cache).
 

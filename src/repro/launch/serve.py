@@ -140,6 +140,88 @@ def _run_continuous(model, cfg, params, args) -> int:
     return 0
 
 
+def _run_disagg(model, cfg, params, args) -> int:
+    """Disaggregated serving (runtime/disagg.py): --disagg N prefill
+    workers fill KV pages and hand finished requests to the decode pool by
+    shipping the page table (shared pool: incref-publish-mount, zero
+    copies; --disagg-migrate: disjoint pools with explicit page
+    migration).  --chaos adds worker kills, hangs, and handoff drops on
+    top of the decode-side fault mix; the engine heals via heartbeat
+    detection, page-republish recovery, rerouting, and degraded-mode
+    decode-side prefill."""
+    from ..runtime.disagg import DisaggEngine
+    from ..runtime.lifecycle import ChaosConfig, ChaosInjector, Request, \
+        RetryPolicy
+
+    B = args.batch
+    max_len = args.max_len or (args.prompt_len + args.gen)
+    kv_quant = None
+    if args.kv_cache == "int8":
+        from ..core.precision import QuantSpec
+
+        kv_quant = QuantSpec("int8", "tile")
+    chaos = None
+    if args.chaos:
+        chaos = ChaosInjector(ChaosConfig(
+            seed=args.chaos_seed,
+            step_failure_rate=args.fault_rate / 4,
+            worker_kill_rate=args.fault_rate / 8,
+            worker_hang_rate=args.fault_rate / 4,
+            handoff_drop_rate=args.fault_rate,
+        ))
+    eng = DisaggEngine(
+        model, params, prefill_workers=args.disagg, batch_slots=B,
+        max_len=max_len, page_size=args.page_size,
+        prefill_chunk=args.prefill_chunk or 8,
+        shared_pool=not args.disagg_migrate, kv_quant=kv_quant,
+        chaos=chaos, retry=RetryPolicy(max_retries=3, backoff_s=0.0),
+    )
+    rng = np.random.default_rng(0)
+    n_req = 4 * B
+    sys_prompt = rng.integers(0, cfg.vocab, max(1, (3 * args.prompt_len) // 4))
+    t0 = time.time()
+    for i in range(n_req):
+        if i % 2 == 0:  # half the trace shares a system prompt
+            tail = rng.integers(0, cfg.vocab,
+                                max(1, args.prompt_len - len(sys_prompt)))
+            prompt = np.concatenate([sys_prompt, tail]).astype(np.int32)
+        else:
+            plen = int(rng.integers(2, args.prompt_len + 1))
+            prompt = rng.integers(0, cfg.vocab, plen).astype(np.int32)
+        eng.submit(Request(rid=i, prompt=prompt, max_new=args.gen))
+    finished = eng.run_to_completion()
+    wall = time.time() - t0
+    total = sum(len(r.prompt) + len(r.output) for r in finished.values())
+    s = eng.summary()
+    mode = "shared-pool" if eng.shared_pool else "page-migration"
+    if args.chaos:
+        mode += "+chaos"
+    print(f"disagg serving [{mode}]: {len(finished)} requests, "
+          f"{args.disagg} prefill workers -> {B} decode slots; "
+          f"{total / wall:.1f} tok/s (CPU)")
+    print(f"  handoffs: {s['handoffs_completed']} completed "
+          f"({s['migrated_pages']} pages migrated, "
+          f"{s['handoff_drops']} drops, {s['reroutes']} reroutes), "
+          f"{s['recoveries']} worker recoveries, "
+          f"{s['degraded_forwards']} degraded-mode forwards")
+    print("  workers: " + ", ".join(
+        f"w{w['wid']}={w['state']}{'(suspected)' if w['suspected'] else ''}"
+        f" x{w['launches']}" for w in s["workers"]))
+    reasons = s["batcher"]["finish_reasons"]
+    print("  finish reasons: "
+          + ", ".join(f"{k}={v}" for k, v in sorted(reasons.items())))
+    if chaos is not None:
+        cs = chaos.summary()
+        print(f"  chaos [seed {args.chaos_seed}]: "
+              f"{cs['worker_kills_injected']} worker kills, "
+              f"{cs['worker_hangs_injected']} hangs, "
+              f"{cs['handoff_drops_injected']} handoff drops, "
+              f"{cs['failures_injected']} step failures")
+    for rid in sorted(finished)[:2]:
+        print(f"  req {rid}: {finished[rid].output[:8]}")
+    return 0
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS, default="llama3.2-1b")
@@ -178,11 +260,23 @@ def main(argv=None):
                     help="batch prefill: push the prompt through the cache "
                          "this many tokens per launch instead of one decode "
                          "step per token (0 = token stepping)")
+    ap.add_argument("--disagg", type=int, default=0, metavar="N",
+                    help="disaggregated serving: N prefill workers hand "
+                         "finished requests to the decode pool by shipping "
+                         "the page table (runtime/disagg.py)")
+    ap.add_argument("--disagg-migrate", action="store_true",
+                    help="disjoint prefill/decode pools: handoff migrates "
+                         "pages (copy + re-mount) instead of the shared-"
+                         "pool metadata handoff")
     args = ap.parse_args(argv)
+    if args.disagg_migrate and not args.disagg:
+        ap.error("--disagg-migrate requires --disagg N")
     if args.chaos:
         args.continuous = True  # chaos lives in the batcher's step loop
     if args.prefix_cache:
         args.paged = True  # the prefix index lives on the page pool
+    if args.disagg:
+        args.paged = True  # workers prefill into the page pool
     if args.kv_cache != "f32" and not args.paged:
         ap.error("--kv-cache int8 requires --paged (the quantized cache "
                  "lives in the page pool)")
@@ -200,6 +294,8 @@ def main(argv=None):
         B = args.batch
         rng = np.random.default_rng(0)
 
+        if args.disagg and cfg.model_kind != "encdec":
+            return _run_disagg(model, cfg, params, args)
         if (args.continuous or args.paged) and cfg.model_kind != "encdec":
             return _run_continuous(model, cfg, params, args)
 

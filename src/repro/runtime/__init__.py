@@ -8,8 +8,9 @@ from .lifecycle import (  # noqa: E402
     StepHealth,
 )
 from .prefix_cache import PrefixHit, PrefixIndex  # noqa: E402
+from .disagg import DisaggEngine  # noqa: E402
 __all__ += ["ContinuousBatcher", "Request",
             "DUMP_PAGE", "PagePool", "PoolExhausted", "PoolStats",
             "ChaosConfig", "ChaosInjector", "FinishReason", "RequestState",
             "RetryPolicy", "StepHealth",
-            "PrefixHit", "PrefixIndex"]
+            "PrefixHit", "PrefixIndex", "DisaggEngine"]

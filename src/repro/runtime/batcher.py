@@ -133,6 +133,8 @@ class ContinuousBatcher:
                  kv_quant=None, prefix_cache: bool = False,
                  prefill_chunk: int = 0,
                  prefix_max_pinned: Optional[int] = None,
+                 pool: Optional[PagePool] = None,
+                 prefix_index: Optional[PrefixIndex] = None,
                  chaos: Optional[ChaosInjector] = None,
                  retry: Optional[RetryPolicy] = None,
                  nonfinite_guard: Optional[bool] = None,
@@ -148,6 +150,13 @@ class ContinuousBatcher:
         if (prefix_cache or prefill_chunk) and not paged:
             raise ValueError("prefix_cache / prefill_chunk require "
                              "paged=True (they operate on the page pool)")
+        if (pool is not None or prefix_index is not None) and not paged:
+            raise ValueError("an external pool / prefix_index requires "
+                             "paged=True")
+        if prefix_index is not None:
+            if pool is None or prefix_index.pool is not pool:
+                raise ValueError("prefix_index must be built over the "
+                                 "external pool it is passed with")
         self.prefix: Optional[PrefixIndex] = None
         self.prefill_chunk = int(prefill_chunk)
         self.cow_copies = 0
@@ -172,15 +181,18 @@ class ContinuousBatcher:
                 raise ValueError(
                     "model does not support paged decode (needs attention-"
                     "only segments; state/shared-block archs use dense)")
-            self.page_size = page_size
-            self._table_width = -(-max_len // page_size)
-            self.pool = PagePool(
+            # an external pool (disagg: prefill workers and the decode
+            # batcher share one allocator, so a handoff is pure metadata)
+            # dictates page_size and capacity
+            self.page_size = pool.page_size if pool is not None else page_size
+            self._table_width = -(-max_len // self.page_size)
+            self.pool = pool if pool is not None else PagePool(
                 num_pages if num_pages is not None
                 else batch_slots * self._table_width,
-                page_size,
+                self.page_size,
             )
             self.cache = model.make_paged_cache(
-                self.pool.total_pages, page_size, mode="init",
+                self.pool.total_pages, self.page_size, mode="init",
                 dtype=cache_dtype, kv_quant=kv_quant,
             )
 
@@ -189,7 +201,9 @@ class ContinuousBatcher:
                                                table, lengths)
 
             self._step = jax.jit(step_paged)
-            if prefix_cache:
+            if prefix_index is not None:
+                self.prefix = prefix_index
+            elif prefix_cache:
                 self.prefix = PrefixIndex(self.pool,
                                           max_pinned_pages=prefix_max_pinned)
             if self.prefill_chunk > 0:
@@ -226,7 +240,11 @@ class ContinuousBatcher:
     # ------------------------------------------------------------------
 
     def submit(self, req: Request):
-        req.submitted_at = self.steps_run
+        # a pre-set submitted_at survives: the disagg engine stamps arrival
+        # before prefill-worker time, so TTFT/deadlines span the WHOLE wait,
+        # not just the decode-side queue (engine and batcher share a clock)
+        if req.submitted_at < 0:
+            req.submitted_at = self.steps_run
         req.state = RequestState.QUEUED
         req.log_event("submitted", self.steps_run)
         req._order = self._submit_order  # FIFO tie-break within a priority
@@ -263,14 +281,31 @@ class ContinuousBatcher:
     # admission / preemption
     # ------------------------------------------------------------------
 
+    HIT_SCAN_LIMIT = 64  # hit-aware admission: queue prefix scanned (FIFO)
+
     def _pick_next(self) -> Optional[Request]:
-        """Highest priority first; FIFO within a priority (a preempted
+        """Highest priority first.  Within the top priority, hit-aware
+        ordering: prefer the queued request with the longest resident-
+        prefix match (read-only `peek` lookups — only the winner's real
+        admission lookup renews LRU recency), so admission consumes fewer
+        fresh pages and pool pressure evicts fewer hot pages.  Ties — and
+        the whole tier when the index is empty — stay FIFO (a preempted
         request keeps its original submit order, so it re-enters ahead of
-        later arrivals of the same priority)."""
+        later arrivals of the same priority).  The scan is capped at the
+        first HIT_SCAN_LIMIT same-priority requests in FIFO order, keeping
+        selection O(limit * prompt pages) however deep the queue."""
         if not self.queue:
             return None
-        return min(self.queue,
+        best = min(self.queue,
                    key=lambda r: (-r.priority, getattr(r, "_order", 0)))
+        if self.prefix is None or not self.prefix.entries:
+            return best
+        cands = sorted((r for r in self.queue if r.priority == best.priority),
+                       key=lambda r: getattr(r, "_order", 0))
+        cands = cands[:self.HIT_SCAN_LIMIT]
+        return max(cands, key=lambda r: (
+            self.prefix.lookup(r.sequence(), peek=True).matched_tokens,
+            -getattr(r, "_order", 0)))
 
     def _pick_victim(self, min_priority: int) -> Optional[int]:
         """Preemption victim: the strictly-lower-priority active slot with

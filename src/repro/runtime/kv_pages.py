@@ -324,6 +324,22 @@ class PagePool:
     def owned(self, slot: int) -> List[int]:
         return list(self._owned.get(slot, ()))
 
+    def transfer(self, src: int, dst: int) -> List[int]:
+        """Move a reservation between slot ids — pure metadata, no page
+        refcount changes and no device traffic.  This is the disagg
+        handoff primitive: a prefill worker parks its finished pages under
+        a staging id so its own slot id is immediately reusable, and the
+        decode side later mounts the same physical pages.  Returns the
+        page list now owned by `dst`."""
+        if src not in self._owned:
+            raise KeyError(f"slot {src} has no reservation")
+        if dst in self._owned:
+            raise ValueError(f"slot {dst} already holds a reservation")
+        self._owned[dst] = self._owned.pop(src)
+        self._lengths[dst] = self._lengths.pop(src, 0)
+        self._mounted[dst] = self._mounted.pop(src, 0)
+        return list(self._owned[dst])
+
     # ------------------------------------------------------------------
     # device-facing views
     # ------------------------------------------------------------------
@@ -339,6 +355,19 @@ class PagePool:
                 k = min(len(pages), width)
                 table[slot, :k] = pages[:k]
         return table
+
+    def slot_table(self, slot: int, width: int) -> np.ndarray:
+        """(1, width) int32 page-table row for ONE slot, valid for any slot
+        id (the batched `page_table` view only renders ids in
+        [0, n_slots)).  This is what the disagg prefill workers feed
+        `prefill_step_paged`: each worker runs batch=1 under a private
+        high slot id that never collides with the decode batcher's
+        slots."""
+        row = np.full((1, width), DUMP_PAGE, np.int32)
+        pages = self._owned.get(slot, ())
+        k = min(len(pages), width)
+        row[0, :k] = pages[:k]
+        return row
 
     def lengths(self, n_slots: int) -> np.ndarray:
         """(n_slots,) int32 live token counts (0 for slots with no

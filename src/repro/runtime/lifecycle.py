@@ -53,9 +53,12 @@ class FinishReason:
     PREEMPTED_REQUEUED = "preempted_requeued"  # preempted, never re-admitted
     FAILED = "failed"                # quarantined (non-finite logits)
     CANCELLED = "cancelled"          # caller cancelled
+    HANDOFF_FAILED = "handoff_failed"  # disagg handoff exhausted retries
+    #                                    AND reroutes AND fallback disabled
 
     ALL = frozenset({EOS, MAX_NEW, MAX_LEN, TRUNCATED, DEADLINE,
-                     PREEMPTED_REQUEUED, FAILED, CANCELLED})
+                     PREEMPTED_REQUEUED, FAILED, CANCELLED,
+                     HANDOFF_FAILED})
     # reasons that mean "the request delivered its tokens" (goodput)
     COMPLETED = frozenset({EOS, MAX_NEW, MAX_LEN})
 
@@ -166,6 +169,14 @@ class ChaosConfig:
     pool_pressure_steps: int = 3       # episode length in steps
     latency_spike_rate: float = 0.0    # P(synthetic watchdog spike)
     latency_spike_s: float = 0.25      # spike size fed to the detector
+    # ---- disagg worker faults (runtime/disagg.DisaggEngine) ----
+    worker_kill_rate: float = 0.0      # P(kill one live prefill worker)
+    kill_worker_at: tuple = ()         # ((step, wid), ...) deterministic
+    worker_hang_rate: float = 0.0      # P(hang one live prefill worker)
+    hang_worker_at: tuple = ()         # ((step, wid, steps), ...)
+    worker_hang_steps: int = 3         # default hang length (rate path)
+    handoff_drop_rate: float = 0.0     # P(a handoff attempt is dropped)
+    drop_handoff_at: tuple = ()        # (step, ...) deterministic
 
 
 class ChaosInjector:
@@ -195,20 +206,89 @@ class ChaosInjector:
         self.poisons_injected = 0
         self.pressure_episodes = 0
         self.spikes_injected = 0
+        self.worker_kills_injected = 0
+        self.worker_hangs_injected = 0
+        self.handoff_drops_injected = 0
 
     def _rng(self, step: int, stream: int) -> np.random.Generator:
         return np.random.default_rng([self.cfg.seed, int(step), stream])
 
+    # ---- pure per-step predicates (shared by the mutating methods and
+    # the plan() inspection view; rng streams: 0 step failure, 1 poison
+    # gate, 2 poison victim, 3 latency, 4 pressure, 5 kill gate, 6 kill
+    # victim, 7 hang gate, 8 hang victim, 9 handoff drop) ----
+
+    def _wants_step_failure(self, step: int) -> bool:
+        return step in self.cfg.fail_at_steps or (
+            self.cfg.step_failure_rate > 0
+            and bool(self._rng(step, 0).random()
+                     < self.cfg.step_failure_rate))
+
+    def _wants_poison(self, step: int) -> bool:
+        return step in self.cfg.poison_at_steps or (
+            self.cfg.poison_rate > 0
+            and bool(self._rng(step, 1).random() < self.cfg.poison_rate))
+
+    def _wants_spike(self, step: int) -> bool:
+        return (self.cfg.latency_spike_rate > 0
+                and bool(self._rng(step, 3).random()
+                         < self.cfg.latency_spike_rate))
+
+    def _wants_pressure(self, step: int) -> bool:
+        return step in self.cfg.pressure_at_steps or (
+            self.cfg.pool_pressure_rate > 0
+            and bool(self._rng(step, 4).random()
+                     < self.cfg.pool_pressure_rate))
+
+    def _scheduled_kills(self, step: int) -> List[int]:
+        return [int(w) for (s, w) in self.cfg.kill_worker_at if s == step]
+
+    def _wants_worker_kill(self, step: int) -> bool:
+        return (self.cfg.worker_kill_rate > 0
+                and bool(self._rng(step, 5).random()
+                         < self.cfg.worker_kill_rate))
+
+    def _scheduled_hangs(self, step: int) -> List[Tuple[int, int]]:
+        return [(int(w), int(n))
+                for (s, w, n) in self.cfg.hang_worker_at if s == step]
+
+    def _wants_worker_hang(self, step: int) -> bool:
+        return (self.cfg.worker_hang_rate > 0
+                and bool(self._rng(step, 7).random()
+                         < self.cfg.worker_hang_rate))
+
+    def _wants_handoff_drop(self, step: int) -> bool:
+        return step in self.cfg.drop_handoff_at or (
+            self.cfg.handoff_drop_rate > 0
+            and bool(self._rng(step, 9).random()
+                     < self.cfg.handoff_drop_rate))
+
+    def plan(self, step: int) -> dict:
+        """Pure inspection of the fault schedule for `step`: what WOULD be
+        injected, with no counters bumped and no events recorded.  Victim
+        choices that depend on runtime state (which slots are active, which
+        workers are alive) are reported as gate booleans plus any
+        statically scheduled victims; pressure is reported as the gate
+        signal (an already-running episode suppresses a new one at
+        injection time).  Chaos test failures print this so a red run
+        states what was injected (see tests/test_lifecycle.py)."""
+        return {
+            "step": int(step),
+            "step_failure": self._wants_step_failure(step),
+            "poison": self._wants_poison(step),
+            "latency_spike": self._wants_spike(step),
+            "pool_pressure": self._wants_pressure(step),
+            "worker_kill": self._wants_worker_kill(step),
+            "worker_kill_scheduled": self._scheduled_kills(step),
+            "worker_hang": self._wants_worker_hang(step),
+            "worker_hang_scheduled": self._scheduled_hangs(step),
+            "handoff_drop": self._wants_handoff_drop(step),
+        }
+
     # ---- per-step decisions ----
 
     def wants_failure(self, step: int) -> bool:
-        if step in self.cfg.fail_at_steps:
-            hit = True
-        elif self.cfg.step_failure_rate > 0:
-            hit = bool(self._rng(step, 0).random()
-                       < self.cfg.step_failure_rate)
-        else:
-            hit = False
+        hit = self._wants_step_failure(step)
         if hit:
             self.failures_injected += 1
             self.events.append(ChaosEvent(step, "step_failure"))
@@ -221,12 +301,7 @@ class ChaosInjector:
         """Pick one active slot whose logits come back non-finite this
         step (None = no poisoning).  The victim choice is part of the
         (seed, step) schedule."""
-        if not active_slots:
-            return None
-        if step in self.cfg.poison_at_steps:
-            pass
-        elif not (self.cfg.poison_rate > 0
-                  and self._rng(step, 1).random() < self.cfg.poison_rate):
+        if not active_slots or not self._wants_poison(step):
             return None
         victim = int(active_slots[
             int(self._rng(step, 2).integers(len(active_slots)))])
@@ -238,13 +313,56 @@ class ChaosInjector:
         """Synthetic seconds to add to the watchdog's observed step time
         (no real sleep: the detector sees the spike, the suite stays
         fast)."""
-        if (self.cfg.latency_spike_rate > 0
-                and self._rng(step, 3).random() < self.cfg.latency_spike_rate):
+        if self._wants_spike(step):
             self.spikes_injected += 1
             self.events.append(ChaosEvent(step, "latency_spike",
                                           f"{self.cfg.latency_spike_s}s"))
             return self.cfg.latency_spike_s
         return 0.0
+
+    # ---- disagg worker faults ----
+
+    def kill_worker(self, step: int, alive: List[int]) -> List[int]:
+        """Worker ids to kill this step: every scheduled (step, wid) pair
+        whose wid is still alive, plus (rate path) one rng-chosen victim.
+        The victim draw is part of the (seed, step) schedule."""
+        victims = [w for w in self._scheduled_kills(step) if w in alive]
+        if alive and self._wants_worker_kill(step):
+            pick = int(alive[int(self._rng(step, 6).integers(len(alive)))])
+            if pick not in victims:
+                victims.append(pick)
+        for w in victims:
+            self.worker_kills_injected += 1
+            self.events.append(ChaosEvent(step, "worker_kill", f"wid={w}"))
+        return victims
+
+    def hang_worker(self, step: int,
+                    candidates: List[int]) -> List[Tuple[int, int]]:
+        """(wid, hang_steps) pairs for workers that stop heartbeating this
+        step but resume once the hang expires (a straggler, not a corpse)."""
+        hangs = [(w, n) for (w, n) in self._scheduled_hangs(step)
+                 if w in candidates]
+        if candidates and self._wants_worker_hang(step):
+            pick = int(candidates[
+                int(self._rng(step, 8).integers(len(candidates)))])
+            if pick not in [w for w, _ in hangs]:
+                hangs.append((pick, self.cfg.worker_hang_steps))
+        for w, n in hangs:
+            self.worker_hangs_injected += 1
+            self.events.append(ChaosEvent(step, "worker_hang",
+                                          f"wid={w} steps={n}"))
+        return hangs
+
+    def drops_handoff(self, step: int) -> bool:
+        """Whether a handoff attempt at `step` is dropped in flight.  One
+        decision per step (pure in (seed, step)): every attempt made at a
+        dropping step fails, and the backed-off retry at a later step draws
+        fresh."""
+        hit = self._wants_handoff_drop(step)
+        if hit:
+            self.handoff_drops_injected += 1
+            self.events.append(ChaosEvent(step, "handoff_drop"))
+        return hit
 
     # ---- pool-pressure episodes ----
 
@@ -260,10 +378,8 @@ class ChaosInjector:
             self.events.append(ChaosEvent(step, "pool_pressure_off"))
         if self._pressure_until is not None:
             return
-        want = step in self.cfg.pressure_at_steps or (
-            self.cfg.pool_pressure_rate > 0
-            and self._rng(step, 4).random() < self.cfg.pool_pressure_rate)
-        if not (want and self.cfg.pool_pressure_pages > 0):
+        if not (self._wants_pressure(step)
+                and self.cfg.pool_pressure_pages > 0):
             return
         tokens = self.cfg.pool_pressure_pages * pool.page_size
         if pool.try_reserve(self.PRESSURE_SLOT, tokens) is None:
@@ -289,5 +405,8 @@ class ChaosInjector:
             "poisons_injected": self.poisons_injected,
             "pressure_episodes": self.pressure_episodes,
             "spikes_injected": self.spikes_injected,
+            "worker_kills_injected": self.worker_kills_injected,
+            "worker_hangs_injected": self.worker_hangs_injected,
+            "handoff_drops_injected": self.handoff_drops_injected,
             "events": len(self.events),
         }

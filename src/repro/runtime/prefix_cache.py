@@ -95,7 +95,7 @@ class PrefixIndex:
         return [tuple(int(t) for t in prompt[i * ps:(i + 1) * ps])
                 for i in range(n_full)]
 
-    def lookup(self, prompt: Sequence[int]) -> PrefixHit:
+    def lookup(self, prompt: Sequence[int], peek: bool = False) -> PrefixHit:
         """Longest indexed prefix of `prompt`, at page granularity.
 
         Full-page matching is capped at floor((len-1)/page_size) pages and
@@ -103,8 +103,14 @@ class PrefixIndex:
         prompt's LAST token always runs through the decode step, which is
         what produces the first generation logits (and keeps the shared
         path launch-for-launch identical to the unshared one from there).
+
+        ``peek=True`` is a read-only probe: no LRU clock advance and no
+        `last_used` touches.  Hit-aware admission ordering scans the whole
+        queue with peeks; only the request actually admitted should renew
+        its path's recency (its real lookup does).
         """
-        self._tick += 1
+        if not peek:
+            self._tick += 1
         ps = self.page_size
         plen = len(prompt)
         max_full = max(0, (plen - 1) // ps)
@@ -115,7 +121,8 @@ class PrefixIndex:
             nxt = level.get(chunk)
             if nxt is None:
                 break
-            nxt.last_used = self._tick
+            if not peek:
+                nxt.last_used = self._tick
             pages.append(nxt.page)
             node, level = nxt, nxt.children
         # partial-page match: the best child whose leading rows hold the
@@ -129,7 +136,8 @@ class PrefixIndex:
                 m += 1
             if m > best_m:
                 best_m, best_page = m, child.page
-                child.last_used = self._tick
+                if not peek:
+                    child.last_used = self._tick
         return PrefixHit(pages=pages, partial_page=best_page,
                          partial_tokens=best_m, _page_size=ps)
 

@@ -1,0 +1,276 @@
+"""Disaggregated prefill/decode engine: handoff exactness, worker-fault
+recovery, degraded mode, and the chaos sweep.
+
+The load-bearing property everywhere: whatever the engine does —
+shared-pool handoff, page migration, worker kill/hang recovery, handoff
+drops, degraded decode-side fallback — greedy decode must produce tokens
+BITWISE-IDENTICAL to a plain paged `ContinuousBatcher` run of the same
+requests.  The fault machinery may cost steps, never correctness."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.runtime.batcher import ContinuousBatcher, Request
+from repro.runtime.disagg import DisaggEngine
+from repro.runtime.lifecycle import ChaosConfig, ChaosInjector, FinishReason
+
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    import jax
+    cfg = get_config("llama3.2-1b-smoke")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _requests(cfg, n=6, seed=0, max_new=3):
+    """Mixed-length prompts, a third sharing a prefix (the index workload)."""
+    rng = np.random.default_rng(seed)
+    common = rng.integers(0, cfg.vocab // 2, 8)
+    reqs = []
+    for i in range(n):
+        plen = (12, 8, 17)[i % 3]  # shared-prefix slots get the 8+tail
+        if i % 3 == 0:
+            tail = rng.integers(cfg.vocab // 2, cfg.vocab, plen - 8)
+            tail[0] = cfg.vocab // 2 + i
+            prompt = np.concatenate([common, tail]).astype(np.int32)
+        else:
+            prompt = rng.integers(0, cfg.vocab, plen).astype(np.int32)
+        reqs.append(Request(rid=i, prompt=prompt, max_new=max_new))
+    return reqs
+
+
+def _reference(model, params, cfg, n=6, seed=0, max_new=3):
+    ref = ContinuousBatcher(model, params, batch_slots=2, max_len=24,
+                            paged=True, page_size=4)
+    for r in _requests(cfg, n=n, seed=seed, max_new=max_new):
+        ref.submit(r)
+    return {k: v.output for k, v in ref.run_to_completion().items()}
+
+
+def _engine(model, params, **kw):
+    base = dict(prefill_workers=2, batch_slots=2, max_len=24, page_size=4,
+                prefill_chunk=4)
+    return DisaggEngine(model, params, **{**base, **kw})
+
+
+def _run(model, params, cfg, *, n=6, seed=0, max_new=3, **kw):
+    eng = _engine(model, params, **kw)
+    for r in _requests(cfg, n=n, seed=seed, max_new=max_new):
+        eng.submit(r)
+    fin = eng.run_to_completion(max_steps=2000)
+    return eng, fin
+
+
+def _outputs(fin):
+    return {k: v.output for k, v in fin.items()}
+
+
+@pytest.mark.slow
+def test_shared_pool_handoff_exact_and_zero_copy(model_and_params):
+    """Default mode: prefill workers hand off by publishing the page
+    table — outputs equal the plain paged batcher and no page is ever
+    migrated (the handoff is pure metadata)."""
+    cfg, model, params = model_and_params
+    want = _reference(model, params, cfg)
+    eng, fin = _run(model, params, cfg)
+    assert _outputs(fin) == want
+    s = eng.summary()
+    assert s["handoffs_completed"] == 6
+    assert s["migrated_pages"] == 0
+    assert s["recoveries"] == 0 and s["reroutes"] == 0
+    # the handoff shows in every request's event log
+    for r in fin.values():
+        kinds = [k for k, _ in r.events]
+        assert "prefill_done" in kinds and "handoff" in kinds
+
+
+@pytest.mark.slow
+def test_migration_handoff_exact_and_priced(model_and_params):
+    """shared_pool=False: disjoint pools, full pages copied across.  Same
+    outputs; migrated_pages counts what `PageMigration` prices."""
+    cfg, model, params = model_and_params
+    want = _reference(model, params, cfg)
+    eng, fin = _run(model, params, cfg, shared_pool=False)
+    assert _outputs(fin) == want
+    s = eng.summary()
+    assert s["migrated_pages"] > 0
+    # full pages only: each request ships floor((len(seq)-1)/ps) pages
+    expect = sum((len(r.prompt) - 1) // 4 for r in _requests(cfg))
+    assert s["migrated_pages"] == expect
+
+
+@pytest.mark.slow
+def test_worker_kill_recovers_bitwise_exact(model_and_params):
+    """Kill a worker mid-prefill: the heartbeat watchdog declares it lost,
+    republishes its completed pages, and reroutes — outputs stay equal to
+    the undisturbed run, and the victim's request remounts the published
+    pages instead of restarting from scratch."""
+    cfg, model, params = model_and_params
+    want = _reference(model, params, cfg)
+    chaos = ChaosInjector(ChaosConfig(seed=0, kill_worker_at=((2, 0),)))
+    eng, fin = _run(model, params, cfg, chaos=chaos)
+    assert _outputs(fin) == want
+    s = eng.summary()
+    assert s["recoveries"] == 1
+    assert chaos.worker_kills_injected == 1
+    assert any(w["state"] == "dead" for w in s["workers"])
+    lost = [r for r in fin.values()
+            if any(k.startswith("worker_lost") for k, _ in r.events)]
+    assert lost and all(r.finish_reason in FinishReason.COMPLETED
+                        for r in lost)
+
+
+@pytest.mark.slow
+def test_worker_hang_detected_then_worker_rejoins(model_and_params):
+    """A hung worker stops heartbeating: its request is recovered like a
+    kill, but the worker itself rejoins the eligible set after the hang
+    and serves later prompts.  Outputs exact throughout."""
+    cfg, model, params = model_and_params
+    want = _reference(model, params, cfg)
+    chaos = ChaosInjector(ChaosConfig(seed=0, hang_worker_at=((2, 0, 8),)))
+    eng, fin = _run(model, params, cfg, chaos=chaos)
+    assert _outputs(fin) == want
+    s = eng.summary()
+    assert s["recoveries"] == 1
+    assert chaos.worker_hangs_injected == 1
+    w0 = s["workers"][0]
+    assert w0["state"] == "healthy" and not w0["suspected"]
+
+
+@pytest.mark.slow
+def test_handoff_drops_retry_with_backoff_exact(model_and_params):
+    """Dropped handoffs retry with exponential backoff and still deliver;
+    outputs unchanged, drops counted and logged per request."""
+    cfg, model, params = model_and_params
+    want = _reference(model, params, cfg)
+    chaos = ChaosInjector(ChaosConfig(seed=0, drop_handoff_at=(2, 3, 4)))
+    eng, fin = _run(model, params, cfg, chaos=chaos)
+    assert _outputs(fin) == want
+    s = eng.summary()
+    assert s["handoff_drops"] >= 1
+    assert s["handoffs_completed"] == 6
+    dropped = [r for r in fin.values()
+               if any(k == "chaos_handoff_drop" for k, _ in r.events)]
+    assert dropped
+
+
+@pytest.mark.slow
+def test_degraded_mode_completes_everything(model_and_params):
+    """All workers killed at step 0: the engine observes total prefill
+    loss and the decode pool absorbs chunked prefill at reduced admission.
+    Every request completes (zero failed/handoff_failed) and outputs stay
+    exact."""
+    cfg, model, params = model_and_params
+    want = _reference(model, params, cfg)
+    chaos = ChaosInjector(ChaosConfig(
+        seed=0, kill_worker_at=((0, 0), (0, 1))))
+    eng, fin = _run(model, params, cfg, chaos=chaos)
+    assert _outputs(fin) == want
+    assert eng.degraded()
+    s = eng.summary()
+    assert s["degraded_forwards"] == 6
+    assert all(r.finish_reason in FinishReason.COMPLETED
+               for r in fin.values())
+    assert not any(r.finish_reason in (FinishReason.FAILED,
+                                       FinishReason.HANDOFF_FAILED)
+                   for r in fin.values())
+
+
+@pytest.mark.slow
+def test_handoff_failed_only_when_fallback_disabled(model_and_params):
+    """With every handoff dropped forever: fallback enabled degrades to
+    decode-side prefill (everything completes); fallback disabled is the
+    ONLY path to FinishReason.HANDOFF_FAILED — typed, never silent."""
+    cfg, model, params = model_and_params
+
+    def run(fallback):
+        chaos = ChaosInjector(ChaosConfig(seed=0, handoff_drop_rate=1.0))
+        return _run(model, params, cfg, n=2, chaos=chaos,
+                    degraded_fallback=fallback,
+                    handoff_max_retries=1, reroutes_max=1)
+
+    _, fin = run(True)
+    assert all(r.finish_reason in FinishReason.COMPLETED
+               for r in fin.values())
+    assert all(any(k == "handoff_fallback_decode" for k, _ in r.events)
+               for r in fin.values())
+
+    _, fin = run(False)
+    assert set(fin) == {0, 1}
+    assert all(r.finish_reason == FinishReason.HANDOFF_FAILED
+               for r in fin.values())
+
+
+@pytest.mark.slow
+def test_engine_stamps_ttft_across_prefill_wait(model_and_params):
+    """submitted_at is stamped at ENGINE accept, so first_token_at -
+    submitted_at covers worker queueing + prefill + handoff, and a
+    ttft_steps budget expires a request still waiting on the prefill
+    side (typed DEADLINE, engine-side)."""
+    cfg, model, params = model_and_params
+    eng = _engine(model, params, prefill_workers=1)
+    reqs = _requests(cfg, n=4)
+    reqs[3].ttft_steps = 2  # cannot possibly prefill 3 prompts in 2 steps
+    for r in reqs:
+        eng.submit(r)
+    fin = eng.run_to_completion(max_steps=2000)
+    assert fin[3].finish_reason == FinishReason.DEADLINE
+    assert ("expired", 2) in fin[3].events or any(
+        k == "expired" for k, _ in fin[3].events)
+    for rid in (0, 1, 2):
+        r = fin[rid]
+        assert r.submitted_at == 0  # engine accept, not batcher submit
+        assert r.first_token_at is not None
+        assert r.first_token_at - r.submitted_at > 0
+
+
+@pytest.mark.slow
+def test_single_token_prompt_bypasses_prefill(model_and_params):
+    """A one-token prompt has nothing to prefill (the last prompt token
+    always rides the decode step): it must go straight to the decode pool,
+    not occupy a worker."""
+    cfg, model, params = model_and_params
+    eng = _engine(model, params)
+    eng.submit(Request(rid=0, prompt=np.asarray([5], np.int32), max_new=3))
+    fin = eng.run_to_completion(max_steps=200)
+    assert fin[0].finish_reason in FinishReason.COMPLETED
+    assert len(fin[0].output) == 3
+    s = eng.summary()
+    assert s["bypassed"] == 1 and s["prefill_launches"] == 0
+
+
+@pytest.mark.chaos
+def test_randomized_disagg_chaos_sweep(model_and_params):
+    """Multi-worker randomized sweep: worker kills, hangs, handoff drops,
+    step failures, and latency spikes together under a rotating seed.
+    Every request must end with a typed reason and every COMPLETED request
+    must match the fault-free disagg run bitwise.  Failures print the
+    seed plus the chaos and per-request event logs."""
+    cfg, model, params = model_and_params
+    seed = int(os.environ.get("CHAOS_SEED", "0"))
+
+    def run(chaos):
+        eng, fin = _run(model, params, cfg, n=8, seed=3, max_new=3,
+                        prefill_workers=3, chaos=chaos)
+        return eng, fin
+
+    _, ref = run(None)
+    chaos = ChaosInjector(ChaosConfig(
+        seed=seed, step_failure_rate=0.05, latency_spike_rate=0.10,
+        worker_kill_rate=0.02, worker_hang_rate=0.05,
+        worker_hang_steps=4, handoff_drop_rate=0.15))
+    eng, fin = run(chaos)
+    ctx = (f"CHAOS_SEED={seed} (reproduce with this env var); "
+           f"chaos={chaos.summary()}")
+    assert set(fin) == set(ref), ctx
+    for rid, r in fin.items():
+        detail = f"{ctx}; rid {rid} events={r.events}"
+        assert r.finish_reason in FinishReason.ALL, detail
+        if r.finish_reason in FinishReason.COMPLETED:
+            assert r.output == ref[rid].output, (
+                f"{detail}: diverged from fault-free disagg run")

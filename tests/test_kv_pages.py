@@ -88,6 +88,44 @@ def test_page_table_correct_under_eviction():
     assert not (set(table3[0].tolist()) - {DUMP_PAGE}) & set(p1)
 
 
+def test_transfer_moves_slot_identity_not_refcounts():
+    """`transfer` re-keys a reservation (disagg handoff staging): the new
+    slot owns the same pages at the same refcounts and live length; the
+    old slot id becomes free for reuse.  Bad moves are errors."""
+    pool = PagePool(num_pages=8, page_size=4)
+    pages = pool.reserve(0, 10)
+    pool.set_length(0, 7)
+    pool.try_reserve(1, 4, shared=pages[:1])  # a second reference survives
+    assert pool.transfer(0, 5) == pages
+    assert pool.owned(5) == pages
+    assert pool.lengths(6).tolist()[5] == 7
+    assert pool.refcount(pages[0]) == 2  # untouched by the re-key
+    assert pool.pages_in_use == 3        # no page moved or freed
+    # the vacated id is reusable; the occupied one rejects a second move
+    assert pool.try_reserve(0, 4) is not None
+    with pytest.raises(KeyError):
+        pool.transfer(99, 7)             # unknown source
+    with pytest.raises(ValueError, match="already holds"):
+        pool.transfer(1, 5)              # destination in use
+    # release through the NEW id frees what the old id reserved
+    assert pool.release(5) == 2          # pages[0] still shared by slot 1
+    assert pool.refcount(pages[0]) == 1
+
+
+def test_slot_table_single_row_any_id():
+    """`slot_table` builds a (1, width) device-table row for ONE slot
+    keyed by an arbitrary id (disagg workers sit at high ids where the
+    dense `page_table(n_slots, ...)` rectangle never reaches)."""
+    pool = PagePool(num_pages=8, page_size=4)
+    pages = pool.reserve(10_000, 10)
+    row = pool.slot_table(10_000, width=5)
+    assert row.shape == (1, 5) and row.dtype == np.int32
+    assert row[0, :3].tolist() == pages
+    assert (row[0, 3:] == DUMP_PAGE).all()
+    # unreserved id: all dump (same convention as a free page_table row)
+    assert (pool.slot_table(7, 5) == DUMP_PAGE).all()
+
+
 def test_churn_never_leaks():
     pool = PagePool(num_pages=7, page_size=2)
     rng = np.random.default_rng(0)

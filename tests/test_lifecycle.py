@@ -472,3 +472,59 @@ def test_prefix_uncapped_stats_report_pins():
     st = idx.stats()
     assert st["pinned_pages"] == 2
     assert st["max_pinned_pages"] is None
+
+
+# ---------------------------------------------------------------------------
+# chaos plan() inspection
+# ---------------------------------------------------------------------------
+
+def test_chaos_plan_is_pure_and_matches_injection():
+    """`plan(step)` previews the fault schedule without mutating ANY
+    injector state (counters, rng position, event log) — calling it any
+    number of times, in any order, changes nothing, and what it predicts
+    is exactly what the mutating paths then inject."""
+    cfg = ChaosConfig(seed=11, step_failure_rate=0.3, worker_kill_rate=0.2,
+                      worker_hang_rate=0.2, handoff_drop_rate=0.3,
+                      latency_spike_rate=0.2, kill_worker_at=((4, 1),),
+                      drop_handoff_at=(6,))
+    inj = ChaosInjector(cfg)
+    plans = [inj.plan(s) for s in range(12)]
+    # pure: replaying (even out of order) reproduces identical plans and
+    # leaves every counter at zero
+    assert [inj.plan(s) for s in reversed(range(12))] == plans[::-1]
+    assert inj.failures_injected == 0
+    assert inj.worker_kills_injected == 0
+    assert inj.worker_hangs_injected == 0
+    assert inj.handoff_drops_injected == 0
+    assert inj.events == []
+
+    # the scheduled faults are visible in the preview at their steps
+    assert plans[4]["worker_kill_scheduled"] == [1]
+    assert plans[6]["handoff_drop"] is True
+
+    # the mutating paths agree with the preview: gate booleans + scheduled
+    # victims compose exactly as kill_worker/hang_worker inject them
+    kills = hangs = 0
+    for s in range(12):
+        assert inj.wants_failure(s) == plans[s]["step_failure"]
+        assert inj.drops_handoff(s) == plans[s]["handoff_drop"]
+        killed = inj.kill_worker(s, alive=[0, 1, 2])
+        hung = inj.hang_worker(s, candidates=[0, 1, 2])
+        n_kill = len(plans[s]["worker_kill_scheduled"]) + (
+            1 if plans[s]["worker_kill"] else 0)
+        assert len(killed) == n_kill  # victims distinct: schedule has wid 1
+        for w in plans[s]["worker_kill_scheduled"]:
+            assert w in killed
+        assert len(hung) == (len(plans[s]["worker_hang_scheduled"])
+                             + (1 if plans[s]["worker_hang"] else 0))
+        kills += len(killed)
+        hangs += len(hung)
+    assert inj.worker_kills_injected == kills
+    assert inj.worker_hangs_injected == hangs
+    assert inj.handoff_drops_injected == sum(
+        p["handoff_drop"] for p in plans)
+    assert inj.failures_injected == sum(p["step_failure"] for p in plans)
+    # every injection landed in the event log with its step
+    assert len([e for e in inj.events if e.kind == "worker_kill"]) == kills
+    assert len([e for e in inj.events
+                if e.kind == "handoff_drop"]) == inj.handoff_drops_injected

@@ -160,6 +160,28 @@ def test_prefix_eviction_is_lru():
     assert pool.refcount(b[0]) == 0  # B evicted
 
 
+def test_lookup_peek_does_not_touch_lru():
+    """peek=True lookups are read-only: they must not renew recency, so
+    the hit-aware admission scan (which peeks every queued candidate)
+    cannot turn the whole queue's prefixes 'recently used' and break LRU
+    eviction."""
+    pool = PagePool(num_pages=8, page_size=2)
+    idx = PrefixIndex(pool)
+    a = pool.reserve(0, 2)
+    idx.insert([1, 2], a)
+    b = pool.reserve(1, 2)
+    idx.insert([3, 4], b)
+    pool.release(0)
+    pool.release(1)
+    # peek chain A repeatedly: B stays the most recently used (insert order)
+    for _ in range(3):
+        hit = idx.lookup([1, 2, 9], peek=True)
+        assert hit.pages == a  # same result as a real lookup...
+    assert idx.evict(1) == 1
+    assert pool.refcount(a[0]) == 0  # ...but A still evicts first (LRU)
+    assert pool.refcount(b[0]) == 1
+
+
 # ---------------------------------------------------------------------------
 # chunked prefill-into-pages parity (model level)
 # ---------------------------------------------------------------------------
@@ -460,6 +482,65 @@ def test_chunked_prefill_overlong_prompt_truncates_not_crashes(
     fin = b.run_to_completion()
     assert set(fin) == {0, 1}
     assert len(fin[1].output) == 2  # the well-formed request is unaffected
+
+
+@pytest.mark.slow
+def test_hit_aware_admission_prefers_longest_prefix_hit(model_and_params):
+    """With the index warm, admission reorders same-priority queued
+    requests to take the longest resident-prefix match first — the
+    cold-prompt request submitted EARLIER is admitted later, and both
+    decode the same outputs as a plain FIFO paged run."""
+    cfg, model, params = model_and_params
+    rng = np.random.default_rng(7)
+    prompt_a = rng.integers(0, cfg.vocab, 8).astype(np.int32)
+    cold = rng.integers(0, cfg.vocab, 8).astype(np.int32)
+    warm = np.concatenate(
+        [prompt_a, rng.integers(0, cfg.vocab, 2)]).astype(np.int32)
+
+    ref = ContinuousBatcher(model, params, batch_slots=1, max_len=16,
+                            paged=True, page_size=4)
+    for rid, p in ((1, cold), (2, warm)):
+        ref.submit(Request(rid=rid, prompt=p, max_new=3))
+    want = {k: v.output for k, v in ref.run_to_completion().items()}
+
+    b = ContinuousBatcher(model, params, batch_slots=1, max_len=16,
+                          paged=True, page_size=4, num_pages=16,
+                          prefix_cache=True, prefill_chunk=4)
+    b.submit(Request(rid=0, prompt=prompt_a, max_new=3))
+    b.run_to_completion()  # A's 2 full prompt pages now indexed
+    b.submit(Request(rid=1, prompt=cold, max_new=3))   # FIFO-first, no hit
+    b.submit(Request(rid=2, prompt=warm, max_new=3))   # 2-page hit
+    fin = b.run_to_completion()
+
+    def admitted_at(req):
+        return dict(req.events)["admitted"]
+
+    assert admitted_at(fin[2]) < admitted_at(fin[1])  # hit jumped the line
+    assert b.prefix_stats()["hits"] >= 1
+    assert {k: fin[k].output for k in (1, 2)} == want  # ordering-only change
+
+
+@pytest.mark.slow
+def test_hit_aware_admission_never_overrides_priority(model_and_params):
+    """Hit-aware ordering applies WITHIN a priority tier only: a
+    higher-priority cold prompt still beats a lower-priority request with
+    a full prefix hit."""
+    cfg, model, params = model_and_params
+    rng = np.random.default_rng(8)
+    prompt_a = rng.integers(0, cfg.vocab, 8).astype(np.int32)
+    b = ContinuousBatcher(model, params, batch_slots=1, max_len=16,
+                          paged=True, page_size=4, num_pages=16,
+                          prefix_cache=True, prefill_chunk=4)
+    b.submit(Request(rid=0, prompt=prompt_a, max_new=3))
+    b.run_to_completion()
+    warm = np.concatenate(
+        [prompt_a, rng.integers(0, cfg.vocab, 2)]).astype(np.int32)
+    cold = rng.integers(0, cfg.vocab, 8).astype(np.int32)
+    b.submit(Request(rid=1, prompt=warm, max_new=3, priority=0))
+    b.submit(Request(rid=2, prompt=cold, max_new=3, priority=1))
+    fin = b.run_to_completion()
+    assert (dict(fin[2].events)["admitted"]
+            < dict(fin[1].events)["admitted"])
 
 
 def test_prefix_cache_requires_paged(model_and_params):

@@ -157,3 +157,39 @@ def test_paged_kv_decode_report_fields():
     assert rec["paged_memory_s"] < rec["dense_memory_s"]
     # int8 payload + sidecar: row_bytes = 2*2*16*1 + 2*2*4
     assert m.row_bytes == 64 + 16
+
+
+# ---------------------------------------------------------------------------
+# Page migration (disaggregated handoff pricing)
+# ---------------------------------------------------------------------------
+
+
+def test_page_migration_row_consistent_with_paged_decode():
+    """PageMigration and PagedKVDecode must price the same cache layout:
+    identical per-row bytes (payload + scale sidecar)."""
+    from repro.core.transfer_model import PagedKVDecode, PageMigration
+
+    d = PagedKVDecode(batch_slots=4, max_len=64, page_size=16,
+                      n_kv_heads=2, head_dim=16, n_layers=3,
+                      kv_bytes=1, scale_bytes=4)
+    m = PageMigration(page_size=16, n_kv_heads=2, head_dim=16,
+                      n_layers=3, kv_bytes=1, scale_bytes=4)
+    assert m.row_bytes == d.row_bytes
+    assert m.page_bytes == 16 * d.row_bytes * 3
+
+
+def test_page_migration_bytes_and_shared_handoff_zero():
+    from repro.core.transfer_model import PageMigration
+
+    m = PageMigration(page_size=8, n_kv_heads=4, head_dim=32,
+                      n_layers=2, kv_bytes=2)
+    # migration touches both memories: read + write of every row
+    assert m.migrate_bytes(5) == 2 * 5 * m.page_bytes
+    assert m.migrate_bytes(0) == 0 and m.migrate_bytes(-3) == 0
+    # the shared-pool handoff ships only the page table: zero cache bytes
+    assert m.handoff_bytes(5, shared_pool=True) == 0
+    assert m.handoff_bytes(5, shared_pool=False) == m.migrate_bytes(5)
+    assert m.migrate_seconds(5, 1e9) == m.migrate_bytes(5) / 1e9
+    rec = m.report(5, bw=1e9)
+    assert rec["pages"] == 5
+    assert rec["shared_pool_handoff_bytes"] == 0
