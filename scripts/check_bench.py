@@ -1,7 +1,8 @@
 """CI bench-regression gate: freshly generated BENCH_*.json vs committed.
 
 The benchmarks (benchmarks/kernel_bench --dtypes, decode_bench,
-collective_bench, prefix_bench, chaos_bench, serve_bench) overwrite the
+collective_bench, prefix_bench, chaos_bench, serve_bench, spec_bench)
+overwrite the
 repo-root BENCH files in place, so after a CI bench step the working tree holds the FRESH numbers
 and `git show HEAD:<file>` still serves the committed BASELINE.  This
 script diffs the two with per-metric-class tolerances and exits nonzero on
@@ -45,7 +46,8 @@ from pathlib import Path
 REPO = Path(__file__).resolve().parent.parent
 DEFAULT_FILES = ("BENCH_quant.json", "BENCH_decode.json",
                  "BENCH_collective.json", "BENCH_prefix.json",
-                 "BENCH_chaos.json", "BENCH_serve.json")
+                 "BENCH_chaos.json", "BENCH_serve.json",
+                 "BENCH_spec.json")
 
 EXACT_TOL = 0.01
 TIMING_TOL = 0.25

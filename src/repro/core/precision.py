@@ -54,10 +54,18 @@ class QuantSpec:
     fp8_e4m3 are symmetric-scale quantized with f32 scales.
     ``granularity``: "tensor" (one scale) or "tile" (per output-row for the
     A operand, per output-column for B — constant along K by construction).
+    ``static_scale``: a calibrated fixed scale (see `calibrate_static_scale`)
+    that replaces the per-call amax reduction — dynamic quantization costs
+    one full read + reduce of the operand BEFORE the GEMM can launch, which
+    on the serving decode path is a second pass over the activations every
+    step; a static scale deletes that reduction (values beyond the
+    calibrated range saturate at ±qmax, standard post-training-calibration
+    semantics).  Weights never need it (they are quantized once at load).
     """
 
     dtype: str = "f32"
     granularity: str = "tile"
+    static_scale: Optional[float] = None
 
     def __post_init__(self):
         if self.dtype not in DTYPES:
@@ -66,6 +74,14 @@ class QuantSpec:
             raise ValueError(
                 f"unknown granularity {self.granularity!r}; one of {GRANULARITIES}"
             )
+        if self.static_scale is not None:
+            if DTYPES[self.dtype][2] is None:
+                raise ValueError(
+                    f"static_scale only applies to quantized dtypes, "
+                    f"got {self.dtype!r}")
+            if not self.static_scale > 0:
+                raise ValueError(
+                    f"static_scale must be > 0, got {self.static_scale}")
 
     @property
     def jnp_dtype(self):
@@ -145,6 +161,35 @@ class PrecisionPolicy:
         """True when applying this policy changes nothing (pure f32 passthrough)."""
         return not (self.a.transforms(a_dtype) or self.b.transforms(b_dtype)
                     or self.out is not None)
+
+
+# ---------------------------------------------------------------------------
+# Static-scale calibration
+# ---------------------------------------------------------------------------
+
+
+def calibrate_static_scale(spec: QuantSpec, samples, *,
+                           margin: float = 1.0) -> QuantSpec:
+    """Offline calibration pass: the max |activation| over representative
+    ``samples`` (arrays, as from a few prefill/decode steps of real
+    traffic) fixes the operand's scale once, so every subsequent serving
+    call skips the per-call amax reduction entirely (kernels/quant's
+    `quantize` sees `static_scale` and never issues the reduce —
+    benchmarks/kernel_bench's static-scale census counts the deleted op).
+
+    ``margin`` > 1 leaves headroom above the observed amax; activations
+    beyond the calibrated range saturate at ±qmax.  Returns a new frozen
+    spec — calibration composes with any granularity (the fixed scalar is
+    broadcast to the tile layout the kernels expect)."""
+    if not spec.quantized:
+        raise ValueError(f"spec {spec} is cast-only; nothing to calibrate")
+    if margin <= 0:
+        raise ValueError(f"margin must be > 0, got {margin}")
+    amax = 0.0
+    for x in samples:
+        amax = max(amax, float(jnp.max(jnp.abs(jnp.asarray(x).astype(jnp.float32)))))
+    scale = (amax * margin) / spec.qmax if amax > 0 else 1.0
+    return dataclasses.replace(spec, static_scale=float(scale))
 
 
 # ---------------------------------------------------------------------------

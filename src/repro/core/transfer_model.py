@@ -667,6 +667,91 @@ class SharedPrefixPrefill:
         return out
 
 
+@dataclasses.dataclass(frozen=True)
+class SpeculativeDecode:
+    """Decode-step cost amortization from batched verification
+    (runtime/speculative + the mx_flash_verify window kernel).
+
+    Plain greedy decode is launch- and weight-bound: EVERY emitted token
+    re-reads every weight byte and every resident KV byte.  A speculative
+    verify step reads them ONCE for a k+1-token window — the tile-buffer
+    reuse argument applied along the time axis — and emits a geometric
+    number of tokens set by the per-draft acceptance rate alpha:
+
+        E[tokens/launch] = 1 + a + a^2 + ... + a^k = (1-a^(k+1)) / (1-a)
+
+    (each draft is accepted only if every draft before it was — the
+    greedy-exact chain).  Cost per launch, in units of one plain decode
+    step, is 1 (the verify pass streams the same weights + pages; the
+    extra k rows of attention/FFN arithmetic ride the already-streamed
+    bytes) plus ``draft_cost_ratio`` per draft token for the drafter
+    (0 for host-side n-gram lookup; a small draft model costs its
+    parameter-read fraction).  Expected speedup in the memory-bound
+    regime is then E[tokens] / (1 + draft_cost_ratio*k)."""
+
+    k: int
+    draft_cost_ratio: float = 0.0
+    window_write_rows: int = 0  # extra K/V rows written vs 1 (the k drafts)
+
+    def __post_init__(self):
+        if self.k < 1:
+            raise ValueError(f"k must be >= 1, got {self.k}")
+        if not 0.0 <= self.draft_cost_ratio:
+            raise ValueError("draft_cost_ratio must be >= 0")
+
+    def expected_tokens(self, alpha: float) -> float:
+        """E[tokens emitted per verify launch] at per-draft acceptance
+        rate alpha (the greedy-exact chain makes it a truncated geometric
+        series; alpha=1 gives the full k+1)."""
+        if not 0.0 <= alpha <= 1.0:
+            raise ValueError(f"alpha must be in [0, 1], got {alpha}")
+        if alpha == 1.0:
+            return float(self.k + 1)
+        return (1.0 - alpha ** (self.k + 1)) / (1.0 - alpha)
+
+    def launch_cost(self) -> float:
+        """Verify-launch cost in plain-decode-step units: one full weight
+        + resident-KV stream, plus the drafter's per-draft cost."""
+        return 1.0 + self.draft_cost_ratio * self.k
+
+    def speedup(self, alpha: float) -> float:
+        """Expected decode tok/s multiple vs plain decode in the
+        memory-/launch-bound regime."""
+        return self.expected_tokens(alpha) / self.launch_cost()
+
+    def breakeven_alpha(self, grid: int = 1000) -> float:
+        """Smallest alpha (on a grid) where speculation stops losing —
+        with a free drafter that is alpha=0 (speedup 1.0); a paid drafter
+        needs real acceptance to cover its cost."""
+        for i in range(grid + 1):
+            a = i / grid
+            if self.speedup(a) >= 1.0:
+                return a
+        return 1.0
+
+    def weight_reads_per_token(self, alpha: float) -> float:
+        """Full-parameter HBM sweeps per emitted token (plain decode: 1)."""
+        return 1.0 / self.expected_tokens(alpha)
+
+    def report(self, alphas=(0.0, 0.25, 0.5, 0.75, 0.9, 1.0)) -> dict:
+        """alpha -> speedup table (the README design note and
+        benchmarks/spec_bench.py's expected-vs-measured comparison)."""
+        return {
+            "k": self.k,
+            "draft_cost_ratio": self.draft_cost_ratio,
+            "launch_cost_steps": self.launch_cost(),
+            "breakeven_alpha": self.breakeven_alpha(),
+            "alphas": {
+                f"{a:.2f}": {
+                    "expected_tokens_per_launch": self.expected_tokens(a),
+                    "weight_reads_per_token": self.weight_reads_per_token(a),
+                    "speedup": self.speedup(a),
+                }
+                for a in alphas
+            },
+        }
+
+
 # ---------------------------------------------------------------------------
 # Cluster mapping: ring collective GEMMs (comm/compute overlap)
 # ---------------------------------------------------------------------------

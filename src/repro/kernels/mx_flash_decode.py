@@ -24,6 +24,15 @@ by the same table and applied on the way into the score/value dots.
 
 Oracle: `kernels.ref.paged_decode_ref` (the gather-based jnp formulation,
 which is also the XLA fallback path the model stack uses off-TPU).
+
+`mx_flash_verify` is the speculative-decoding widening of the same kernel:
+S = k+1 query rows per slot (the draft window plus the committed token)
+ride ONE launch — same scalar-prefetched page table, same online-softmax
+scratch discipline, same single write-back — with a causal-within-window
+mask so row r attends positions <= lengths[i] - S + r.  Verifying k drafts
+re-reads the resident pages and the weights ONCE instead of k+1 times,
+which is the paper's tile-buffer data-reuse argument applied along the
+time axis.  Oracle: `kernels.ref.paged_prefill_ref` at index = lengths - S.
 """
 from __future__ import annotations
 
@@ -180,3 +189,152 @@ def mx_flash_decode(
         interpret=interpret,
     )(pt, ln, *operands)
     return out.reshape(B, H, d)
+
+
+def _verify_kernel(
+    # scalar-prefetch refs (SMEM):
+    pt_ref, len_ref,
+    # tensor refs:
+    *refs,
+    nj: int, ps: int, S: int, G: int, scale: float, out_dtype,
+    has_scales: bool,
+):
+    it = iter(refs)
+    q_ref = next(it)
+    k_ref = next(it)
+    v_ref = next(it)
+    ks_ref = next(it) if has_scales else None
+    vs_ref = next(it) if has_scales else None
+    o_ref = next(it)
+    m_ref = next(it)
+    l_ref = next(it)
+    acc_ref = next(it)
+
+    i = pl.program_id(0)  # slot
+    j = pl.program_id(2)  # page slot (split-KV axis)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32).reshape(S * G, -1)  # (S*G, d)
+    k = k_ref[0, :, 0].astype(jnp.float32)                  # (ps, d)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    if has_scales:
+        k = k * ks_ref[0, :, 0][:, None]
+        v = v * vs_ref[0, :, 0][:, None]
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (S*G, ps)
+    # causal-within-window mask: flattened row r*G+g is query row r, which
+    # sits at absolute position lengths[i] - S + r (the window's rows are
+    # the LAST S live positions).  A free slot (length 0) masks every lane,
+    # so the m_safe guard below yields zero output rows, like decode.
+    kpos = j * ps + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    r = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // G
+    s = jnp.where(kpos <= len_ref[i] - S + r, s, -jnp.inf)
+
+    m_prev = m_ref[...]  # (S*G, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+    p = jnp.exp(s - m_safe)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(j == nj - 1)
+    def _store():  # one fused write-back for all S query rows
+        o_ref[0, 0] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        ).reshape(S, G, -1).astype(out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def mx_flash_verify(
+    q: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    page_table: jax.Array,
+    lengths: jax.Array,
+    *,
+    k_scale: jax.Array | None = None,
+    v_scale: jax.Array | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Batched-verify paged attention: S query rows per slot in ONE launch.
+
+    q: (B, S, H, d) — the S = k+1 speculative window per slot (its K/V rows
+    must already be written into the pages, like the prefill-into-pages
+    path); k_pages / v_pages: (P, page_size, Hkv, d) flat page pools;
+    page_table: (B, W) physical page ids; lengths: (B,) live token counts
+    INCLUDING the window (query row r sits at position lengths[i] - S + r
+    and attends positions <= its own).  lengths 0 marks a free slot, which
+    produces all-zero output rows.  GQA and int8 scale pages exactly as
+    `mx_flash_decode`.  Returns (B, S, H, d) in q's dtype.
+    """
+    B, S, H, d = q.shape
+    P, ps, Hkv, d2 = k_pages.shape
+    if d2 != d or v_pages.shape != k_pages.shape:
+        raise ValueError(f"q {q.shape} vs pages {k_pages.shape}/{v_pages.shape}")
+    if H % Hkv:
+        raise ValueError(f"H={H} not a multiple of Hkv={Hkv}")
+    if page_table.ndim != 2 or page_table.shape[0] != B:
+        raise ValueError(f"page_table must be (B, W), got {page_table.shape}")
+    has_scales = k_scale is not None
+    if has_scales != (v_scale is not None):
+        raise ValueError("k_scale and v_scale must be given together")
+    if has_scales and k_scale.shape != (P, ps, Hkv):
+        raise ValueError(
+            f"scales must be (P, ps, Hkv)={(P, ps, Hkv)}, got {k_scale.shape}"
+        )
+    G = H // Hkv
+    W = page_table.shape[1]
+    scale = 1.0 / math.sqrt(d)
+
+    # (B, Hkv, S, G, d): kv-head becomes a grid axis, the S*G query rows of
+    # one (slot, kv-head) cell ride a single block through the same online-
+    # softmax scratch the decode kernel uses for its G rows.
+    q5 = q.reshape(B, S, Hkv, G, d).transpose(0, 2, 1, 3, 4)
+    pt = page_table.astype(jnp.int32)
+    ln = lengths.astype(jnp.int32)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, S, G, d), lambda i, h, j, pt, ln: (i, h, 0, 0, 0)),
+        pl.BlockSpec((1, ps, 1, d), lambda i, h, j, pt, ln: (pt[i, j], 0, h, 0)),
+        pl.BlockSpec((1, ps, 1, d), lambda i, h, j, pt, ln: (pt[i, j], 0, h, 0)),
+    ]
+    operands = [q5, k_pages, v_pages]
+    if has_scales:
+        sspec = pl.BlockSpec((1, ps, 1), lambda i, h, j, pt, ln: (pt[i, j], 0, h))
+        in_specs += [sspec, sspec]
+        operands += [k_scale.astype(jnp.float32), v_scale.astype(jnp.float32)]
+
+    out = pl.pallas_call(
+        functools.partial(
+            _verify_kernel, nj=W, ps=ps, S=S, G=G, scale=scale,
+            out_dtype=q.dtype, has_scales=has_scales,
+        ),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B, Hkv, W),
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec(
+                (1, 1, S, G, d), lambda i, h, j, pt, ln: (i, h, 0, 0, 0)
+            ),
+            scratch_shapes=[
+                pltpu.VMEM((S * G, 1), jnp.float32),  # m — per query row
+                pltpu.VMEM((S * G, 1), jnp.float32),  # l
+                pltpu.VMEM((S * G, d), jnp.float32),  # acc
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, S, G, d), q.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(pt, ln, *operands)
+    return out.transpose(0, 2, 1, 3, 4).reshape(B, S, H, d)

@@ -49,11 +49,22 @@ def compute_scale(x: jax.Array, qmax: float, axis=None) -> jax.Array:
 def quantize(x: jax.Array, spec: "QuantSpec", *, axis=None) -> Tuple[jax.Array, jax.Array]:
     """(payload, scale) for a quantized spec.  `axis` is the reduction axis
     of the amax (None = per-tensor).  int8 rounds-to-nearest and clips to
-    ±127; fp8 clips to ±max-finite then casts (e4m3 overflow is NaN)."""
+    ±127; fp8 clips to ±max-finite then casts (e4m3 overflow is NaN).
+
+    A spec carrying a calibrated ``static_scale`` (core.precision.
+    calibrate_static_scale) skips the amax reduction entirely: the fixed
+    scalar is materialized in the same keepdims layout `compute_scale`
+    would produce, so every downstream shape contract holds while the
+    serving hot path loses one full pass over the operand."""
     if not spec.quantized:
         raise ValueError(f"spec {spec} is cast-only; nothing to quantize")
     qmax = spec.qmax
-    scale = compute_scale(x, qmax, axis=axis)
+    if getattr(spec, "static_scale", None) is not None:
+        shape = () if axis is None else tuple(
+            1 if i == (axis % x.ndim) else n for i, n in enumerate(x.shape))
+        scale = jnp.full(shape, spec.static_scale, jnp.float32)
+    else:
+        scale = compute_scale(x, qmax, axis=axis)
     scaled = x.astype(jnp.float32) / scale
     if spec.dtype == "int8":
         q = jnp.clip(jnp.round(scaled), -qmax, qmax).astype(jnp.int8)
@@ -108,6 +119,29 @@ def quantize_int8_tensor(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
     The wire format of the cross-pod gradient all-reduce."""
     scale = compute_scale(x, 127.0, axis=None)
     q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def quantize_int8_stochastic(
+    x: jax.Array, key: jax.Array, *, axis=None
+) -> Tuple[jax.Array, jax.Array]:
+    """Stochastically-rounded symmetric int8: (payload, f32 scale).
+
+    floor(x/scale + u) with u ~ U[0, 1) rounds up with probability equal
+    to the fractional part, so E[dequantize(q)] == x elementwise — the
+    property gradient compression needs: round-to-nearest rounds every
+    replica of a small-magnitude gradient the SAME direction every step,
+    a systematic bias that accumulates across an all-reduce and across
+    steps, while stochastic rounding's errors are zero-mean and average
+    out (tests/test_quant's hypothesis round-trip bias test).
+
+    Pure in (key, x): the same key and operand reproduce the same payload
+    bit-for-bit — replicas sharing a seeded key stream stay deterministic.
+    `axis` selects the amax granularity exactly as in `quantize`."""
+    scale = compute_scale(x, 127.0, axis=axis)
+    scaled = x.astype(jnp.float32) / scale
+    noise = jax.random.uniform(key, x.shape, jnp.float32)
+    q = jnp.clip(jnp.floor(scaled + noise), -127, 127).astype(jnp.int8)
     return q, scale
 
 

@@ -10,6 +10,9 @@ CPU smoke examples:
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
       --prefix-cache --chaos --fault-rate 0.1 --chaos-seed 0
       # fault-injected serving: typed finish reasons + per-step health
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
+      --speculate 4 --draft ngram --prefill-chunk 8
+      # speculative decoding: K drafts verified per launch, exact outputs
 """
 from __future__ import annotations
 
@@ -43,6 +46,26 @@ def _run_continuous(model, cfg, params, args) -> int:
     from ..runtime.batcher import ContinuousBatcher, Request
     from ..runtime.lifecycle import ChaosConfig, ChaosInjector, RetryPolicy
 
+    drafter = None
+    if args.speculate:
+        if args.draft == "ngram":
+            from ..runtime.speculative import NGramDrafter
+
+            drafter = NGramDrafter()
+        else:
+            # a small draft model sharing the token space: any arch id works
+            # as long as its vocab matches the target's
+            from ..runtime.speculative import DraftModelProposer
+
+            dcfg = get_config(args.draft + ("-smoke" if args.smoke else ""))
+            if dcfg.vocab != cfg.vocab:
+                raise SystemExit(
+                    f"--draft {args.draft}: draft vocab {dcfg.vocab} != "
+                    f"target vocab {cfg.vocab}")
+            dmodel = build_model(dcfg)
+            dparams = dmodel.init(jax.random.PRNGKey(1))
+            drafter = DraftModelProposer(dmodel, dparams)
+
     B = args.batch
     max_len = args.max_len or (args.prompt_len + args.gen)
     kv_quant = None
@@ -71,6 +94,7 @@ def _run_continuous(model, cfg, params, args) -> int:
         num_pages=num_pages, prefix_cache=args.prefix_cache,
         prefill_chunk=args.prefill_chunk if args.paged else 0,
         chaos=chaos, retry=RetryPolicy(max_retries=3, backoff_s=0.0),
+        speculate=args.speculate, drafter=drafter,
     )
     rng = np.random.default_rng(0)
     n_req = 2 * B
@@ -101,6 +125,8 @@ def _run_continuous(model, cfg, params, args) -> int:
         mode += "+prefix"
     if args.chaos:
         mode += "+chaos"
+    if args.speculate:
+        mode += f"+spec{args.speculate}"
     print(f"continuous batching [{mode} cache]: {len(finished)} requests "
           f"through {B} slots; {total / wall:.1f} tok/s (CPU)")
     if args.paged:
@@ -108,6 +134,13 @@ def _run_continuous(model, cfg, params, args) -> int:
         print(f"  pages: {st.pages_in_use} in use / {st.num_pages} pool "
               f"(high water {st.high_water}, page_size {st.page_size}, "
               f"peak utilization {st.high_water / st.num_pages:.2f})")
+    if args.speculate:
+        sp = batcher.spec_stats()
+        print(f"  speculation [k={args.speculate}, draft {args.draft}]: "
+              f"{sp['accepted']}/{sp['drafted']} drafts accepted "
+              f"({sp['acceptance_rate']:.0%}), "
+              f"{sp['emitted']} tokens over {sp['launches']} launches "
+              f"({sp['tokens_per_launch']:.2f} tok/launch)")
     if args.prefix_cache:
         ps = batcher.prefix_stats()
         print(f"  prefix cache: {ps['hits']}/{ps['hits'] + ps['misses']} "
@@ -256,6 +289,17 @@ def main(argv=None):
                     help="chaos schedule seed (same seed => same faults)")
     ap.add_argument("--fault-rate", type=float, default=0.1,
                     help="per-step fault probability under --chaos")
+    ap.add_argument("--speculate", type=int, default=0, metavar="K",
+                    help="speculative decoding (implies --paged): draft K "
+                         "tokens per slot per step and verify all K+1 "
+                         "positions in one widened flash-decode launch; "
+                         "greedy-exact, so the emitted stream is bitwise "
+                         "identical to plain decode (runtime/speculative)")
+    ap.add_argument("--draft", default="ngram",
+                    help="drafter under --speculate: 'ngram' (self-"
+                         "speculative prompt lookup, no extra model) or an "
+                         "arch id for a small draft model sharing the "
+                         "target's token space")
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help="batch prefill: push the prompt through the cache "
                          "this many tokens per launch instead of one decode "
@@ -277,6 +321,11 @@ def main(argv=None):
         args.paged = True  # the prefix index lives on the page pool
     if args.disagg:
         args.paged = True  # workers prefill into the page pool
+    if args.speculate:
+        args.paged = True  # drafts land in (and roll back over) KV pages
+        if args.disagg:
+            ap.error("--speculate is a decode-loop feature; combine with "
+                     "--continuous/--paged, not --disagg")
     if args.kv_cache != "f32" and not args.paged:
         ap.error("--kv-cache int8 requires --paged (the quantized cache "
                  "lives in the page pool)")

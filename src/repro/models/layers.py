@@ -14,7 +14,7 @@ import jax.numpy as jnp
 
 from ..core import ops
 from ..core.precision import QuantSpec
-from ..kernels.mx_flash_decode import mx_flash_decode
+from ..kernels.mx_flash_decode import mx_flash_decode, mx_flash_verify
 from ..kernels.quant import quantize
 from ..kernels.ref import paged_decode_ref, paged_prefill_ref
 from .modules import Builder, Module
@@ -489,6 +489,49 @@ class Attention(Module):
                               page_table, idx_b,
                               k_scale=cache.get("k_scale"),
                               v_scale=cache.get("v_scale"))
+        o = o.reshape(b, sq, self.n_heads * self.hd)
+        out = ops.linear(o, p["wo"], residual=residual, out_dtype=x.dtype,
+                         tp_mode="reduce_scatter", precision=self.precision)
+        return out, cache
+
+    # ---------------- speculative verify (paged cache) ----------------
+
+    def verify_paged(self, p, x, cache, index, page_table, lengths, *,
+                     residual=None):
+        """Batched-verify step for speculative decoding: x (B, S, D) holds
+        each slot's S = k+1 window tokens (the committed token plus k
+        drafts).  K/V rows for positions [index, index+S) are written into
+        the pages first (quantize-on-write included, exactly like
+        `prefill_paged`), then all S rows attend in ONE launch through
+        `mx_flash_verify` — the decode kernel widened to an S-row query
+        block, scoring the whole window for the price of one weight read.
+
+        index: (B,) window start positions; lengths: (B,) live counts
+        INCLUDING the window (= index + S for active slots, 0 for free
+        ones — free slots' writes land on the dump page and their output
+        rows are zero, the decode-path convention)."""
+        b, sq, _ = x.shape
+        ps = cache["k_pages"].shape[1]
+        idx_b = jnp.broadcast_to(jnp.asarray(index), (b,))
+        positions = idx_b[:, None] + jnp.arange(sq)  # (B, S)
+        q, k_new, v_new = self._qkv(p, x, positions)
+        page_ids = jnp.take_along_axis(page_table, positions // ps, axis=1)
+        offs = positions % ps
+        cache = self._write_kv_pages(cache, page_ids, offs, k_new, v_new)
+        kw = dict(
+            k_scale=cache.get("k_scale"), v_scale=cache.get("v_scale"))
+        policy = ops.current_policy()
+        if policy.backend == "pallas_mx":
+            o = mx_flash_verify(q, cache["k_pages"], cache["v_pages"],
+                                page_table, lengths,
+                                interpret=policy.interpret, **kw)
+        else:
+            # the causal window mask of the prefill oracle IS the verify
+            # mask (row r at position lengths-S+r); free slots (length 0)
+            # produce NaN softmax rows there — zero them like the kernel
+            o = paged_prefill_ref(q, cache["k_pages"], cache["v_pages"],
+                                  page_table, lengths - sq, **kw)
+            o = jnp.where((lengths > 0)[:, None, None, None], o, 0.0)
         o = o.reshape(b, sq, self.n_heads * self.hd)
         out = ops.linear(o, p["wo"], residual=residual, out_dtype=x.dtype,
                          tp_mode="reduce_scatter", precision=self.precision)

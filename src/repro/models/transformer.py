@@ -194,6 +194,20 @@ class TransformerBlock(Module):
             x = ffn(p["ffn"], h, residual=x)
         return x, cache
 
+    def verify_paged(self, p, x, cache, index, page_table, lengths):
+        """Speculative batched-verify step: S window tokens per slot."""
+        attn = self._attn()
+        x, cache = attn.verify_paged(p["attn"], rms_norm(x, p["ln1"]), cache,
+                                     index, page_table, lengths, residual=x)
+        ffn = self._ffn()
+        h = rms_norm(x, p["ln2"])
+        if self.use_moe:
+            y, _ = ffn(p["ffn"], h)
+            x = x + y
+        else:
+            x = ffn(p["ffn"], h, residual=x)
+        return x, cache
+
 
 def _wrap_state_block(block):
     """Uniform (y, aux) interface for state blocks (mamba/xlstm)."""
@@ -489,6 +503,35 @@ class DecoderLM(Module):
                 layer_params, layer_cache = scanned
                 return block.prefill_paged(layer_params, h, layer_cache,
                                            index, page_table)
+
+            x, new_cache[f"seg{i}"] = jax.lax.scan(
+                body, x, (p[f"seg{i}"], cache[f"seg{i}"])
+            )
+        return self._head(p, x), new_cache
+
+    def verify_step_paged(self, p, tokens, cache, index, page_table, lengths):
+        """Score S = k+1 window tokens per slot through the whole stack in
+        ONE launch — the speculative-decoding verify pass.  tokens: (B, S)
+        (each slot's committed token followed by its k draft tokens);
+        index: (B,) window start positions; lengths: (B,) live counts
+        including the window.  Returns (logits (B, S, vocab), cache):
+        logits[:, r] scores position index+r, so logits[:, r].argmax() is
+        the greedy token AFTER accepting rows 0..r — row 0 reproduces the
+        plain decode step's output bitwise (k=0 degenerate), rows 1..k are
+        the k extra tokens this launch buys."""
+        if not self.supports_paged():
+            raise ValueError(f"{self.cfg.name}: speculative verify needs "
+                             "attention-only segments")
+        cfg = self.cfg
+        x = self._embed_inputs(p, tokens)
+        new_cache = dict(cache)
+        for i, seg in enumerate(self.segments()):
+            block = make_block(seg.kind, cfg)
+
+            def body(h, scanned):
+                layer_params, layer_cache = scanned
+                return block.verify_paged(layer_params, h, layer_cache,
+                                          index, page_table, lengths)
 
             x, new_cache[f"seg{i}"] = jax.lax.scan(
                 body, x, (p[f"seg{i}"], cache[f"seg{i}"])

@@ -84,6 +84,7 @@ from .lifecycle import (
     StepHealth,
 )
 from .prefix_cache import PrefixIndex
+from .speculative import DraftProposer, NGramDrafter, SpecStats
 
 __all__ = ["ContinuousBatcher", "Request", "FinishReason"]
 
@@ -125,7 +126,21 @@ class ContinuousBatcher:
     controls the transient-failure retry policy; non-finite-logit
     quarantine is on whenever chaos is (it needs a host copy of the
     logits, so the fault-free hot path skips it by default —
-    ``nonfinite_guard=True`` forces it on)."""
+    ``nonfinite_guard=True`` forces it on).
+
+    ``speculate=k`` (paged only) switches decode to speculative windows: a
+    ``drafter`` (runtime/speculative; default NGramDrafter) proposes up to
+    k tokens per decode-phase slot and a single batched verify launch
+    (`model.verify_step_paged` -> `mx_flash_verify`) scores all k+1 window
+    positions; drafts matching the verify argmax chain publish (greedy-
+    exact — the emitted stream is bitwise-identical to speculate=0),
+    rejected drafts roll back by NOT advancing the slot's position/length:
+    their K/V rows sit stale in the slot's already-reserved private tail
+    pages until real tokens overwrite them — zero copies, zero page
+    churn.  Slots still prefilling ride the same launch as forced-token
+    windows (prompt rows are accepted by construction), so speculation
+    composes with chunked prefill, preemption (a resumed request re-enters
+    through prefill windows) and chaos quarantine unchanged."""
 
     def __init__(self, model, params, batch_slots: int, max_len: int,
                  cache_dtype=jnp.float32, *, paged: bool = False,
@@ -138,7 +153,9 @@ class ContinuousBatcher:
                  chaos: Optional[ChaosInjector] = None,
                  retry: Optional[RetryPolicy] = None,
                  nonfinite_guard: Optional[bool] = None,
-                 straggler: Optional[StragglerDetector] = None):
+                 straggler: Optional[StragglerDetector] = None,
+                 speculate: int = 0,
+                 drafter: Optional[DraftProposer] = None):
         self.model = model
         self.params = params
         self.B = batch_slots
@@ -153,6 +170,11 @@ class ContinuousBatcher:
         if (pool is not None or prefix_index is not None) and not paged:
             raise ValueError("an external pool / prefix_index requires "
                              "paged=True")
+        if speculate and not paged:
+            raise ValueError("speculate requires paged=True (the verify "
+                             "window writes through the page tables)")
+        if speculate < 0:
+            raise ValueError(f"speculate must be >= 0, got {speculate}")
         if prefix_index is not None:
             if pool is None or prefix_index.pool is not pool:
                 raise ValueError("prefix_index must be built over the "
@@ -175,6 +197,11 @@ class ContinuousBatcher:
         self.resume_latencies: List[int] = []  # steps preempted -> readmitted
         self.retries_total = 0
         self._submit_order = 0
+
+        # speculative decoding state
+        self.speculate = int(speculate)
+        self.drafter = (drafter or NGramDrafter()) if self.speculate else None
+        self.spec = SpecStats()
 
         if paged:
             if not getattr(model, "supports_paged", lambda: False)():
@@ -213,6 +240,14 @@ class ContinuousBatcher:
                                                     index, table)
 
                 self._prefill = jax.jit(prefill_paged)
+            if self.speculate > 0:
+
+                def verify_paged(params, tokens, cache, index, table,
+                                 lengths):
+                    return model.verify_step_paged(params, tokens, cache,
+                                                   index, table, lengths)
+
+                self._verify = jax.jit(verify_paged)
 
             def copy_page(cache, src, dst):
                 # paged-cache leaves are layer-stacked (n_layers, P, ...):
@@ -600,6 +635,11 @@ class ContinuousBatcher:
         """Paged backend's allocator stats (None on the dense backend)."""
         return self.pool.stats() if self.pool is not None else None
 
+    def spec_stats(self) -> Optional[dict]:
+        """Speculative-decoding acceptance/goodput counters (None when
+        speculate=0)."""
+        return self.spec.as_dict() if self.speculate else None
+
     def prefix_stats(self) -> Optional[dict]:
         """Prefix-cache hit/reuse counters (None when prefix_cache off)."""
         if self.prefix is None:
@@ -648,18 +688,19 @@ class ContinuousBatcher:
     # the step
     # ------------------------------------------------------------------
 
-    def _device_step(self, args, fail_first: bool):
+    def _device_step(self, args, fail_first: bool, fn=None):
         """One device step under the retry policy.  The injected (or real)
         DeviceFailure is transient: the step function is pure, so a retry
         recomputes from unchanged inputs.  Retries beyond the policy
         re-raise — a permanently failing device is not a serving-loop
         decision."""
+        fn = fn if fn is not None else self._step
         attempts = 0
         while True:
             try:
                 if fail_first and attempts == 0:
                     raise self.chaos.make_failure(self.steps_run)
-                return self._step(*args), attempts
+                return fn(*args), attempts
             except DeviceFailure:
                 attempts += 1
                 self.retries_total += 1
@@ -670,6 +711,8 @@ class ContinuousBatcher:
 
     def step(self) -> int:
         """One batched decode step across all slots; returns #active slots."""
+        if self.speculate:
+            return self._step_speculative()
         now = self.steps_run
         health = StepHealth(step=now)
         t0 = time.perf_counter()
@@ -759,6 +802,174 @@ class ContinuousBatcher:
                 req.first_token_at = now
                 req.log_event("first_token", now)
             hit_eos = req.eos_id is not None and req.output[-1] == req.eos_id
+            if hit_eos:
+                self._finish_slot(i, FinishReason.EOS)
+            elif len(req.output) >= req.max_new:
+                self._finish_slot(i, FinishReason.MAX_NEW)
+            elif s.pos >= self.max_len:
+                self._finish_slot(i, FinishReason.MAX_LEN)
+            elif out_of_room:
+                self._finish_slot(i, FinishReason.TRUNCATED)
+        self._flush_health(health, t0, ran_device_step=True)
+        return self.active
+
+    def _step_speculative(self) -> int:
+        """One speculative verify step across all slots: a (B, k+1) token
+        window through `verify_step_paged` in ONE launch, then host-side
+        greedy-exact acceptance.
+
+        Window layout per active slot (S = speculate+1 rows, padded with
+        zeros — pad rows write into future positions of the slot's own
+        reserved pages or the dump page, both dead under the length mask):
+
+          - still prefilling: the next up-to-S prompt tokens, forced
+            (accepted by construction, like chunked prefill but through
+            the verify kernel).  If the window reaches the LAST prompt
+            row, up to k drafts ride behind it — the first emission and
+            its speculation share the launch.
+          - decoding: row 0 is the committed last output token, rows
+            1..k the drafter's proposals.
+
+        Acceptance publishes by advancing s.pos/pool length over rows
+        whose fed token is committed; a rejected draft's K/V rows are
+        simply never published — the zero-copy rollback (pages were
+        reserved worst-case at admission, so no page ever moves).  Every
+        finish path, the prefix-cache publish point, the non-finite
+        quarantine and the retry policy mirror the plain step exactly, so
+        the emitted argmax stream is bitwise-identical to speculate=0."""
+        now = self.steps_run
+        health = StepHealth(step=now)
+        t0 = time.perf_counter()
+        if self.chaos is not None:
+            self.chaos.begin_step(now, self.pool)
+        self._expire_running(health)
+        self._admit(health)
+        health.active = self.active
+        health.queued = len(self.queue)
+        health.pages_free = self.pool.pages_free
+        if self.active == 0:
+            self._flush_health(health, t0, ran_device_step=False)
+            return 0
+        S = self.speculate + 1
+        tokens = np.zeros((self.B, S), np.int32)
+        index = np.zeros((self.B,), np.int32)
+        lengths = np.zeros((self.B,), np.int32)
+        meta = {}
+        for i, s in enumerate(self.slots):
+            if s.free:
+                continue
+            req = s.req
+            cap = len(self.pool.owned(i)) * self.page_size
+            was_prefill = s.prompt_left > 0
+            if was_prefill:
+                start = len(s.seq) - s.prompt_left
+                take = min(S, s.prompt_left, cap - s.pos)
+                tokens[i, :take] = s.seq[start:start + take]
+                completes = take == s.prompt_left
+            else:
+                take = 1
+                tokens[i, 0] = req.output[-1]
+                completes = True
+            kd = 0
+            drafts = ()
+            if completes:
+                # drafts must stay inside the reservation, max_len and the
+                # max_new budget — the clamp is what makes every finish
+                # path land on the same token it lands on without
+                # speculation (and "draft longer than remaining room"
+                # degrade to a shorter window instead of corrupting pages)
+                kd = max(0, min(S - take,
+                                min(cap, self.max_len) - s.pos - take,
+                                req.remaining_new() - 1))
+                if kd > 0:
+                    prop = np.asarray(
+                        self.drafter.propose(req.sequence(), kd),
+                        np.int32).reshape(-1)[:kd]
+                    kd = int(prop.size)
+                    if kd:
+                        tokens[i, take:take + kd] = prop
+                    drafts = tuple(int(t) for t in prop)
+            index[i] = s.pos
+            # the kernel's row-r mask is kpos <= lengths-S+r: passing
+            # pos+S makes row r attend exactly through its own position
+            lengths[i] = s.pos + S
+            meta[i] = (take, kd, drafts, completes, was_prefill, cap)
+        fail = self.chaos.wants_failure(now) if self.chaos else False
+        deepest = max(s.pos for s in self.slots if not s.free)
+        # window rows reach position pos+S-1, so the table must cover one
+        # window past the deepest slot (entries past a slot's owned pages
+        # render as the dump page — pad-row writes land there harmlessly)
+        w = _next_pow2(self.pool.pages_for(deepest + S))
+        table = self.pool.page_table(self.B, w)
+        (logits, self.cache), health.retries = self._device_step(
+            (self.params, jnp.asarray(tokens), self.cache,
+             jnp.asarray(index), jnp.asarray(table), jnp.asarray(lengths)),
+            fail, fn=self._verify)
+        self.spec.launches += 1
+        rows = np.asarray(jnp.argmax(logits, axis=-1), np.int32)  # (B, S)
+        finite = None
+        if self.guard:
+            host = np.array(logits)  # copy: poisoning writes into it
+            if self.chaos is not None:
+                victim = self.chaos.poison_slot(
+                    now, [i for i, s in enumerate(self.slots) if not s.free])
+                if victim is not None:
+                    host[victim] = np.nan
+            finite = np.isfinite(host).all(axis=-1)  # (B, S)
+        for i, s in enumerate(self.slots):
+            if s.free:
+                continue
+            req = s.req
+            take, kd, drafts, completes, was_prefill, cap = meta[i]
+            if finite is not None and not finite[i, :take + kd].all():
+                health.poisoned.append(req.rid)
+                req.log_event("quarantined", now)
+                self._finish_slot(i, FinishReason.FAILED)
+                continue
+            pos0 = s.pos
+            emitted: List[int] = []
+            a = 0  # drafts the model agreed with (pre-EOS-truncation)
+            if completes:
+                emitted = [int(rows[i, take - 1])]
+                for j in range(kd):
+                    if drafts[j] != emitted[-1]:
+                        break
+                    emitted.append(int(rows[i, take + j]))
+                    a += 1
+            hit_eos = False
+            if req.eos_id is not None:
+                for j, t in enumerate(emitted):
+                    if t == req.eos_id:
+                        emitted = emitted[:j + 1]
+                        hit_eos = True
+                        break
+            a_kept = max(len(emitted) - 1, 0)
+            s.pos = pos0 + take + a_kept
+            if was_prefill:
+                s.prompt_left -= take
+            self.pool.set_length(i, s.pos)
+            if kd > 0:
+                self.spec.windows += 1
+                self.spec.drafted += kd
+                self.spec.accepted += a
+                req.log_event(f"speculated:{a}/{kd}", now)
+            self.spec.emitted += len(emitted)
+            out_of_room = s.pos >= cap
+            if not completes:
+                if out_of_room:
+                    self._finish_slot(i, FinishReason.TRUNCATED)
+                continue
+            if was_prefill:
+                req.state = RequestState.DECODE
+                # plain-path publish condition, measured at the position
+                # the LAST PROMPT row landed (accepted drafts beyond it
+                # must not change whether the prefix publishes)
+                if self.prefix is not None and pos0 + take < cap:
+                    self.prefix.insert(s.seq, self.pool.owned(i))
+            req.output.extend(emitted)
+            if req.first_token_at is None:
+                req.first_token_at = now
+                req.log_event("first_token", now)
             if hit_eos:
                 self._finish_slot(i, FinishReason.EOS)
             elif len(req.output) >= req.max_new:

@@ -495,6 +495,11 @@ class DisaggEngine:
         prompt while the handoff is in flight."""
         stage = HANDOFF_SLOT_BASE + w.req.rid
         self.pool_p.transfer(w.slot, stage)
+        # staged freight, not live serving state: report the tokens under
+        # tokens_parked until delivery mounts (or a drop releases) them —
+        # otherwise a dropped-then-rerouted handoff double-counts its
+        # tokens in live_tokens/pages_touched across the episode
+        self.pool_p.park(stage)
         w.req.log_event("prefill_done", now)
         self.handoffs.append(_Handoff(
             req=w.req, wid=w.wid, slot=stage, seq=w.seq, written=w.pos,

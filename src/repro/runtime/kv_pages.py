@@ -62,10 +62,18 @@ class PoolStats:
     pages_free: int
     live_tokens: int
     high_water: int         # max pages_in_use seen since construction
-    pages_touched: int = 0  # sum over slots of ceil(len / page_size)
+    pages_touched: int = 0  # sum over SERVING slots of ceil(len / page_size)
     pages_shared: int = 0   # pages with refcount > 1 (incl. index pins)
     pages_reused: int = 0   # pages mounted from a prefix hit by live slots
     shared_high_water: int = 0
+    # parked reservations (staged disagg handoffs awaiting delivery): their
+    # tokens are done-but-in-flight, not live serving state.  Before the
+    # park split they were folded into live_tokens/pages_touched, so a
+    # handoff that was DROPPED and rerouted counted the same tokens twice
+    # over an episode (once under the dead staging id, once under the
+    # re-prefilled one) and occupancy mixed serving state with freight.
+    tokens_parked: int = 0
+    pages_parked: int = 0
 
     @property
     def utilization(self) -> float:
@@ -105,6 +113,8 @@ class PoolStats:
             "pages_shared": self.pages_shared,
             "pages_reused": self.pages_reused,
             "shared_high_water": self.shared_high_water,
+            "tokens_parked": self.tokens_parked,
+            "pages_parked": self.pages_parked,
             "utilization": self.utilization,
             "occupancy": self.occupancy,
             "reserved_headroom": self.reserved_headroom,
@@ -139,6 +149,7 @@ class PagePool:
         self._owned: Dict[int, List[int]] = {}   # slot -> page ids, in order
         self._lengths: Dict[int, int] = {}       # slot -> live token count
         self._mounted: Dict[int, int] = {}       # slot -> pages mounted shared
+        self._parked: set = set()                # slots staged for handoff
         self._high_water = 0
         self._shared_high_water = 0
 
@@ -301,6 +312,7 @@ class PagePool:
         pages = self._owned.pop(slot, None)
         self._lengths.pop(slot, None)
         self._mounted.pop(slot, None)
+        self._parked.discard(slot)
         if not pages:
             return 0
         freed = 0
@@ -329,8 +341,10 @@ class PagePool:
         refcount changes and no device traffic.  This is the disagg
         handoff primitive: a prefill worker parks its finished pages under
         a staging id so its own slot id is immediately reusable, and the
-        decode side later mounts the same physical pages.  Returns the
-        page list now owned by `dst`."""
+        decode side later mounts the same physical pages.  Parked status
+        does NOT travel: the destination starts as an ordinary (serving)
+        reservation until `park`ed.  Returns the page list now owned by
+        `dst`."""
         if src not in self._owned:
             raise KeyError(f"slot {src} has no reservation")
         if dst in self._owned:
@@ -338,7 +352,25 @@ class PagePool:
         self._owned[dst] = self._owned.pop(src)
         self._lengths[dst] = self._lengths.pop(src, 0)
         self._mounted[dst] = self._mounted.pop(src, 0)
+        self._parked.discard(src)
         return list(self._owned[dst])
+
+    def park(self, slot: int) -> None:
+        """Mark a reservation as PARKED freight — a staged handoff whose
+        tokens are computed but not (yet) live serving state.  Parked
+        reservations keep their pages/refcounts (delivery is a metadata
+        mount) but report under ``tokens_parked``/``pages_parked`` instead
+        of ``live_tokens``/``pages_touched``/``pages_reused``.  Without
+        this split a dropped-then-rerouted handoff double-counts: the dead
+        staging reservation and the re-prefilled copy both report the same
+        tokens as live until the drop's release lands.  `release` and
+        `transfer` clear the mark."""
+        if slot not in self._owned:
+            raise KeyError(f"slot {slot} has no reservation")
+        self._parked.add(slot)
+
+    def parked(self, slot: int) -> bool:
+        return slot in self._parked
 
     # ------------------------------------------------------------------
     # device-facing views
@@ -379,16 +411,23 @@ class PagePool:
         return out
 
     def stats(self) -> PoolStats:
+        serving = {s: ln for s, ln in self._lengths.items()
+                   if s not in self._parked}
+        parked = {s: ln for s, ln in self._lengths.items()
+                  if s in self._parked}
         return PoolStats(
             num_pages=self.num_pages,
             page_size=self.page_size,
             pages_in_use=self.pages_in_use,
             pages_free=len(self._free),
-            live_tokens=sum(self._lengths.values()),
+            live_tokens=sum(serving.values()),
             high_water=self._high_water,
             pages_touched=sum(self.pages_for(ln)
-                              for ln in self._lengths.values()),
+                              for ln in serving.values()),
             pages_shared=self.pages_shared,
-            pages_reused=sum(self._mounted.values()),
+            pages_reused=sum(m for s, m in self._mounted.items()
+                             if s not in self._parked),
             shared_high_water=self._shared_high_water,
+            tokens_parked=sum(parked.values()),
+            pages_parked=sum(self.pages_for(ln) for ln in parked.values()),
         )

@@ -274,3 +274,123 @@ def test_randomized_disagg_chaos_sweep(model_and_params):
         if r.finish_reason in FinishReason.COMPLETED:
             assert r.output == ref[rid].output, (
                 f"{detail}: diverged from fault-free disagg run")
+
+
+# ---------------------------------------------------------------------------
+# pool accounting: structural invariants + the parked-handoff stats split
+# ---------------------------------------------------------------------------
+
+
+def _assert_pool_invariants(pool, index, where):
+    """Structural invariants of the page pool, assertable after ANY step:
+    refcounts conserve against slot ownership + prefix-index pins, the
+    free list is duplicate-free and disjoint from referenced pages, every
+    physical page is accounted exactly once, the per-slot key sets agree,
+    lengths fit reservations, and the serving/parked stats split
+    partitions the total."""
+    from collections import Counter
+
+    expect = Counter()
+    for _slot, pages in pool._owned.items():
+        expect.update(int(p) for p in pages)
+    if index is not None:
+        def walk(level):
+            for node in level.values():
+                expect[int(node.page)] += 1
+                walk(node.children)
+        walk(index._roots)
+    got = Counter({int(p): c for p, c in pool._refs.items()})
+    assert expect == got, (
+        f"{where}: refcount drift "
+        f"{ {p: (expect[p], got[p]) for p in set(expect) | set(got) if expect[p] != got[p]} }")
+    free = list(pool._free)
+    assert len(set(free)) == len(free), f"{where}: free-list duplicates"
+    assert not (set(free) & set(got)), f"{where}: pages both free and refd"
+    assert len(free) + len(set(got)) == pool.num_pages, (
+        f"{where}: page conservation broken")
+    assert set(pool._lengths) == set(pool._owned) == set(pool._mounted), (
+        f"{where}: slot key sets disagree")
+    for slot, ln in pool._lengths.items():
+        assert ln <= len(pool._owned[slot]) * pool.page_size, (
+            f"{where}: slot {slot} length {ln} exceeds reservation")
+    st = pool.stats()
+    assert st.live_tokens + st.tokens_parked == sum(pool._lengths.values()), (
+        f"{where}: serving/parked token split does not partition the total")
+
+
+def test_pool_invariants_and_parked_split_under_drops(model_and_params):
+    """The handoff double-count defect, fixed: a staged handoff (pages
+    transferred to the HANDOFF_SLOT_BASE staging id, awaiting delivery)
+    is PARKED freight — its tokens report under tokens_parked, never as
+    live serving tokens, so a dropped-then-rerouted handoff cannot count
+    the same tokens twice across the episode.  Stepping the shared-pool
+    engine under the chaos drop profile, every structural invariant holds
+    after every step, staged slots are parked while in flight, and the
+    post-drain pool reports zero everywhere."""
+    from repro.runtime.disagg import HANDOFF_SLOT_BASE
+
+    cfg, model, params = model_and_params
+    chaos = ChaosInjector(ChaosConfig(seed=0, handoff_drop_rate=0.3))
+    eng = _engine(model, params, chaos=chaos)
+    for r in _requests(cfg, n=8, seed=1, max_new=3):
+        eng.submit(r)
+    pool, index = eng.pool_p, eng.index_p
+    seen_parked = False
+    for step in range(2000):
+        active = eng.step()
+        _assert_pool_invariants(pool, index, f"step {step}")
+        staged = [s for s in pool._owned if s >= HANDOFF_SLOT_BASE]
+        st = pool.stats()
+        if staged:
+            assert all(pool.parked(s) for s in staged), (
+                f"step {step}: staged handoff slots {staged} not parked")
+            if st.tokens_parked > 0:
+                seen_parked = True
+        else:
+            assert st.tokens_parked == 0 and st.pages_parked == 0
+        if not (active or eng.queue or eng.handoffs
+                or any(w.busy for w in eng.workers)
+                or eng.batcher.queue or eng.batcher.active):
+            break
+    assert seen_parked, "no staged handoff ever carried parked tokens"
+    assert eng.summary()["handoff_drops"] >= 1  # the profile actually bit
+    st = pool.stats()
+    assert st.live_tokens == 0 and st.pages_touched == 0
+    assert st.tokens_parked == 0 and st.pages_parked == 0
+
+
+def test_parked_excluded_from_serving_stats(model_and_params):
+    """Mid-flight: while a handoff sits staged, the pool's serving stats
+    (live_tokens / pages_touched / pages_reused) must exclude it, and the
+    parked side must equal exactly what the staging slot holds.  A
+    fault-free handoff stages and delivers within one engine step, so a
+    deterministic drop (retry waits out a backoff) holds one in flight
+    long enough to observe."""
+    from repro.runtime.disagg import HANDOFF_SLOT_BASE
+
+    cfg, model, params = model_and_params
+    chaos = ChaosInjector(ChaosConfig(seed=0, drop_handoff_at=(2, 3, 4)))
+    eng = _engine(model, params, chaos=chaos)
+    for r in _requests(cfg, n=4, seed=2, max_new=3):
+        eng.submit(r)
+    checked = False
+    for _ in range(2000):
+        active = eng.step()
+        pool = eng.pool_p
+        staged = [s for s in pool._owned if s >= HANDOFF_SLOT_BASE]
+        if staged and not checked:
+            st = pool.stats()
+            want_tokens = sum(pool._lengths[s] for s in staged)
+            want_pages = sum(pool.pages_for(pool._lengths[s])
+                             for s in staged)
+            assert st.tokens_parked == want_tokens > 0
+            assert st.pages_parked == want_pages > 0
+            serving_tokens = sum(ln for s, ln in pool._lengths.items()
+                                 if s not in staged)
+            assert st.live_tokens == serving_tokens
+            checked = True
+        if not (active or eng.queue or eng.handoffs
+                or any(w.busy for w in eng.workers)
+                or eng.batcher.queue or eng.batcher.active):
+            break
+    assert checked, "no handoff was ever observed staged"

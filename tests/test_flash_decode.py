@@ -262,3 +262,116 @@ def test_chunked_prefill_matches_token_stepping():
     lc, _ = model.decode_step(params, nt, chunked, S)
     np.testing.assert_allclose(np.asarray(ld), np.asarray(lc),
                                rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# batched-verify kernel (the S-row speculative window)
+# ---------------------------------------------------------------------------
+
+
+def _verify_setup(rng, B, Hkv, d, ps, W, lengths, S):
+    """Pages are random EVERYWHERE — rows past each slot's live length are
+    stale garbage the masks must keep dead."""
+    P = B * W + 1
+    kp = jnp.asarray(rng.standard_normal((P, ps, Hkv, d)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((P, ps, Hkv, d)), jnp.float32)
+    pool = PagePool(P - 1, ps)
+    for s, ln in enumerate(lengths):
+        if ln > 0:
+            pool.reserve(s, ln)
+            pool.set_length(s, ln)
+    table = jnp.asarray(pool.page_table(B, W))
+    return kp, vp, table, jnp.asarray(pool.lengths(B))
+
+
+def _verify_oracle(q, kp, vp, table, lns, *, k_scale=None, v_scale=None):
+    """paged_prefill_ref at index = lengths - S, with free-slot rows
+    zeroed (the ref's empty-mask softmax is NaN there by construction)."""
+    from repro.kernels.ref import paged_prefill_ref
+
+    S = q.shape[1]
+    ref = paged_prefill_ref(q, kp, vp, table, lns - S,
+                            k_scale=k_scale, v_scale=v_scale)
+    return jnp.where((lns > 0)[:, None, None, None], ref, 0.0)
+
+
+@pytest.mark.parametrize(
+    "B,H,Hkv,d,ps,W,S,lengths",
+    [
+        (2, 4, 4, 16, 8, 3, 4, (9, 17)),       # MHA, ragged, window spans pages
+        (3, 8, 2, 32, 8, 4, 5, (5, 13, 32)),   # GQA groups=4, S > min length? no: 5<=5
+        (4, 6, 3, 8, 4, 4, 5, (12, 0, 5, 16)), # free slot + S > page_size
+        (1, 2, 1, 16, 16, 2, 2, (18,)),        # window crosses page boundary
+    ],
+)
+def test_verify_kernel_matches_prefill_oracle(B, H, Hkv, d, ps, W, S, lengths):
+    from repro.kernels.mx_flash_decode import mx_flash_verify
+
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((B, S, H, d)), jnp.float32)
+    kp, vp, table, lns = _verify_setup(rng, B, Hkv, d, ps, W, lengths, S)
+    out = mx_flash_verify(q, kp, vp, table, lns, interpret=True)
+    ref = _verify_oracle(q, kp, vp, table, lns)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+    for i, ln in enumerate(lengths):
+        if ln == 0:
+            assert np.all(np.asarray(out[i]) == 0.0)
+
+
+def test_verify_s1_matches_decode_kernel():
+    """The degenerate 1-row window IS a decode step: both kernels run the
+    same online softmax over the same steered pages."""
+    from repro.kernels.mx_flash_decode import mx_flash_verify
+
+    rng = np.random.default_rng(2)
+    B, H, Hkv, d, ps, W = 3, 8, 4, 16, 8, 3
+    lengths = (7, 0, 20)
+    q = jnp.asarray(rng.standard_normal((B, H, d)), jnp.float32)
+    kp, vp, table, lns = _verify_setup(rng, B, Hkv, d, ps, W, lengths, 1)
+    ver = mx_flash_verify(q[:, None], kp, vp, table, lns, interpret=True)
+    dec = mx_flash_decode(q, kp, vp, table, lns, interpret=True)
+    np.testing.assert_allclose(np.asarray(ver[:, 0]), np.asarray(dec),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_verify_scaled_pages_match_oracle():
+    """int8-cache layout: the window kernel steers the same per-row scale
+    pages as decode and must match the dequantizing oracle."""
+    from repro.kernels.mx_flash_decode import mx_flash_verify
+
+    rng = np.random.default_rng(3)
+    B, H, Hkv, d, ps, W, S = 2, 4, 2, 16, 8, 3, 3
+    lengths = (11, 24)
+    q = jnp.asarray(rng.standard_normal((B, S, H, d)), jnp.float32)
+    kp, vp, table, lns = _verify_setup(rng, B, Hkv, d, ps, W, lengths, S)
+    P = kp.shape[0]
+    ks = jnp.asarray(rng.uniform(0.5, 2.0, (P, ps, Hkv)), jnp.float32)
+    vs = jnp.asarray(rng.uniform(0.5, 2.0, (P, ps, Hkv)), jnp.float32)
+    out = mx_flash_verify(q, kp, vp, table, lns, k_scale=ks, v_scale=vs,
+                          interpret=True)
+    ref = _verify_oracle(q, kp, vp, table, lns, k_scale=ks, v_scale=vs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_verify_causal_within_window():
+    """Row r must NOT see rows r+1..S-1 of its own window: perturbing a
+    later window position's K/V leaves earlier rows' outputs unchanged."""
+    from repro.kernels.mx_flash_decode import mx_flash_verify
+
+    rng = np.random.default_rng(4)
+    B, H, Hkv, d, ps, W, S = 1, 2, 2, 8, 4, 3, 3
+    lengths = (9,)
+    q = jnp.asarray(rng.standard_normal((B, S, H, d)), jnp.float32)
+    kp, vp, table, lns = _verify_setup(rng, B, Hkv, d, ps, W, lengths, S)
+    base = np.asarray(mx_flash_verify(q, kp, vp, table, lns, interpret=True))
+    # position of the LAST window row is lengths-1 = 8 -> page 2, row 0
+    tbl = np.asarray(table)
+    pg, row = tbl[0, 8 // ps], 8 % ps
+    kp2 = kp.at[pg, row].set(99.0)
+    vp2 = vp.at[pg, row].set(-99.0)
+    pert = np.asarray(mx_flash_verify(q, kp2, vp2, table, lns,
+                                      interpret=True))
+    np.testing.assert_array_equal(pert[:, :2], base[:, :2])
+    assert not np.allclose(pert[:, 2], base[:, 2])

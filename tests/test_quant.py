@@ -24,6 +24,7 @@ from repro.core.precision import (
     NAMED_POLICIES,
     PrecisionPolicy,
     QuantSpec,
+    calibrate_static_scale,
     current_precision,
     resolve_precision,
     use_precision,
@@ -34,6 +35,8 @@ from repro.kernels.mx_matmul import Epilogue, apply_epilogue, dot_f32, mx_matmul
 from repro.kernels.quant import (
     dequantize,
     executed_gemm_bytes,
+    quantize,
+    quantize_int8_stochastic,
     quantize_int8_tensor,
     quantize_operand,
 )
@@ -533,3 +536,121 @@ def test_ring_collective_int8_on_8device_mesh():
                        capture_output=True, timeout=600, env=env)
     assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-3000:]}"
     assert "ALL_RING_QUANT_OK" in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# static-scale calibration (serving decode skips the per-call amax reduce)
+# ---------------------------------------------------------------------------
+
+
+def _reduce_max_count(fn, *args):
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    return sum(str(e.primitive.name) == "reduce_max"
+               for e in jaxpr.jaxpr.eqns)
+
+
+def test_static_scale_validation():
+    with pytest.raises(ValueError):
+        QuantSpec("f32", static_scale=0.5)  # cast-only dtypes take no scale
+    with pytest.raises(ValueError):
+        QuantSpec("int8", static_scale=0.0)
+    with pytest.raises(ValueError):
+        calibrate_static_scale(QuantSpec("bf16"), [jnp.ones((2,))])
+    with pytest.raises(ValueError):
+        calibrate_static_scale(QuantSpec("int8"), [jnp.ones((2,))], margin=0)
+
+
+def test_calibrate_static_scale_deletes_the_reduce():
+    """The whole point of calibration: the traced quantize carries NO amax
+    reduction, and the fixed scale is materialized in the same keepdims
+    layout the dynamic path produces."""
+    x = _rand((24, 40), 3, 2.0)
+    dyn = QuantSpec("int8", "tile")
+    static = calibrate_static_scale(dyn, [x, x * 0.5])
+    assert static.static_scale == pytest.approx(
+        float(jnp.max(jnp.abs(x))) / 127.0)
+    assert _reduce_max_count(lambda v: quantize(v, dyn, axis=1), x) >= 1
+    assert _reduce_max_count(lambda v: quantize(v, static, axis=1), x) == 0
+    q, s = quantize(x, static, axis=1)
+    qd, sd = quantize(x, dyn, axis=1)
+    assert s.shape == sd.shape == (24, 1)
+    assert np.allclose(np.asarray(s), static.static_scale)
+    # per-tensor layout contract too
+    q0, s0 = quantize(x, static, axis=None)
+    assert s0.shape == ()
+    # calibrated on this very tensor: reconstruction matches dynamic
+    # per-tensor quality (the tile path is finer, so only coarse parity)
+    err = float(jnp.abs(dequantize(q, s) - x).max())
+    assert err <= static.static_scale * 0.5 + 1e-6
+
+
+def test_static_scale_saturates_beyond_calibrated_range():
+    """Post-training-calibration semantics: activations beyond the
+    calibrated amax clip at +-qmax instead of stretching the scale."""
+    calib = jnp.ones((4, 8)) * 2.0
+    spec = calibrate_static_scale(QuantSpec("int8", "tensor"), [calib])
+    hot = jnp.full((4, 8), 10.0)  # 5x the calibrated range
+    q, s = quantize(hot, spec, axis=None)
+    assert int(jnp.max(q)) == 127
+    assert float(jnp.max(dequantize(q, s))) == pytest.approx(2.0, rel=0.01)
+    # margin leaves headroom
+    wide = calibrate_static_scale(QuantSpec("int8", "tensor"), [calib],
+                                  margin=1.5)
+    assert wide.static_scale == pytest.approx(2.0 * 1.5 / 127.0)
+
+
+def test_static_scale_rides_quantize_operand():
+    x = _rand((16, 32), 5)
+    spec = calibrate_static_scale(QuantSpec("int8", "tile"), [x])
+    q, s = quantize_operand(x, spec, "a")
+    assert s.shape == (16, 1) and np.allclose(np.asarray(s),
+                                              spec.static_scale)
+    q, s = quantize_operand(x, spec, "b")
+    assert s.shape == (1, 32)
+
+
+# ---------------------------------------------------------------------------
+# stochastic rounding (hypothesis round-trip bias)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(frac=st.floats(0.2, 0.45), seed=st.integers(0, 1000))
+def test_stochastic_rounding_is_unbiased_where_nearest_is_not(frac, seed):
+    """Constant-fractional-part tensors are round-to-nearest's worst case:
+    every element rounds the SAME direction, a systematic bias of `frac`
+    scale units.  Stochastic rounding's per-element errors are zero-mean,
+    so the mean reconstruction error collapses with sqrt(N)."""
+    n = 4096
+    # pin the scale with one sentinel at amax=127 -> scale exactly 1.0,
+    # everything else sits at integer + frac
+    x = np.full((n,), 40.0 + frac, np.float32)
+    x[0] = 127.0
+    x = jnp.asarray(x)
+    qd, sd = quantize(x, QuantSpec("int8", "tensor"), axis=None)
+    det_bias = float(jnp.mean(dequantize(qd, sd)[1:] - x[1:]))
+    assert det_bias == pytest.approx(-frac, abs=1e-3)  # all round down
+    qs, ss = quantize_int8_stochastic(x, jax.random.PRNGKey(seed))
+    assert float(ss) == pytest.approx(1.0)
+    sto_bias = float(jnp.mean(dequantize(qs, ss)[1:] - x[1:]))
+    # 6 sigma of a Bernoulli(frac) mean over n-1 draws
+    assert abs(sto_bias) <= 6.0 * np.sqrt(frac * (1 - frac) / (n - 1))
+    assert abs(sto_bias) < abs(det_bias) / 2
+
+
+def test_stochastic_rounding_pure_in_key_and_clipped():
+    x = _rand((32, 64), 9, 3.0)
+    k0, k1 = jax.random.PRNGKey(0), jax.random.PRNGKey(1)
+    q_a, s_a = quantize_int8_stochastic(x, k0)
+    q_b, s_b = quantize_int8_stochastic(x, k0)
+    assert np.array_equal(np.asarray(q_a), np.asarray(q_b))
+    assert float(s_a) == float(s_b)
+    q_c, _ = quantize_int8_stochastic(x, k1)
+    assert not np.array_equal(np.asarray(q_a), np.asarray(q_c))
+    assert int(jnp.max(q_a)) <= 127 and int(jnp.min(q_a)) >= -127
+    # per-axis granularity mirrors `quantize`
+    q_t, s_t = quantize_int8_stochastic(x, k0, axis=1)
+    assert s_t.shape == (32, 1)
+    # reconstruction stays within one scale unit of the input
+    err = np.abs(np.asarray(dequantize(q_t, s_t) - x))
+    assert (err <= np.asarray(s_t) + 1e-6).all()

@@ -1,0 +1,313 @@
+"""Speculative decoding: drafters, the greedy-exact accept rule, and the
+batched-verify batcher path.
+
+The load-bearing property everywhere: whatever the drafter proposes and
+however the windows are clamped — page boundaries, generation-budget
+tails, preemption, int8 pages, injected faults — the emitted argmax
+stream must be BITWISE-IDENTICAL to plain non-speculative greedy decode.
+Speculation may cost launches, never correctness."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.transfer_model import SpeculativeDecode
+from repro.models import build_model
+from repro.runtime.batcher import ContinuousBatcher, Request
+from repro.runtime.lifecycle import ChaosConfig, ChaosInjector, \
+    FinishReason, RetryPolicy
+from repro.runtime.speculative import (
+    NGramDrafter, SpecStats, TraceDrafter, accept_greedy,
+)
+
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    import jax
+    cfg = get_config("llama3.2-1b-smoke")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _requests(cfg, n=5, seed=0, max_new=6):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        plen = (6, 9, 13)[i % 3]
+        prompt = rng.integers(0, cfg.vocab, plen).astype(np.int32)
+        reqs.append(Request(rid=i, prompt=prompt, max_new=max_new))
+    return reqs
+
+
+def _run(model, params, reqs, *, speculate=0, drafter=None, **kw):
+    base = dict(batch_slots=3, max_len=24, paged=True, page_size=4,
+                prefill_chunk=4)
+    b = ContinuousBatcher(model, params, **{**base, **kw},
+                          speculate=speculate, drafter=drafter)
+    for r in reqs:
+        b.submit(r)
+    b.fin = b.run_to_completion()
+    return b, {rid: (r.finish_reason, tuple(r.output))
+               for rid, r in b.fin.items()}
+
+
+def _traces(reqs, outputs):
+    return [tuple(int(t) for t in r.prompt) + outputs[r.rid][1]
+            for r in reqs]
+
+
+# ---------------------------------------------------------------------------
+# drafters + accept rule (host-side units)
+# ---------------------------------------------------------------------------
+
+
+def test_ngram_drafter_prompt_lookup():
+    d = NGramDrafter(max_n=3)
+    seq = np.asarray([5, 1, 2, 3, 9, 9, 1, 2, 3], np.int32)
+    # trailing 3-gram (1,2,3) matched at position 1; continuation 9, 9, ...
+    assert d.propose(seq, 2).tolist() == [9, 9]
+    # rightmost match wins: the later occurrence's continuation
+    seq = np.asarray([1, 2, 7, 0, 1, 2, 8, 0, 1, 2], np.int32)
+    assert d.propose(seq, 1).tolist() == [8]
+
+
+def test_ngram_drafter_no_match_or_short():
+    d = NGramDrafter()
+    assert d.propose(np.asarray([1, 2, 3], np.int32), 0).size == 0
+    assert d.propose(np.asarray([1], np.int32), 4).size == 0
+    # no earlier occurrence of any trailing n-gram
+    assert d.propose(np.asarray([1, 2, 3, 4], np.int32), 4).size == 0
+
+
+def test_trace_drafter_overlap_and_purity():
+    tr = tuple(range(20))
+    hist = np.arange(8, dtype=np.int32)
+    full = TraceDrafter([tr], overlap=1.0)
+    assert full.propose(hist, 4).tolist() == [8, 9, 10, 11]
+    none = TraceDrafter([tr], overlap=0.0, seed=1)
+    prop = none.propose(hist, 4)
+    assert not np.any(prop == np.asarray([8, 9, 10, 11]))
+    # pure in (seed, history length)
+    again = TraceDrafter([tr], overlap=0.0, seed=1).propose(hist, 4)
+    assert prop.tolist() == again.tolist()
+    # diverged history proposes nothing
+    assert full.propose(np.asarray([3, 1, 4], np.int32), 4).size == 0
+
+
+def test_accept_greedy_chain():
+    # argmax rows: row r is the model's output after consuming rows 0..r
+    rows = [10, 11, 12, 13, 14]
+    # all drafts echo the previous argmax -> full acceptance, k+1 emitted
+    emitted, a = accept_greedy([10, 11, 12, 13], rows)
+    assert emitted == rows and a == 4
+    # first mismatch stops the window; later matches cannot resurrect it
+    emitted, a = accept_greedy([10, 99, 12, 13], rows)
+    assert emitted == [10, 11] and a == 1
+    emitted, a = accept_greedy([99, 11, 12, 13], rows)
+    assert emitted == [10] and a == 0
+    emitted, a = accept_greedy([], rows)
+    assert emitted == [10] and a == 0
+
+
+def test_spec_stats_accounting():
+    s = SpecStats(launches=4, windows=3, drafted=9, accepted=6, emitted=13)
+    assert s.acceptance_rate == pytest.approx(6 / 9)
+    assert s.tokens_per_launch == pytest.approx(13 / 4)
+    d = s.as_dict()
+    assert d["drafted"] == 9 and d["acceptance_rate"] == s.acceptance_rate
+    assert SpecStats().acceptance_rate == 0.0
+    assert SpecStats().tokens_per_launch == 0.0
+
+
+# ---------------------------------------------------------------------------
+# transfer model
+# ---------------------------------------------------------------------------
+
+
+def test_speculative_decode_expected_tokens():
+    m = SpeculativeDecode(k=4)
+    assert m.expected_tokens(1.0) == 5.0
+    assert m.expected_tokens(0.0) == 1.0
+    # closed form == the truncated geometric sum
+    for a in (0.25, 0.5, 0.9):
+        assert m.expected_tokens(a) == pytest.approx(
+            sum(a ** i for i in range(5)))
+    # a free drafter never loses; a paid one needs acceptance to break even
+    assert SpeculativeDecode(k=4).breakeven_alpha() == 0.0
+    paid = SpeculativeDecode(k=4, draft_cost_ratio=0.1)
+    assert paid.launch_cost() == pytest.approx(1.4)
+    assert 0.0 < paid.breakeven_alpha() < 1.0
+    assert paid.speedup(1.0) == pytest.approx(5.0 / 1.4)
+    assert m.weight_reads_per_token(1.0) == pytest.approx(0.2)
+    rep = m.report(alphas=(0.0, 1.0))
+    assert rep["alphas"]["1.00"]["speedup"] == 5.0
+    with pytest.raises(ValueError):
+        SpeculativeDecode(k=0)
+    with pytest.raises(ValueError):
+        m.expected_tokens(1.5)
+
+
+# ---------------------------------------------------------------------------
+# batcher verify path: exactness under every clamp (satellite edge cases)
+# ---------------------------------------------------------------------------
+
+
+def test_speculate_requires_paged(model_and_params):
+    _, model, params = model_and_params
+    with pytest.raises(ValueError):
+        ContinuousBatcher(model, params, batch_slots=2, max_len=16,
+                          speculate=2)
+    with pytest.raises(ValueError):
+        ContinuousBatcher(model, params, batch_slots=2, max_len=16,
+                          paged=True, speculate=-1)
+
+
+def test_k1_degenerate_bitwise_plain(model_and_params):
+    """speculate=1 with a full-overlap drafter is the smallest window —
+    every step verifies exactly one draft — and must reproduce plain
+    decode bitwise."""
+    cfg, model, params = model_and_params
+    reqs = _requests(cfg)
+    _, ref = _run(model, params, _requests(cfg))
+    dr = TraceDrafter(_traces(reqs, ref), overlap=1.0)
+    _, out = _run(model, params, _requests(cfg), speculate=1, drafter=dr)
+    assert out == ref
+
+
+def test_full_acceptance_crosses_page_boundaries(model_and_params):
+    """page_size=4 < window S=5: every fully-accepted window spans a page
+    boundary, so accepted drafts publish K/V rows across pages."""
+    cfg, model, params = model_and_params
+    reqs = _requests(cfg, max_new=8)
+    _, ref = _run(model, params, _requests(cfg, max_new=8))
+    dr = TraceDrafter(_traces(reqs, ref), overlap=1.0)
+    b, out = _run(model, params, _requests(cfg, max_new=8),
+                  speculate=4, drafter=dr)
+    assert out == ref
+    st = b.spec
+    assert st.accepted == st.drafted and st.drafted > 0
+    # at least one window carried a full k=4 draft (5 rows > page_size 4)
+    assert st.accepted >= 4
+
+
+def test_draft_longer_than_remaining_budget(model_and_params):
+    """k much larger than max_new: the window clamp must cap drafts at
+    remaining_new - 1 and the request must finish at exactly max_new."""
+    cfg, model, params = model_and_params
+    reqs = _requests(cfg, max_new=3)
+    _, ref = _run(model, params, _requests(cfg, max_new=3))
+    dr = TraceDrafter(_traces(reqs, ref), overlap=1.0)
+    _, out = _run(model, params, _requests(cfg, max_new=3),
+                  speculate=6, drafter=dr)
+    assert out == ref
+    for reason, toks in out.values():
+        assert len(toks) <= 3
+
+
+def test_int8_kv_pages_parity(model_and_params):
+    """Quantize-on-write int8 pages: accepted drafts publish through the
+    same quantization as plain decode, so outputs stay identical."""
+    from repro.core.precision import QuantSpec
+    cfg, model, params = model_and_params
+    kv = QuantSpec("int8")
+    _, ref = _run(model, params, _requests(cfg), kv_quant=kv)
+    # build traces from the int8 reference (its stream differs from f32)
+    reqs = _requests(cfg)
+    dr = TraceDrafter(_traces(reqs, ref), overlap=1.0)
+    _, out = _run(model, params, _requests(cfg), speculate=3, drafter=dr,
+                  kv_quant=kv)
+    assert out == ref
+
+
+def test_partial_overlap_still_exact(model_and_params):
+    """Corrupted drafts are rejected, never emitted: any overlap level
+    reproduces the reference stream."""
+    cfg, model, params = model_and_params
+    reqs = _requests(cfg)
+    _, ref = _run(model, params, _requests(cfg))
+    for overlap in (0.5, 0.0):
+        dr = TraceDrafter(_traces(reqs, ref), overlap=overlap, seed=7)
+        b, out = _run(model, params, _requests(cfg), speculate=3,
+                      drafter=dr)
+        assert out == ref, f"overlap={overlap}"
+        if overlap == 0.0:
+            assert b.spec.accepted == 0
+
+
+def test_ngram_speculation_exact_and_logged(model_and_params):
+    """The deployable self-speculative config: exact outputs, acceptance
+    stats populated, and per-request `speculated:a/k` lifecycle events."""
+    cfg, model, params = model_and_params
+    _, ref = _run(model, params, _requests(cfg, max_new=8))
+    b, out = _run(model, params, _requests(cfg, max_new=8),
+                  speculate=4, drafter=NGramDrafter())
+    assert out == ref
+    sp = b.spec_stats()
+    assert sp["launches"] > 0 and sp["emitted"] > 0
+    assert 0 <= sp["accepted"] <= sp["drafted"]
+    assert sp["tokens_per_launch"] > 0
+    # events carry the per-window acceptance record when drafts were fed
+    if sp["windows"]:
+        evs = [kind for r in b.fin.values() for kind, _ in r.events]
+        assert any(kind.startswith("speculated:") for kind in evs)
+
+
+def test_spec_stats_none_when_disabled(model_and_params):
+    cfg, model, params = model_and_params
+    b, _ = _run(model, params, _requests(cfg, n=2))
+    assert b.spec_stats() is None
+
+
+def test_preemption_mid_request_stays_exact(model_and_params):
+    """Pool-pressure chaos preempts running requests mid-stream; a
+    preempted-then-resumed request re-prefills its committed tokens and
+    resumes speculating.  COMPLETED requests must match the fault-free
+    plain reference bitwise."""
+    cfg, model, params = model_and_params
+    reqs = _requests(cfg, n=6, max_new=6)
+    _, ref = _run(model, params, _requests(cfg, n=6, max_new=6))
+    dr = TraceDrafter(_traces(reqs, ref), overlap=1.0)
+    chaos = ChaosInjector(ChaosConfig(
+        seed=0, pool_pressure_rate=0.3, pool_pressure_pages=3))
+    b, out = _run(model, params, _requests(cfg, n=6, max_new=6),
+                  speculate=3, drafter=dr, num_pages=14, chaos=chaos,
+                  retry=RetryPolicy(max_retries=3, backoff_s=0.0))
+    hs = b.health_summary()
+    for rid, (reason, toks) in out.items():
+        if reason in FinishReason.COMPLETED:
+            assert (reason, toks) == ref[rid], (
+                f"rid {rid} diverged; health={hs}")
+
+
+@pytest.mark.chaos
+def test_randomized_speculation_chaos_sweep(model_and_params):
+    """Speculation x chaos under a rotating seed (CI sets CHAOS_SEED to
+    the run id): step failures, poisons, pool pressure, and latency
+    spikes against the k-draft verify path.  Every COMPLETED request must
+    match fault-free plain decode bitwise; failures print the seed."""
+    cfg, model, params = model_and_params
+    seed = int(os.environ.get("CHAOS_SEED", "0"))
+    reqs = _requests(cfg, n=6, seed=2, max_new=5)
+    _, ref = _run(model, params, _requests(cfg, n=6, seed=2, max_new=5))
+    # rotate the drafter too: overlap derived from the seed exercises a
+    # different acceptance mix every run
+    overlap = (seed % 5) / 4.0
+    dr = TraceDrafter(_traces(reqs, ref), overlap=overlap, seed=seed)
+    chaos = ChaosInjector(ChaosConfig(
+        seed=seed, step_failure_rate=0.05, poison_rate=0.02,
+        latency_spike_rate=0.05, pool_pressure_rate=0.10,
+        pool_pressure_pages=2))
+    b, out = _run(model, params, _requests(cfg, n=6, seed=2, max_new=5),
+                  speculate=1 + seed % 4, drafter=dr, num_pages=16,
+                  chaos=chaos, retry=RetryPolicy(max_retries=3,
+                                                 backoff_s=0.0))
+    ctx = (f"CHAOS_SEED={seed} overlap={overlap} (reproduce with this "
+           f"env var); chaos={chaos.summary()}")
+    assert set(out) == set(ref), ctx
+    for rid, (reason, toks) in out.items():
+        assert reason in FinishReason.ALL, f"{ctx}; rid {rid}"
+        if reason in FinishReason.COMPLETED:
+            assert (reason, toks) == ref[rid], (
+                f"{ctx}; rid {rid} diverged from fault-free plain decode")
