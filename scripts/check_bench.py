@@ -47,7 +47,7 @@ REPO = Path(__file__).resolve().parent.parent
 DEFAULT_FILES = ("BENCH_quant.json", "BENCH_decode.json",
                  "BENCH_collective.json", "BENCH_prefix.json",
                  "BENCH_chaos.json", "BENCH_serve.json",
-                 "BENCH_spec.json")
+                 "BENCH_spec.json", "BENCH_abft.json")
 
 EXACT_TOL = 0.01
 TIMING_TOL = 0.25

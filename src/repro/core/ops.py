@@ -40,7 +40,10 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from ..kernels import abft as abft_mod
+from ..kernels.abft import AbftConfig, SDCError
 from ..kernels.baseline_matmul import baseline_matmul
 from ..kernels.mx_grouped_matmul import (
     grouped_matmul_reference,
@@ -171,6 +174,200 @@ def _effective_precision(prec, a_dtype, b_dtype) -> Optional[PrecisionPolicy]:
     return prec
 
 
+def _resolve_abft(abft) -> Optional[AbftConfig]:
+    """Per-call ``abft=`` wins (True -> defaults, False -> force off, or an
+    explicit AbftConfig); otherwise the ambient use_abft() context.  ABFT
+    rides the Pallas fused write-back, so it engages only on the pallas_mx
+    backend — the xla/baseline reference paths have no single write-back
+    to verify in."""
+    if abft is False:
+        return None
+    if abft is None:
+        return abft_mod.current_abft()
+    if abft is True:
+        return AbftConfig()
+    return abft
+
+
+def _pad_rc(arr, r: int, c: int):
+    """Zero-pad a 2-D array up to (r, c) — the same zero padding _pad_to
+    applies inside the kernel wrappers, so a tile recompute sees exactly
+    the padded blocks the full launch saw (bitwise-identical FMA stream)."""
+    pr, pc = r - arr.shape[0], c - arr.shape[1]
+    if pr or pc:
+        arr = jnp.pad(arr, ((0, pr), (0, pc)))
+    return arr
+
+
+def _abft_fused_gemm(x2, w, *, ep, bias, residual, w_gate, a_s, b_s, bg_s,
+                     plan, out_dtype, interpret, cfg: AbftConfig):
+    """One checksummed fused GEMM + the recovery protocol.
+
+    The kernel verifies every output tile inside its final-k write-back
+    and returns a (grid_m, grid_n) flag map.  Eagerly, flagged tiles are
+    localized and recomputed ALONE — the re-launch slices the padded
+    operand panels for just that tile, runs the identical (bm, bn, nk)
+    program, and is therefore bitwise equal to what the fault-free launch
+    would have written — with ``cfg.max_retries`` attempts before the
+    typed SDCError.  Under a jit trace there is no host to localize on:
+    recovery is a lax.cond that re-runs the clean GEMM iff any tile
+    flagged (the common flag-free case pays only the compare).
+
+    ``cfg.fault`` (tests / chaos) injects a transient corruption into the
+    first attempt's write-back; retries always run clean."""
+    M, K = x2.shape
+    N = w.shape[-1]
+    bm_, bn_ = min(plan.bm, M), min(plan.bn, N)
+    gm, gn = -(-M // bm_), -(-N // bn_)
+    spec = abft_mod.make_abft_spec(x2.dtype, w.dtype, K, bm_, bn_)
+    base_kw = dict(epilogue=ep, b_gate=w_gate, bias=bias, residual=residual,
+                   a_scale=a_s, b_scale=b_s, bg_scale=bg_s,
+                   bm=plan.bm, bn=plan.bn, bk=plan.bk,
+                   out_dtype=out_dtype, interpret=interpret)
+    call_spec, fault_kw = spec, {}
+    if cfg.fault is not None:
+        fd, fr, fc = abft_mod.build_fault_operands(cfg.fault, gm, gn, bm_, bn_)
+        call_spec = spec.with_inject(True)
+        fault_kw = dict(fault_delta=fd, fault_row=fr, fault_col=fc)
+    out, flags = mx_matmul_fused(x2, w, abft=call_spec, **fault_kw, **base_kw)
+
+    if isinstance(flags, jax.core.Tracer):
+        # In-graph recovery: no host, no counters — just the cond.  The
+        # clean branch re-runs the whole GEMM, and only executes when a
+        # tile actually flagged.
+        def _clean():
+            return mx_matmul_fused(x2, w, abft=spec, **base_kw)[0]
+
+        return jax.lax.cond(jnp.any(flags > 0), _clean, lambda: out)
+
+    abft_mod._bump("gemms_verified")
+    flagged = [(int(i), int(j)) for i, j in np.argwhere(np.asarray(flags) > 0)]
+    if not flagged:
+        return out
+    abft_mod._bump("tiles_flagged", len(flagged))
+    n_bad = len(flagged)
+    for _attempt in range(cfg.max_retries):
+        still = []
+        for ti, tj in flagged:
+            r0, c0 = ti * bm_, tj * bn_
+            r1, c1 = min(r0 + bm_, M), min(c0 + bn_, N)
+            t_out, t_flags = mx_matmul_fused(
+                _pad_rc(x2[r0:r1], bm_, K),
+                _pad_rc(w[:, c0:c1], K, bn_),
+                epilogue=ep,
+                b_gate=None if w_gate is None else _pad_rc(w_gate[:, c0:c1], K, bn_),
+                bias=None if bias is None else _pad_rc(bias[c0:c1].reshape(1, -1), 1, bn_)[0],
+                residual=None if residual is None else _pad_rc(residual[r0:r1, c0:c1], bm_, bn_),
+                a_scale=None if a_s is None else _pad_rc(a_s[r0:r1], bm_, 1),
+                b_scale=None if b_s is None else _pad_rc(b_s[:, c0:c1], 1, bn_),
+                bg_scale=None if bg_s is None else _pad_rc(bg_s[:, c0:c1], 1, bn_),
+                bm=bm_, bn=bn_, bk=plan.bk,
+                out_dtype=out_dtype, interpret=interpret, abft=spec)
+            if int(np.asarray(t_flags)[0, 0]):
+                still.append((ti, tj))
+                continue
+            out = out.at[r0:r1, c0:c1].set(t_out[:r1 - r0, :c1 - c0])
+        flagged = still
+        if not flagged:
+            abft_mod._bump("tiles_recovered", n_bad)
+            return out
+    abft_mod._bump("sdc_errors")
+    raise SDCError(
+        f"SDC persisted in {len(flagged)} tile(s) {flagged} after "
+        f"{cfg.max_retries} recompute attempt(s)",
+        flagged=flagged, attempts=cfg.max_retries)
+
+
+def _abft_grouped_gemm(x, w, group_sizes, *, activation, w_gate, a_s, b_s,
+                       bg_s, plan, out_dtype, interpret, cfg: AbftConfig):
+    """Checksummed grouped GEMM + recovery.  The kernel returns a
+    (row_tiles, col_tiles) flag map; eagerly, each flagged tile is
+    recomputed per OVERLAPPING EXPERT through the plain fused kernel on the
+    same (bm, bn, bk) window — the padded x block, the expert's weight
+    panel, and the epilogue order are identical to what the grouped launch
+    computed, so the recompute is bitwise equal to the fault-free result
+    for every valid row.  A flagged tile whose rows belong to no group
+    (the zero-filled tail) needs no recompute: its output rows are masked
+    to zero regardless of the accumulator.  Traced, recovery is the same
+    lax.cond whole-rerun as the plain path."""
+    T, K = x.shape
+    G, _, N = w.shape
+    bm_, bn_ = min(plan.bm, T), min(plan.bn, N)
+    n_tiles = (T + (-T) % bm_) // bm_
+    grid_n = (N + (-N) % bn_) // bn_
+    spec = abft_mod.make_abft_spec(x.dtype, w.dtype, K, bm_, bn_)
+    base_kw = dict(w_gate=w_gate, activation=activation,
+                   a_scale=a_s, b_scale=b_s, bg_scale=bg_s,
+                   bm=plan.bm, bn=plan.bn, bk=plan.bk,
+                   out_dtype=out_dtype, interpret=interpret)
+    call_spec, fault_kw = spec, {}
+    if cfg.fault is not None:
+        fd, fr, fc = abft_mod.build_fault_operands(
+            cfg.fault, n_tiles, grid_n, bm_, bn_)
+        call_spec = spec.with_inject(True)
+        fault_kw = dict(fault_delta=fd, fault_row=fr, fault_col=fc)
+    out, flags = mx_grouped_matmul(x, w, group_sizes, abft=call_spec,
+                                   **fault_kw, **base_kw)
+
+    if isinstance(flags, jax.core.Tracer):
+        def _clean():
+            return mx_grouped_matmul(x, w, group_sizes, abft=spec,
+                                     **base_kw)[0]
+
+        return jax.lax.cond(jnp.any(flags > 0), _clean, lambda: out)
+
+    abft_mod._bump("gemms_verified")
+    flagged = [(int(i), int(j)) for i, j in np.argwhere(np.asarray(flags) > 0)]
+    if not flagged:
+        return out
+    abft_mod._bump("tiles_flagged", len(flagged))
+    raw = np.asarray(group_sizes).astype(np.int64)
+    ends = np.minimum(np.cumsum(raw), T)
+    starts = np.minimum(np.cumsum(raw) - raw, T)
+    ep = Epilogue(activation=activation, a_scale=a_s is not None,
+                  b_scale=b_s is not None)
+    n_bad = len(flagged)
+    for _attempt in range(cfg.max_retries):
+        still = []
+        for t, j in flagged:
+            r0, c0 = t * bm_, j * bn_
+            r1, c1 = min(r0 + bm_, T), min(c0 + bn_, N)
+            groups = [g for g in range(G)
+                      if max(r0, int(starts[g])) < min(r1, int(ends[g]))]
+            ok = True
+            for g in groups:
+                t_out, t_flags = mx_matmul_fused(
+                    _pad_rc(x[r0:r1], bm_, K),
+                    _pad_rc(w[g, :, c0:c1], K, bn_),
+                    epilogue=ep,
+                    b_gate=(None if w_gate is None
+                            else _pad_rc(w_gate[g, :, c0:c1], K, bn_)),
+                    a_scale=None if a_s is None else _pad_rc(a_s[r0:r1], bm_, 1),
+                    b_scale=(None if b_s is None
+                             else _pad_rc(b_s[g, :, c0:c1], 1, bn_)),
+                    bg_scale=(None if bg_s is None
+                              else _pad_rc(bg_s[g, :, c0:c1], 1, bn_)),
+                    bm=bm_, bn=bn_, bk=plan.bk,
+                    out_dtype=out_dtype, interpret=interpret, abft=spec)
+                if int(np.asarray(t_flags)[0, 0]):
+                    ok = False
+                    break
+                g0, g1 = max(r0, int(starts[g])), min(r1, int(ends[g]))
+                out = out.at[g0:g1, c0:c1].set(
+                    t_out[g0 - r0:g1 - r0, :c1 - c0])
+            if not ok:
+                still.append((t, j))
+        flagged = still
+        if not flagged:
+            abft_mod._bump("tiles_recovered", n_bad)
+            return out
+    abft_mod._bump("sdc_errors")
+    raise SDCError(
+        f"SDC persisted in {len(flagged)} grouped tile(s) {flagged} after "
+        f"{cfg.max_retries} recompute attempt(s)",
+        flagged=flagged, attempts=cfg.max_retries)
+
+
 def _prepare_quantized(x, w, w_gate, prec: PrecisionPolicy):
     """Quantize/cast one linear's operands per the policy.  Returns
     (qa, a_s, qb, b_s, qg, bg_s); scales are None for cast-only specs.
@@ -191,17 +388,20 @@ def matmul(
     policy: Optional[MXPolicy] = None,
     out_dtype=None,
     precision=None,
+    abft=None,
 ) -> jax.Array:
     """D = A @ B through the MX dispatch.  a: (..., M, K), b: (K, N).
     ``precision`` (PrecisionPolicy or registry name; explicit only — the
     ambient use_precision() context applies to linear/grouped_matmul, not
-    to raw matmuls) routes through the quantized path."""
+    to raw matmuls) routes through the quantized path.  ``abft`` (config,
+    True/False, or None for the ambient use_abft() context) turns on the
+    checksummed write-back on the pallas_mx backend."""
     policy = policy or current_policy()
     out_dtype = out_dtype or a.dtype
     prec = _effective_precision(resolve_precision(precision), a.dtype, b.dtype)
     if prec is not None:
         return linear(a, b, None, policy=policy, out_dtype=out_dtype,
-                      precision=prec)
+                      precision=prec, abft=abft)
     if policy.backend == "xla":
         return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(out_dtype)
 
@@ -211,8 +411,15 @@ def matmul(
     plan = policy.plan(M, N, K, a.dtype.itemsize)
     kw = dict(bm=plan.bm, bn=plan.bn, bk=plan.bk, out_dtype=out_dtype,
               interpret=policy.interpret)
+    cfg = _resolve_abft(abft)
     if policy.backend == "pallas_mx":
-        out = mx_matmul_fused(a2, b, **kw)
+        if cfg is not None:
+            out = _abft_fused_gemm(
+                a2, b, ep=Epilogue(), bias=None, residual=None, w_gate=None,
+                a_s=None, b_s=None, bg_s=None, plan=plan,
+                out_dtype=out_dtype, interpret=policy.interpret, cfg=cfg)
+        else:
+            out = mx_matmul_fused(a2, b, **kw)
     else:
         out = baseline_matmul(a2, b, **kw)
     if a.ndim > 2:
@@ -222,7 +429,7 @@ def matmul(
 
 def _collective_linear(
     x, w, b, *, activation, w_gate, residual, out_scale, policy, out_dtype,
-    tp_mode, coll, prec=None,
+    tp_mode, coll, prec=None, abft_cfg: Optional[AbftConfig] = None,
 ):
     """Route one linear through the overlapped ring collective matmul.
 
@@ -281,9 +488,24 @@ def _collective_linear(
                        fused_epilogue_ops=ep.n_fused_ops,
                        b_bytes=w.dtype.itemsize,
                        out_bytes=jnp.dtype(out_dtype).itemsize)
+    cc_abft = None
+    fault_t = None
+    if abft_cfg is not None and policy.backend == "pallas_mx":
+        # Kernel-level checksums for every chunk GEMM; the rings add the
+        # traveling-payload sidecar verification on top.
+        cc_abft = abft_mod.make_abft_spec(
+            x2.dtype, w.dtype, k_loc, min(plan.bm, m_loc), min(plan.bn, n_loc))
+        if abft_cfg.fault is not None:
+            f = abft_cfg.fault
+            # Map the tile fault onto a ring transport fault: the RS ring
+            # only receives from step 1 on, the AG ring verifies every step.
+            step = (f.tile_i % P_ if tp_mode == "allgather"
+                    else 1 + f.tile_i % max(P_ - 1, 1))
+            fault_t = (step, int(f.row), int(f.col), float(f.delta))
     cc = ChunkCompute(
         backend="pallas_mx" if policy.backend == "pallas_mx" else "xla",
         bm=plan.bm, bn=plan.bn, bk=plan.bk, interpret=policy.interpret,
+        abft=cc_abft,
     )
     res2 = None
     if residual is not None:
@@ -308,13 +530,38 @@ def _collective_linear(
     has_bias, has_gate, has_res = (
         b is not None, w_gate is not None, res2 is not None)
     out_spec = P(None, ax) if tp_mode == "allgather" else P(ax, None)
-    caller = _ring_caller(
+    caller_args = (
         coll.mesh, ax, P_, direction, cc, ep, tp_mode,
         has_bias, has_gate, has_res,
         a_s is not None, b_s is not None, bg_s is not None,
         jnp.dtype(out_dtype).name, tuple(in_specs), out_spec,
     )
-    out = caller(*operands)
+    out = _ring_caller(*caller_args, fault_t)(*operands)
+    if cc_abft is not None:
+        out, nflags = out
+        # A clean rerun of the SAME jitted ring executable is deterministic,
+        # so recovery is bitwise equal to the fault-free run.
+        clean = _ring_caller(*caller_args, None)
+        if isinstance(nflags, jax.core.Tracer):
+            out = jax.lax.cond(nflags > 0, lambda: clean(*operands)[0],
+                               lambda: out)
+        else:
+            abft_mod._bump("gemms_verified")
+            n = int(nflags)
+            if n:
+                abft_mod._bump("tiles_flagged", n)
+                for _attempt in range(abft_cfg.max_retries):
+                    out2, nf2 = clean(*operands)
+                    if int(np.asarray(nf2)) == 0:
+                        abft_mod._bump("tiles_recovered", n)
+                        out = out2
+                        break
+                else:
+                    abft_mod._bump("sdc_errors")
+                    raise SDCError(
+                        f"SDC persisted in {tp_mode} ring collective after "
+                        f"{abft_cfg.max_retries} rerun attempt(s)",
+                        flagged=(("ring", n),), attempts=abft_cfg.max_retries)
     if x.ndim > 2:
         out = out.reshape(*lead, x.shape[-2], N)
     return out
@@ -323,10 +570,13 @@ def _collective_linear(
 @functools.lru_cache(maxsize=256)
 def _ring_caller(mesh, ax, P_, direction, cc, ep, tp_mode,
                  has_bias, has_gate, has_res, has_as, has_bs, has_bgs,
-                 out_dtype_name, in_specs, out_spec):
+                 out_dtype_name, in_specs, out_spec, fault=None):
     """Jitted shard_map wrapper for one ring configuration, cached so that
     repeated layers (and eager test calls) reuse one compiled executable
-    instead of re-tracing an eager 8-device ring per call."""
+    instead of re-tracing an eager 8-device ring per call.  With
+    ``cc.abft`` set the rings return (out, n_flags) — the psum'd flag count
+    is replicated, so its out-spec is P()."""
+    from jax.sharding import PartitionSpec as P
     from ..kernels.mx_collective_matmul import (
         ring_allgather_matmul,
         ring_matmul_reduce_scatter,
@@ -345,15 +595,17 @@ def _ring_caller(mesh, ax, P_, direction, cc, ep, tp_mode,
         bg_sc = next(it) if has_bgs else None
         kw = dict(axis_name=ax, axis_size=P_, compute=cc, epilogue=ep,
                   bias=b_s, residual=r_s, out_dtype=out_dtype,
-                  direction=direction, a_scale=a_sc, b_scale=b_sc)
+                  direction=direction, a_scale=a_sc, b_scale=b_sc,
+                  fault=fault)
         if tp_mode == "allgather":
             return ring_allgather_matmul(x_s, w_s, b_gate=g_s,
                                          bg_scale=bg_sc, **kw)
         return ring_matmul_reduce_scatter(x_s, w_s, **kw)
 
+    out_specs = (out_spec, P()) if cc.abft is not None else out_spec
     return jax.jit(_shard_map(
         shard_fn, mesh=mesh, in_specs=in_specs,
-        out_specs=out_spec, check_vma=False,
+        out_specs=out_specs, check_vma=False,
     ))
 
 
@@ -370,6 +622,7 @@ def linear(
     out_dtype=None,
     tp_mode: Optional[str] = None,
     precision=None,
+    abft=None,
 ) -> jax.Array:
     """y = act(x @ w + b) [+ residual] [* out_scale] — the fused-epilogue
     entry point.  x: (..., M, K), w: (K, N), b: (N,), residual broadcastable
@@ -396,6 +649,12 @@ def linear(
     overlapped ring collective matmul (kernels/mx_collective_matmul)
     instead of a serialized collective around a local GEMM; otherwise the
     flag is inert.
+
+    ``abft`` (kernels/abft.AbftConfig, True/False, or None to take the
+    ambient ``use_abft()`` context) verifies the GEMM with checksums fused
+    into the write-back on the pallas_mx backend: flagged tiles are
+    localized and recomputed (bitwise equal to the fault-free result),
+    with a typed SDCError after ``max_retries`` failed recomputes.
     """
     policy = policy or current_policy()
     out_dtype = out_dtype or x.dtype
@@ -419,6 +678,8 @@ def linear(
                 x, w, b, activation=activation, w_gate=w_gate,
                 residual=residual, out_scale=out_scale, policy=policy,
                 out_dtype=out_dtype, tp_mode=tp_mode, coll=coll, prec=prec,
+                abft_cfg=(_resolve_abft(abft)
+                          if policy.backend == "pallas_mx" else None),
             )
             if out is not None:
                 return out
@@ -448,12 +709,19 @@ def linear(
             res2 = jnp.broadcast_to(
                 residual, (*lead, x.shape[-2], N) if lead else (M, N)
             ).reshape(M, N)
-        out = mx_matmul_fused(
-            x2, w, epilogue=ep, b_gate=w_gate, bias=b, residual=res2,
-            a_scale=a_s, b_scale=b_s, bg_scale=bg_s,
-            bm=plan.bm, bn=plan.bn, bk=plan.bk,
-            out_dtype=out_dtype, interpret=policy.interpret,
-        )
+        cfg = _resolve_abft(abft)
+        if cfg is not None:
+            out = _abft_fused_gemm(
+                x2, w, ep=ep, bias=b, residual=res2, w_gate=w_gate,
+                a_s=a_s, b_s=b_s, bg_s=bg_s, plan=plan,
+                out_dtype=out_dtype, interpret=policy.interpret, cfg=cfg)
+        else:
+            out = mx_matmul_fused(
+                x2, w, epilogue=ep, b_gate=w_gate, bias=b, residual=res2,
+                a_scale=a_s, b_scale=b_s, bg_scale=bg_s,
+                bm=plan.bm, bn=plan.bn, bk=plan.bk,
+                out_dtype=out_dtype, interpret=policy.interpret,
+            )
         if x.ndim > 2:
             out = out.reshape(*lead, x.shape[-2], N)
         return out
@@ -491,6 +759,7 @@ def grouped_matmul(
     policy: Optional[MXPolicy] = None,
     out_dtype=None,
     precision=None,
+    abft=None,
 ) -> jax.Array:
     """Ragged grouped GEMM: out[t] = act(x[t] @ w[g(t)]) for rows sorted by
     group.  x: (T, K), w: (G, K, N), group_sizes: (G,).  One kernel launch
@@ -500,6 +769,11 @@ def grouped_matmul(
     quantizes x per token row and w PER EXPERT per output column; the
     (G, 1, N) weight scales are steered to the write-back by the same
     group-offset scalar-prefetch maps as the expert weight blocks.
+
+    ``abft`` (config, True/False, or None for the ambient use_abft()
+    context): per-expert checksummed write-back on the pallas_mx backend,
+    with flagged tiles recomputed per overlapping expert (bitwise equal to
+    the fault-free launch) and a typed SDCError after ``max_retries``.
     """
     policy = policy or current_policy()
     out_dtype = out_dtype or x.dtype
@@ -533,6 +807,12 @@ def grouped_matmul(
                        fused_epilogue_ops=n_fused,
                        b_bytes=w.dtype.itemsize,
                        out_bytes=jnp.dtype(out_dtype).itemsize)
+    cfg = _resolve_abft(abft)
+    if cfg is not None:
+        return _abft_grouped_gemm(
+            x, w, group_sizes, activation=activation, w_gate=w_gate,
+            a_s=a_s, b_s=b_s, bg_s=bg_s, plan=plan, out_dtype=out_dtype,
+            interpret=policy.interpret, cfg=cfg)
     return mx_grouped_matmul(
         x, w, group_sizes, w_gate=w_gate, activation=activation,
         a_scale=a_s, b_scale=b_s, bg_scale=bg_s,

@@ -399,6 +399,96 @@ class PallasGemmTiling:
 
 
 # ---------------------------------------------------------------------------
+# ABFT mapping: checksum-extended GEMM overhead (kernels/abft)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AbftGemm:
+    """Overhead of the checksum-extended GEMM (kernels/abft + the fused
+    kernels' ``abft=`` mode) priced in the transfer model's own units.
+
+    Alongside each (bm, bn) accumulator tile the kernel carries one
+    checksum row (1, bn) and one checksum column (bm, 1) — the classical
+    ABFT extension, accumulated per k step:
+
+        ccol MACs = K * bn          (colsum(a_blk) @ b_blk)
+        crow MACs = K * bm          (a_blk @ rowsum(b_blk))
+        operand reductions = K * (bm + bn) adds (colsum/rowsum)
+
+    per output tile, against the tile's own bm * bn * K main MACs — the
+    relative compute overhead is therefore ~``1/bm + 1/bn`` (~1.6% at
+    128x128), DOUBLED on float payloads, which additionally accumulate
+    |a|/|b| checksums to scale the tolerance (``exact=False``).  The
+    verify itself (row/col sums of the finished tile + compares) is
+    ~2/K relative — it rides the write-back and is counted separately.
+
+    HBM cost is one int32 flag per tile (the second kernel output) plus,
+    only when a fault is being injected (tests/chaos), the three
+    (grid_m, grid_n) fault operands.  VMEM cost is the checksum scratch
+    living next to the accumulator: (bm + bn) f32/int32 entries, doubled
+    for the float |.| pair — which slightly tightens the tile-size budget
+    `PallasGemmTiling.vmem_bytes` prices."""
+
+    bm: int
+    bn: int
+    exact: bool = False
+    inject: bool = False
+    flag_bytes: int = 4
+
+    def tiles(self, p: GemmProblem) -> int:
+        return _ceil_div(p.M, self.bm) * _ceil_div(p.N, self.bn)
+
+    @property
+    def _pairs(self) -> int:
+        """Checksum row/col pairs per tile: value, plus |.| on floats."""
+        return 1 if self.exact else 2
+
+    def checksum_macs(self, p: GemmProblem) -> int:
+        """Extra MACs of the checksum accumulation over the whole GEMM."""
+        per_tile = p.K * (self.bm + self.bn)
+        return self._pairs * self.tiles(p) * per_tile
+
+    def reduction_adds(self, p: GemmProblem) -> int:
+        """colsum/rowsum adds feeding the checksum dots."""
+        return self._pairs * self.tiles(p) * p.K * (self.bm + self.bn)
+
+    def verify_adds(self, p: GemmProblem) -> int:
+        """Write-back compare: row+col sums of each finished tile."""
+        return 2 * self.tiles(p) * self.bm * self.bn
+
+    def overhead_ratio(self, p: GemmProblem) -> float:
+        """Checksum MACs relative to the main GEMM's MACs — the headline
+        number (~(1/bm + 1/bn), x2 float) the README table quotes."""
+        return self.checksum_macs(p) / p.macs
+
+    def extra_hbm_bytes(self, p: GemmProblem) -> int:
+        """Flags always; fault operands only under injection."""
+        n = self.tiles(p)
+        flags = n * self.flag_bytes
+        fault = 3 * n * 4 if self.inject else 0
+        return flags + fault
+
+    def extra_vmem_bytes(self) -> int:
+        """Checksum scratch beside the (bm, bn) accumulator."""
+        return self._pairs * (self.bm + self.bn) * 4
+
+    def report(self, p: GemmProblem) -> dict:
+        return {
+            "bm": self.bm,
+            "bn": self.bn,
+            "exact": self.exact,
+            "tiles": self.tiles(p),
+            "checksum_macs": self.checksum_macs(p),
+            "reduction_adds": self.reduction_adds(p),
+            "verify_adds": self.verify_adds(p),
+            "overhead_ratio": self.overhead_ratio(p),
+            "extra_hbm_bytes": self.extra_hbm_bytes(p),
+            "extra_vmem_bytes": self.extra_vmem_bytes(),
+        }
+
+
+# ---------------------------------------------------------------------------
 # Serving mapping: decode-step KV-cache traffic (dense rectangle vs pages)
 # ---------------------------------------------------------------------------
 

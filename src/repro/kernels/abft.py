@@ -1,0 +1,219 @@
+"""ABFT (algorithm-based fault tolerance) for the MX GEMM engine.
+
+The paper's discipline is: do the expensive work once per tile and fold
+everything else into the single VMEM write-back.  ABFT extends that same
+argument from *throughput* to *integrity*.  Alongside the (bm, bn) f32
+accumulator, the kernel keeps a column-checksum row and a row-checksum
+column:
+
+    ccol[1, bn] += colsum(a_blk) @ b_blk        (one (1,bk)@(bk,bn) dot)
+    crow[bm, 1] += a_blk @ rowsum(b_blk)        (one (bm,bk)@(bk,1) dot)
+
+These are the classical checksum-extended GEMM's extra row/column of the
+output, computed in the association order (sum-then-multiply) that makes
+them *independent* of the main accumulator's order (multiply-then-sum).
+At the final-k write-back — while the finished tile is still resident in
+VMEM — the kernel compares the accumulator's actual row/column sums
+against the checksums and writes a per-tile flag.  A silent bit flip
+anywhere in the (bm, bn) x K product/accumulate stream breaks at least
+one of the two equalities; the verify costs ~(1/bm + 1/bn) extra MACs
+(~1.6% at 128x128, doubled for the float |.|-checksum, see below) and
+zero extra stalls, because it rides the write-back that happens anyway.
+
+Exactness:
+
+  - int8 x int8 payloads accumulate exactly (int32 MACs): checksums live
+    in int32 scratch and the compare is integer equality — zero false
+    positives, zero escapes, valid while ``K * 127^2 < 2^24`` (per-entry
+    f32 accumulator exactness) and checksum magnitudes stay below 2^31.
+  - float payloads (f32/bf16/fp8) round differently along the two
+    association orders, so the compare needs a tolerance.  The kernel
+    additionally accumulates |a| / |b| checksums — the natural scale of
+    the rounding error — and flags when
+    ``|sum(acc) - checksum| > rtol * abs_checksum + atol`` with
+    ``rtol = eps_f32 * (K + max(bm, bn)) * safety``.  bf16/fp8 products
+    are exact in f32 (<= 16 mantissa bits), so the same f32 accumulation
+    bound covers every float payload.  Note fp8 is *verified under this
+    float tolerance*, not the integer-exact path: fp8 sums round, so
+    exact equality is only available to integer payloads.
+
+Scope: the checksums protect the main GEMM accumulator — the raw
+pre-epilogue value.  The epilogue (dequant scales, bias, activation) is
+nonlinear VMEM math verified by the epilogue parity tests instead; a
+swiglu gate accumulator rides the same datapath but carries no checksum
+of its own yet (a straightforward extension: second ccol/crow pair).
+
+Fault injection for testability: the kernel optionally takes per-tile
+fault operands (delta + target row/col, (1, 1)-blocked like the tile
+flags).  The delta is applied to the accumulator at the final k *after*
+checksum accumulation and *before* the compare — i.e. it corrupts the
+write-back exactly where a real SDC would land, and the verify must
+catch it.  With no fault operands the main accumulator datapath is
+untouched, so ``abft=on`` output is bitwise identical to ``abft=off``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Optional
+
+import numpy as np
+
+_EPS_F32 = float(np.finfo(np.float32).eps)
+# Safety factor on the linear rounding-error bound.  The bound itself
+# (eps * chain length) is already pessimistic vs the sqrt(n) random-walk
+# growth of real rounding error, so x8 gives a wide false-positive
+# margin while still catching any flip above the noise floor.
+_RTOL_SAFETY = 8.0
+# Floor for all-zero / denormal tiles where the abs-checksum scale
+# vanishes; any injected flip is many orders of magnitude above this.
+_ATOL = 1e-12
+
+
+class SDCError(RuntimeError):
+    """Silent data corruption detected and NOT recovered within the retry
+    budget.  Carries the flagged tile coordinates and the attempt count so
+    callers (and operators reading serving logs) see where the datapath
+    failed."""
+
+    def __init__(self, msg: str, *, flagged=(), attempts: int = 0):
+        super().__init__(msg)
+        self.flagged = tuple(flagged)
+        self.attempts = attempts
+
+
+@dataclasses.dataclass(frozen=True)
+class AbftSpec:
+    """Static (trace-time) description of the checksum arithmetic for one
+    kernel launch.  Hashable: rides the jit static_argnames of the kernel
+    wrappers.  ``exact`` selects int32 checksum scratch + integer-equality
+    compare; otherwise f32 scratch + the rtol/atol tolerance compare.
+    ``inject`` declares that the fault operands are present."""
+
+    exact: bool
+    rtol: float = 0.0
+    atol: float = 0.0
+    inject: bool = False
+
+    def with_inject(self, inject: bool) -> "AbftSpec":
+        return dataclasses.replace(self, inject=inject)
+
+
+def abft_rtol(K: int, bm: int, bn: int) -> float:
+    """Relative tolerance for the float checksum compare: linear f32
+    rounding bound over the longest accumulation chain (K products plus
+    the bm- or bn-long reduction of the finished tile), times safety."""
+    return _EPS_F32 * (K + max(bm, bn)) * _RTOL_SAFETY
+
+
+def make_abft_spec(a_dtype, b_dtype, K: int, bm: int, bn: int,
+                   *, inject: bool = False) -> AbftSpec:
+    """Spec for a GEMM with the given operand dtypes and tile plan.  The
+    integer-exact path engages iff BOTH payloads are integers (the int8
+    MAC pipe of dot_f32); every float payload shares the f32 tolerance."""
+    exact = (np.issubdtype(np.dtype(a_dtype), np.integer)
+             and np.issubdtype(np.dtype(b_dtype), np.integer))
+    if exact:
+        return AbftSpec(exact=True, inject=inject)
+    return AbftSpec(exact=False, rtol=abft_rtol(K, bm, bn), atol=_ATOL,
+                    inject=inject)
+
+
+@dataclasses.dataclass(frozen=True)
+class TileFault:
+    """One injected corruption: add ``delta`` to accumulator element
+    (row, col) of output tile (tile_i, tile_j).  Coordinates are reduced
+    mod the actual grid/tile sizes at dispatch, so a pure-in-(seed, step)
+    chaos stream can draw them without knowing the GEMM shape."""
+
+    tile_i: int
+    tile_j: int
+    row: int
+    col: int
+    delta: float
+
+
+def build_fault_operands(fault: Optional[TileFault], grid_m: int,
+                         grid_n: int, bm: int, bn: int):
+    """Materialize the (grid_m, grid_n) fault operand arrays the kernel
+    consumes: delta (f32, zero everywhere but the target tile) and the
+    in-tile row/col targets (int32).  None -> None (no operands, and the
+    kernel compiles without the inject path at all)."""
+    if fault is None:
+        return None
+    import jax.numpy as jnp
+
+    ti = int(fault.tile_i) % grid_m
+    tj = int(fault.tile_j) % grid_n
+    delta = jnp.zeros((grid_m, grid_n), jnp.float32).at[ti, tj].set(
+        jnp.float32(fault.delta))
+    row = jnp.full((grid_m, grid_n), int(fault.row) % bm, jnp.int32)
+    col = jnp.full((grid_m, grid_n), int(fault.col) % bn, jnp.int32)
+    return delta, row, col
+
+
+@dataclasses.dataclass(frozen=True)
+class AbftConfig:
+    """Dispatch-level ABFT policy: how many recompute attempts a flagged
+    tile gets before the typed SDCError, and (for tests/chaos) the fault
+    to inject on attempt 0.  Faults are transient — retries always run
+    clean, matching the transient-SDC model ABFT exists for."""
+
+    max_retries: int = 2
+    fault: Optional[TileFault] = None
+
+
+_state = threading.local()
+
+
+def current_abft() -> Optional[AbftConfig]:
+    """Ambient ABFT config installed by use_abft(), or None (off)."""
+    return getattr(_state, "abft", None)
+
+
+class use_abft:
+    """Context manager turning ABFT verification on for every checksummed
+    GEMM dispatched inside the block::
+
+        with use_abft():                          # defaults
+            y = ops.linear(x, w, activation="gelu")
+        with use_abft(AbftConfig(max_retries=1)):  # explicit config
+            ...
+    """
+
+    def __init__(self, config: Optional[AbftConfig] = None):
+        self.config = config if config is not None else AbftConfig()
+        self._prev = None
+
+    def __enter__(self):
+        self._prev = getattr(_state, "abft", None)
+        _state.abft = self.config
+        return self.config
+
+    def __exit__(self, *exc):
+        _state.abft = self._prev
+        return False
+
+
+# Process-wide detection/recovery counters (eager dispatch only: under a
+# jit trace there is no host to count on — recovery happens in-graph and
+# the counters simply do not advance).  reset_abft_stats() between runs.
+_STATS_LOCK = threading.Lock()
+_STATS = {"gemms_verified": 0, "tiles_flagged": 0, "tiles_recovered": 0,
+          "sdc_errors": 0}
+
+
+def abft_stats() -> dict:
+    with _STATS_LOCK:
+        return dict(_STATS)
+
+
+def reset_abft_stats() -> None:
+    with _STATS_LOCK:
+        for k in _STATS:
+            _STATS[k] = 0
+
+
+def _bump(key: str, n: int = 1) -> None:
+    with _STATS_LOCK:
+        _STATS[key] += n

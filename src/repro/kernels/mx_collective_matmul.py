@@ -53,9 +53,39 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from .abft import AbftSpec
 from .mx_matmul import Epilogue, apply_epilogue, dot_f32, mx_matmul_fused
 
 DIRECTIONS = ("fwd", "bwd", "bidir")
+
+# A ring fault (ABFT testing): (step, row, col, delta) — corrupt one element
+# of the TRAVELING payload (the x chunk on the all-gather ring, the partial
+# accumulator on the reduce-scatter ring) on device 0 at the given ring
+# step, after the sidecar closed over the clean bits and before the verify.
+RingFault = Tuple[int, int, int, float]
+
+
+def _ring_colsum(chunk: jax.Array) -> jax.Array:
+    """Checksum sidecar of a traveling payload: its f32 column sums.  The
+    verify recomputes THIS SAME reduction on the received bits — identical
+    op on identical data — so the compare is exact (bitwise determinism),
+    with no tolerance needed for any payload dtype."""
+    return jnp.sum(chunk.astype(jnp.float32), axis=0, keepdims=True)
+
+
+def _ring_fault(arr: jax.Array, idx, fault: Optional[RingFault], step: int):
+    """Apply a ring fault if one targets this step (static: no fault means
+    no graph change at all).  Fires on device 0 only."""
+    if fault is None or step != fault[0]:
+        return arr
+    r, c = fault[1] % arr.shape[0], fault[2] % arr.shape[1]
+    upd = jnp.where(idx == 0, arr[r, c] + jnp.asarray(fault[3], arr.dtype),
+                    arr[r, c])
+    return arr.at[r, c].set(upd)
+
+
+def _sidecar_mismatch(chunk: jax.Array, sidecar: jax.Array) -> jax.Array:
+    return jnp.any(_ring_colsum(chunk) != sidecar).astype(jnp.int32)
 
 
 def ring_perm(axis_size: int, *, reverse: bool = False) -> List[Tuple[int, int]]:
@@ -76,6 +106,10 @@ class ChunkCompute:
     bn: int = 128
     bk: int = 128
     interpret: bool = True
+    # Kernel-level ABFT for each chunk GEMM: with a spec set, raw()/fused()
+    # return (y, n_flagged_tiles) instead of y (pallas_mx backend only; the
+    # xla reference has no tile write-back to verify, so it reports 0).
+    abft: Optional[AbftSpec] = None
 
     def raw(
         self,
@@ -83,24 +117,29 @@ class ChunkCompute:
         b: jax.Array,
         a_scale: Optional[jax.Array] = None,
         b_scale: Optional[jax.Array] = None,
-    ) -> jax.Array:
+    ):
         """Plain chunk GEMM, f32 accumulator, no epilogue (partial sums).
         Quantized chunks are dequantized INTO the partial (scales applied
         at the chunk's write-back), so ring accumulators stay plain f32."""
         if self.backend == "pallas_mx":
             ep = Epilogue(a_scale=a_scale is not None,
                           b_scale=b_scale is not None)
-            return mx_matmul_fused(
+            y = mx_matmul_fused(
                 a, b, epilogue=ep, a_scale=a_scale, b_scale=b_scale,
                 bm=self.bm, bn=self.bn, bk=self.bk,
                 out_dtype=jnp.float32, interpret=self.interpret,
+                abft=self.abft,
             )
+            if self.abft is not None:
+                y, flags = y
+                return y, jnp.sum(flags)
+            return y
         y = dot_f32(a, b)
         if a_scale is not None:
             y = y * a_scale
         if b_scale is not None:
             y = y * b_scale
-        return y
+        return (y, jnp.int32(0)) if self.abft is not None else y
 
     def fused(
         self,
@@ -115,7 +154,7 @@ class ChunkCompute:
         b_scale: Optional[jax.Array] = None,
         bg_scale: Optional[jax.Array] = None,
         out_dtype=None,
-    ) -> jax.Array:
+    ):
         """Chunk GEMM with the epilogue applied in the final-k write-back
         (pallas_mx) or as the equivalent unfused op chain (reference).
         Scale flags are derived from the operands, so callers pass the
@@ -124,18 +163,24 @@ class ChunkCompute:
         epilogue = dataclasses.replace(
             epilogue, a_scale=a_scale is not None, b_scale=b_scale is not None)
         if self.backend == "pallas_mx":
-            return mx_matmul_fused(
+            y = mx_matmul_fused(
                 a, b, epilogue=epilogue, b_gate=b_gate, bias=bias,
                 residual=residual, a_scale=a_scale, b_scale=b_scale,
                 bg_scale=bg_scale, bm=self.bm, bn=self.bn, bk=self.bk,
                 out_dtype=out_dtype, interpret=self.interpret,
+                abft=self.abft,
             )
+            if self.abft is not None:
+                y, flags = y
+                return y, jnp.sum(flags)
+            return y
         y = dot_f32(a, b)
         gate = dot_f32(a, b_gate) if epilogue.has_gate else None
-        return apply_epilogue(y, epilogue, bias=bias, gate=gate,
-                              residual=residual, a_scale=a_scale,
-                              b_scale=b_scale, bg_scale=bg_scale,
-                              out_dtype=out_dtype)
+        y = apply_epilogue(y, epilogue, bias=bias, gate=gate,
+                           residual=residual, a_scale=a_scale,
+                           b_scale=b_scale, bg_scale=bg_scale,
+                           out_dtype=out_dtype)
+        return (y, jnp.int32(0)) if self.abft is not None else y
 
 
 def _check_direction(direction: str) -> None:
@@ -164,6 +209,7 @@ def ring_allgather_matmul(
     bg_scale: Optional[jax.Array] = None,
     out_dtype=None,
     direction: str = "bidir",
+    fault: Optional[RingFault] = None,
 ) -> jax.Array:
     """Per-shard body: out = epilogue(all_gather_M(x) @ w_shard).
 
@@ -179,6 +225,16 @@ def ring_allgather_matmul(
     is m_loc floats per hop, noise next to the m_loc*K payload); the local
     weight-shard scales ``b_scale`` / ``bg_scale`` (1, n_loc) stay
     resident like w_shard itself.
+
+    ABFT (``compute.abft`` set): each x chunk's owner computes a checksum
+    sidecar (f32 column sums) ONCE at step 0; the sidecar travels the ring
+    alongside its chunk exactly like the a_scale sidecar, and every device
+    re-derives the same reduction from the bits it is about to feed the
+    GEMM — an exact compare, since it is the identical op on what should
+    be identical data.  Chunk-GEMM tile flags (kernel checksums) add in.
+    Returns ``(out, n_flags)`` with n_flags psum'd over the ring (so every
+    shard reports the global count).  ``fault`` injects one transport
+    corruption (tests/chaos); fault-free graphs are unchanged.
     """
     _check_direction(direction)
     P = axis_size
@@ -187,6 +243,8 @@ def ring_allgather_matmul(
     out_dtype = out_dtype or x_shard.dtype
     idx = lax.axis_index(axis_name)
     out = jnp.zeros((P * m_loc, n_loc), out_dtype)
+    abft = compute.abft is not None
+    nflags = jnp.int32(0)
 
     def res_rows(start, rows):
         if residual is None:
@@ -199,6 +257,8 @@ def ring_allgather_matmul(
         sf = sb = None
         if a_scale is not None:
             sf, sb = a_scale[:half], a_scale[half:]
+        cs_f = _ring_colsum(fwd) if abft else None
+        cs_b = _ring_colsum(bwd) if abft else None
         perm_f = ring_perm(P)
         perm_b = ring_perm(P, reverse=True)
         for step in range(P):
@@ -210,6 +270,13 @@ def ring_allgather_matmul(
                 if a_scale is not None:  # scale sidecars ride the same hops
                     nxt_sf = lax.ppermute(sf, axis_name, perm_f)
                     nxt_sb = lax.ppermute(sb, axis_name, perm_b)
+                if abft:  # checksum sidecars ride the same hops too
+                    nxt_cf = lax.ppermute(cs_f, axis_name, perm_f)
+                    nxt_cb = lax.ppermute(cs_b, axis_name, perm_b)
+            fwd = _ring_fault(fwd, idx, fault, step)
+            if abft:
+                nflags += _sidecar_mismatch(fwd, cs_f)
+                nflags += _sidecar_mismatch(bwd, cs_b)
             rf = src_f * m_loc
             rb = src_b * m_loc + half
             res = None
@@ -221,17 +288,25 @@ def ring_allgather_matmul(
                 bias=bias, residual=res, b_gate=b_gate, a_scale=a_s,
                 b_scale=b_scale, bg_scale=bg_scale, out_dtype=out_dtype,
             )
+            if abft:
+                y, nf = y
+                nflags += nf
             out = lax.dynamic_update_slice(out, y[:half], (rf, 0))
             out = lax.dynamic_update_slice(out, y[half:], (rb, 0))
             if step < P - 1:
                 fwd, bwd = nxt_f, nxt_b
                 if a_scale is not None:
                     sf, sb = nxt_sf, nxt_sb
+                if abft:
+                    cs_f, cs_b = nxt_cf, nxt_cb
+        if abft:
+            return out, lax.psum(nflags, axis_name)
         return out
 
     perm = ring_perm(P, reverse=(direction == "bwd"))
     chunk = x_shard
     s_chunk = a_scale
+    cs = _ring_colsum(chunk) if abft else None
     for step in range(P):
         # with fwd sends (i -> i+1), after `step` hops we hold (idx - step)'s rows
         src = ((idx - step) if direction != "bwd" else (idx + step)) % P
@@ -239,17 +314,31 @@ def ring_allgather_matmul(
             nxt = lax.ppermute(chunk, axis_name, perm)
             if s_chunk is not None:
                 nxt_s = lax.ppermute(s_chunk, axis_name, perm)
+            if abft:
+                nxt_cs = lax.ppermute(cs, axis_name, perm)
+        chunk = _ring_fault(chunk, idx, fault, step)
+        if abft:
+            # verify the bits about to feed the GEMM against the owner's
+            # sidecar — catches corruption on any hop, or after receipt
+            nflags += _sidecar_mismatch(chunk, cs)
         y = compute.fused(
             chunk, w_shard, epilogue=epilogue, bias=bias,
             residual=res_rows(src * m_loc, m_loc), b_gate=b_gate,
             a_scale=s_chunk, b_scale=b_scale, bg_scale=bg_scale,
             out_dtype=out_dtype,
         )
+        if abft:
+            y, nf = y
+            nflags += nf
         out = lax.dynamic_update_slice(out, y, (src * m_loc, 0))
         if step < P - 1:
             chunk = nxt
             if s_chunk is not None:
                 s_chunk = nxt_s
+            if abft:
+                cs = nxt_cs
+    if abft:
+        return out, lax.psum(nflags, axis_name)
     return out
 
 
@@ -271,6 +360,8 @@ def serialized_allgather_matmul(
     """The unoverlapped reference: all-gather x over M, then one GEMM.
     Quantized x gathers its per-row scales the same way (parity oracle for
     the scale-traveling ring)."""
+    if compute.abft is not None:
+        raise ValueError("serialized references do not support ABFT compute")
     x_full = lax.all_gather(x_shard, axis_name, axis=0, tiled=True)
     a_s = (lax.all_gather(a_scale, axis_name, axis=0, tiled=True)
            if a_scale is not None else None)
@@ -300,6 +391,7 @@ def ring_matmul_reduce_scatter(
     b_scale: Optional[jax.Array] = None,
     out_dtype=None,
     direction: str = "bidir",
+    fault: Optional[RingFault] = None,
 ) -> jax.Array:
     """Per-shard body: out = epilogue(psum(x_shard @ w_shard))[own M-chunk].
 
@@ -320,6 +412,15 @@ def ring_matmul_reduce_scatter(
     partial at its own write-back, so the TRAVELING accumulators are plain
     f32 partial sums — nothing extra rides the ring, and the cross-device
     reduction stays dequantized exactly like the serialized psum.
+
+    ABFT (``compute.abft`` set): the sender re-derives a checksum sidecar
+    (f32 column sums) from each partial accumulator AFTER folding in its
+    own contribution; sidecar and partial travel the same hop, and the
+    receiver recomputes the reduction on the received bits before adding —
+    an exact compare at every hop of the traveling sum.  Chunk-GEMM tile
+    flags (kernel checksums) add in.  Returns ``(out, n_flags)`` with
+    n_flags psum'd over the ring.  ``fault`` injects one corruption into a
+    received partial (step >= 1); fault-free graphs are unchanged.
     """
     _check_direction(direction)
     if epilogue.has_gate:
@@ -333,6 +434,8 @@ def ring_matmul_reduce_scatter(
     m_loc = M // P
     out_dtype = out_dtype or x_shard.dtype
     idx = lax.axis_index(axis_name)
+    abft = compute.abft is not None
+    nflags = jnp.int32(0)
 
     def finish(acc_f32, res):
         """Epilogue on the fully-summed chunk — applied exactly once."""
@@ -359,16 +462,28 @@ def ring_matmul_reduce_scatter(
             return compute.fused(x_rows_, w_shard, epilogue=ep, bias=bias,
                                  residual=extra, a_scale=a_s,
                                  b_scale=b_scale, out_dtype=out_dtype)
-        return finish(compute.raw(x_rows_, w_shard, a_s, b_scale) + acc_in, res)
+        y = compute.raw(x_rows_, w_shard, a_s, b_scale)
+        if abft:
+            y, nf = y
+            return finish(y + acc_in, res), nf
+        return finish(y + acc_in, res)
 
     def x_rows(start, rows):
         return lax.dynamic_slice(x_shard, (start, 0), (rows, k_loc))
+
+    def _done(y):
+        """Final-step return: unpack the fused_final tile flags and attach
+        the ring-wide flag total."""
+        if not abft:
+            return y
+        y, nf = y
+        return y, lax.psum(nflags + nf, axis_name)
 
     if direction == "bidir" and P > 1 and m_loc % 2 == 0:
         half = m_loc // 2
         perm_f = ring_perm(P)
         perm_b = ring_perm(P, reverse=True)
-        acc_f = acc_b = None
+        acc_f = acc_b = cs_f = cs_b = None
         for step in range(P):
             jf = (idx - step - 1) % P  # fwd ring: chunk jf's top half
             jb = (idx + step + 1) % P  # bwd ring: chunk jb's bottom half
@@ -378,32 +493,72 @@ def ring_matmul_reduce_scatter(
             sb = s_rows(jb * m_loc + half, half)
             a_s = None if a_scale is None else jnp.concatenate([sa, sb])
             if step == P - 1:  # jf == jb == idx: fully summed, fuse epilogue
-                acc_in = jnp.concatenate([
-                    lax.ppermute(acc_f, axis_name, perm_f),
-                    lax.ppermute(acc_b, axis_name, perm_b),
-                ])
-                return fused_final(jnp.concatenate([xa, xb]), acc_in,
-                                   residual, a_s)
+                af = lax.ppermute(acc_f, axis_name, perm_f)
+                ab = lax.ppermute(acc_b, axis_name, perm_b)
+                af = _ring_fault(af, idx, fault, step)
+                if abft:
+                    nflags += _sidecar_mismatch(
+                        af, lax.ppermute(cs_f, axis_name, perm_f))
+                    nflags += _sidecar_mismatch(
+                        ab, lax.ppermute(cs_b, axis_name, perm_b))
+                return _done(fused_final(jnp.concatenate([xa, xb]),
+                                         jnp.concatenate([af, ab]),
+                                         residual, a_s))
             y = compute.raw(jnp.concatenate([xa, xb]), w_shard, a_s, b_scale)
+            if abft:
+                y, nf = y
+                nflags += nf
             if step == 0:
                 acc_f, acc_b = y[:half], y[half:]
             else:
-                acc_f = y[:half] + lax.ppermute(acc_f, axis_name, perm_f)
-                acc_b = y[half:] + lax.ppermute(acc_b, axis_name, perm_b)
+                af = lax.ppermute(acc_f, axis_name, perm_f)
+                ab = lax.ppermute(acc_b, axis_name, perm_b)
+                af = _ring_fault(af, idx, fault, step)
+                if abft:
+                    nflags += _sidecar_mismatch(
+                        af, lax.ppermute(cs_f, axis_name, perm_f))
+                    nflags += _sidecar_mismatch(
+                        ab, lax.ppermute(cs_b, axis_name, perm_b))
+                acc_f = y[:half] + af
+                acc_b = y[half:] + ab
+            if abft:
+                # fresh sidecars over the just-updated partials: the NEXT
+                # hop verifies the sum it receives, every hop of the ring
+                cs_f = _ring_colsum(acc_f)
+                cs_b = _ring_colsum(acc_b)
 
     perm = ring_perm(P, reverse=(direction == "bwd"))
     sgn = -1 if direction != "bwd" else 1
-    acc = None
+    acc = cs = None
     for step in range(P):
         j = (idx + sgn * (step + 1)) % P  # chunk handled this step
         xr = x_rows(j * m_loc, m_loc)
         a_s = s_rows(j * m_loc, m_loc)
         if step == P - 1:  # j == idx
-            acc_in = (lax.ppermute(acc, axis_name, perm) if P > 1
-                      else jnp.zeros((m_loc, N), jnp.float32))
-            return fused_final(xr, acc_in, residual, a_s)
+            if P > 1:
+                acc_in = lax.ppermute(acc, axis_name, perm)
+                acc_in = _ring_fault(acc_in, idx, fault, step)
+                if abft:
+                    nflags += _sidecar_mismatch(
+                        acc_in, lax.ppermute(cs, axis_name, perm))
+            else:
+                acc_in = jnp.zeros((m_loc, N), jnp.float32)
+            return _done(fused_final(xr, acc_in, residual, a_s))
         y = compute.raw(xr, w_shard, a_s, b_scale)
-        acc = y if step == 0 else y + lax.ppermute(acc, axis_name, perm)
+        if abft:
+            y, nf = y
+            nflags += nf
+        if step == 0:
+            acc = y
+        else:
+            recv = lax.ppermute(acc, axis_name, perm)
+            recv = _ring_fault(recv, idx, fault, step)
+            if abft:
+                nflags += _sidecar_mismatch(
+                    recv, lax.ppermute(cs, axis_name, perm))
+            acc = y + recv
+        if abft:
+            cs = _ring_colsum(acc)
     raise AssertionError("unreachable: the P-step loop returns at step P-1")
 
 
@@ -424,6 +579,8 @@ def serialized_matmul_psum(
     """The unoverlapped reference: full partial GEMM (dequantized at its
     write-back when quantized), then psum, then epilogue, then slice the
     own M-chunk (psum + slice == reduce-scatter)."""
+    if compute.abft is not None:
+        raise ValueError("serialized references do not support ABFT compute")
     if epilogue.has_gate:
         raise ValueError("swiglu epilogue is not supported on the "
                          "reduce-scatter path (gate needs the full sum)")

@@ -34,7 +34,9 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from ._compat import CompilerParams
-from .mx_matmul import apply_activation, dot_f32
+from .abft import AbftSpec
+from .mx_matmul import (abft_accumulate, abft_inject, abft_scratch,
+                        abft_verify, apply_activation, dot_f32)
 
 
 def make_group_metadata(
@@ -104,6 +106,7 @@ def _grouped_kernel(
     has_gate: bool,
     has_a_scale: bool = False,
     has_b_scale: bool = False,
+    abft: Optional[AbftSpec] = None,
 ):
     it = iter(refs)
     x_ref = next(it)
@@ -112,9 +115,18 @@ def _grouped_kernel(
     as_ref = next(it) if has_a_scale else None
     bs_ref = next(it) if has_b_scale else None
     bgs_ref = next(it) if (has_gate and has_b_scale) else None
+    inject = abft is not None and abft.inject
+    fd_ref = next(it) if inject else None
+    fr_ref = next(it) if inject else None
+    fc_ref = next(it) if inject else None
     o_ref = next(it)
+    flags_ref = next(it) if abft is not None else None
     acc_ref = next(it)
     accg_ref = next(it) if has_gate else None
+    ccol_ref = next(it) if abft is not None else None
+    crow_ref = next(it) if abft is not None else None
+    acol_ref = next(it) if (abft is not None and not abft.exact) else None
+    arow_ref = next(it) if (abft is not None and not abft.exact) else None
 
     l = pl.program_id(1)
     k = pl.program_id(2)
@@ -124,11 +136,24 @@ def _grouped_kernel(
         acc_ref[...] = jnp.zeros_like(acc_ref)
         if accg_ref is not None:
             accg_ref[...] = jnp.zeros_like(accg_ref)
+        if ccol_ref is not None:
+            ccol_ref[...] = jnp.zeros_like(ccol_ref)
+            crow_ref[...] = jnp.zeros_like(crow_ref)
+        if acol_ref is not None:
+            acol_ref[...] = jnp.zeros_like(acol_ref)
+            arow_ref[...] = jnp.zeros_like(arow_ref)
 
     x_blk = x_ref[...]
     acc_ref[...] += dot_f32(x_blk, w_ref[0])
     if accg_ref is not None:
         accg_ref[...] += dot_f32(x_blk, wg_ref[0])
+
+    if ccol_ref is not None:
+        # Per-expert checksums: w_ref is already THIS slot's group weight
+        # block (steered by grp[l]), so the same accumulate helper covers
+        # the ragged case with zero extra steering logic.
+        abft_accumulate(abft, x_blk, w_ref[0], ccol_ref, crow_ref,
+                        acol_ref, arow_ref)
 
     @pl.when(k == nk - 1)
     def _store():
@@ -138,6 +163,18 @@ def _grouped_kernel(
         start = starts_ref[g]
         valid = (rows >= start) & (rows < start + sizes_ref[g])
         acc = acc_ref[...]
+        if inject:
+            acc = abft_inject(acc, fd_ref, fr_ref, fc_ref)
+        if flags_ref is not None:
+            # A straddled row-tile is finished by consecutive slots (one per
+            # group); each visit verifies ITS full accumulator, and the
+            # flags merge exactly like the output block: the first writer
+            # resets, later writers OR into the still-resident flag — so a
+            # corruption caught by the first visit survives the second.
+            flag = abft_verify(abft, acc, ccol_ref, crow_ref,
+                               acol_ref, arow_ref)
+            prev_flag = jnp.where(first_ref[l] == 1, 0, flags_ref[0, 0])
+            flags_ref[0, 0] = prev_flag | flag
         # dequant at the single write-back: per-row activation scales and
         # THIS group's per-column weight scales (steered by grp[l], exactly
         # like the weight blocks themselves).
@@ -165,7 +202,8 @@ def _grouped_kernel(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("activation", "bm", "bn", "bk", "out_dtype", "interpret"),
+    static_argnames=("activation", "bm", "bn", "bk", "out_dtype", "interpret",
+                     "abft"),
 )
 def mx_grouped_matmul(
     x: jax.Array,
@@ -182,7 +220,11 @@ def mx_grouped_matmul(
     bk: int = 128,
     out_dtype=None,
     interpret: bool = False,
-) -> jax.Array:
+    abft: Optional[AbftSpec] = None,
+    fault_delta: Optional[jax.Array] = None,
+    fault_row: Optional[jax.Array] = None,
+    fault_col: Optional[jax.Array] = None,
+):
     """out[t] = act(x[t] @ w[g(t)]):  x: (T, K) rows sorted by group,
     w: (G, K, N), group_sizes: (G,) ints with sum <= T.  Rows beyond
     sum(group_sizes) are zero in the output.  activation == "swiglu" gates
@@ -194,6 +236,13 @@ def mx_grouped_matmul(
     the scale blocks are steered by the same group-offset scalar-prefetch
     maps (grp[l]) that steer the expert weight blocks, so per-expert
     dequant costs no extra launches or gathers.
+
+    ABFT: with ``abft`` set the kernel carries per-expert checksums (the
+    weight block is already steered by grp[l], so the checksum sees exactly
+    the expert the accumulator saw) and returns ``(out, flags)`` with flags
+    shaped (row_tiles, col_tiles) int32.  Straddled tiles OR the per-group
+    visit verdicts.  ``fault_*`` are the optional (row_tiles, col_tiles)
+    injection operands (present iff ``abft.inject``).
     """
     if x.ndim != 2 or w.ndim != 3:
         raise ValueError(f"expected x (T, K), w (G, K, N); got {x.shape}, {w.shape}")
@@ -210,6 +259,9 @@ def mx_grouped_matmul(
         raise ValueError("w_gate must be given iff activation=='swiglu'")
     if (bg_scale is not None) != (has_gate and b_scale is not None):
         raise ValueError("bg_scale must be given iff gated AND b_scale is set")
+    inject = abft is not None and abft.inject
+    if inject != (fault_delta is not None):
+        raise ValueError("fault operands must be given iff abft.inject")
     if a_scale is not None and a_scale.shape != (T, 1):
         raise ValueError(f"a_scale must be (T, 1)=({T}, 1), got {a_scale.shape}")
     if b_scale is not None and b_scale.shape != (G, 1, N):
@@ -264,6 +316,31 @@ def mx_grouped_matmul(
             in_specs.append(bspec)
             operands.append(jnp.pad(bg_scale.astype(jnp.float32),
                                     ((0, 0), (0, 0), (0, (-N) % bn_))))
+    n_tiles = Tp // bm_
+    grid_n = Np // bn_
+    if inject:
+        # Fault operands ride the slot's global row-tile, like x and the
+        # flags: a straddled tile's visits all see the same fault.
+        fspec = pl.BlockSpec(
+            (1, 1), lambda j, l, k, grp, tile, first, st, sz: (tile[l], j))
+        for arr, dt in ((fault_delta, jnp.float32), (fault_row, jnp.int32),
+                        (fault_col, jnp.int32)):
+            if arr.shape != (n_tiles, grid_n):
+                raise ValueError(f"fault operand shape {arr.shape} != tile "
+                                 f"grid ({n_tiles}, {grid_n})")
+            in_specs.append(fspec)
+            operands.append(arr.astype(dt))
+
+    out_specs = pl.BlockSpec(
+        (bm_, bn_), lambda j, l, k, grp, tile, first, st, sz: (tile[l], j)
+    )
+    out_shape = jax.ShapeDtypeStruct((Tp, Np), out_dtype)
+    if abft is not None:
+        out_specs = (out_specs, pl.BlockSpec(
+            (1, 1), lambda j, l, k, grp, tile, first, st, sz: (tile[l], j)))
+        out_shape = (out_shape,
+                     jax.ShapeDtypeStruct((n_tiles, grid_n), jnp.int32))
+        scratch.extend(abft_scratch(abft, bm_, bn_))
 
     kernel = functools.partial(
         _grouped_kernel,
@@ -274,6 +351,7 @@ def mx_grouped_matmul(
         has_gate=has_gate,
         has_a_scale=a_scale is not None,
         has_b_scale=b_scale is not None,
+        abft=abft,
     )
     out = pl.pallas_call(
         kernel,
@@ -281,12 +359,10 @@ def mx_grouped_matmul(
             num_scalar_prefetch=5,
             grid=grid,
             in_specs=in_specs,
-            out_specs=pl.BlockSpec(
-                (bm_, bn_), lambda j, l, k, grp, tile, first, st, sz: (tile[l], j)
-            ),
+            out_specs=out_specs,
             scratch_shapes=scratch,
         ),
-        out_shape=jax.ShapeDtypeStruct((Tp, Np), out_dtype),
+        out_shape=out_shape,
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary", "arbitrary"),
         ),
@@ -296,6 +372,9 @@ def mx_grouped_matmul(
     # the launch: the metadata steers spare dummy slots at the uncovered
     # tail tiles with an empty row mask + first-writer flag, so no
     # post-kernel masking pass (an extra M*N round-trip) is needed.
+    if abft is not None:
+        out, flags = out
+        return out[:T, :N], flags
     return out[:T, :N]
 
 

@@ -39,6 +39,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from ._compat import CompilerParams
+from .abft import AbftSpec
 
 ACTIVATIONS = ("none", "relu", "gelu", "silu", "swiglu")
 
@@ -194,10 +195,79 @@ def apply_epilogue(
     return y if out_dtype is None else y.astype(out_dtype)
 
 
-def _fused_kernel(*refs, nk: int, out_dtype, epilogue: Epilogue):
+def abft_accumulate(abft: AbftSpec, a_blk, b_blk, ccol_ref, crow_ref,
+                    acol_ref, arow_ref) -> None:
+    """One k-step of checksum accumulation: the extra row/column of the
+    checksum-extended GEMM, summed FIRST and multiplied second, so their
+    rounding (and any corruption of the main FMA stream) is independent of
+    the main accumulator.  Shared by the plain and grouped kernel bodies."""
+    cdt = jnp.int32 if abft.exact else jnp.float32
+    a_c = a_blk.astype(cdt)
+    b_c = b_blk.astype(cdt)
+    ccol_ref[...] += jnp.dot(jnp.sum(a_c, axis=0, keepdims=True), b_c,
+                             preferred_element_type=cdt)
+    crow_ref[...] += jnp.dot(a_c, jnp.sum(b_c, axis=1, keepdims=True),
+                             preferred_element_type=cdt)
+    if acol_ref is not None:
+        # |a|/|b| checksums: the scale of legitimate rounding error,
+        # against which the tolerance compare is taken.
+        a_a = jnp.abs(a_c)
+        b_a = jnp.abs(b_c)
+        acol_ref[...] += jnp.dot(jnp.sum(a_a, axis=0, keepdims=True), b_a,
+                                 preferred_element_type=jnp.float32)
+        arow_ref[...] += jnp.dot(a_a, jnp.sum(b_a, axis=1, keepdims=True),
+                                 preferred_element_type=jnp.float32)
+
+
+def abft_inject(acc, fd_ref, fr_ref, fc_ref):
+    """Apply the (1, 1)-blocked fault operands to the finished accumulator:
+    additive delta at one (row, col).  The where() keeps every untargeted
+    element — and the whole tile when delta == 0 — bitwise untouched."""
+    delta = fd_ref[0, 0]
+    rows = jax.lax.broadcasted_iota(jnp.int32, acc.shape, 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, acc.shape, 1)
+    hit = ((rows == fr_ref[0, 0]) & (cols == fc_ref[0, 0])
+           & (delta != 0.0))
+    return jnp.where(hit, acc + delta, acc)
+
+
+def abft_verify(abft: AbftSpec, acc, ccol_ref, crow_ref, acol_ref, arow_ref):
+    """Compare the finished accumulator's row/column sums against the
+    checksums; returns the int32 tile flag (1 = corrupt).  Integer payloads
+    compare exactly; floats against rtol * |.|-checksum + atol."""
+    if abft.exact:
+        ai = acc.astype(jnp.int32)
+        col_bad = jnp.any(jnp.sum(ai, axis=0, keepdims=True) != ccol_ref[...])
+        row_bad = jnp.any(jnp.sum(ai, axis=1, keepdims=True) != crow_ref[...])
+    else:
+        dcol = jnp.abs(jnp.sum(acc, axis=0, keepdims=True) - ccol_ref[...])
+        drow = jnp.abs(jnp.sum(acc, axis=1, keepdims=True) - crow_ref[...])
+        rtol = jnp.float32(abft.rtol)
+        atol = jnp.float32(abft.atol)
+        col_bad = jnp.any(dcol > rtol * acol_ref[...] + atol)
+        row_bad = jnp.any(drow > rtol * arow_ref[...] + atol)
+    return (col_bad | row_bad).astype(jnp.int32)
+
+
+def abft_scratch(abft: Optional[AbftSpec], bm: int, bn: int) -> list:
+    """Checksum scratch buffers for one kernel launch, in the consumption
+    order of the kernel bodies: ccol, crow, [acol, arow]."""
+    if abft is None:
+        return []
+    cdt = jnp.int32 if abft.exact else jnp.float32
+    shapes = [pltpu.VMEM((1, bn), cdt), pltpu.VMEM((bm, 1), cdt)]
+    if not abft.exact:
+        shapes += [pltpu.VMEM((1, bn), jnp.float32),
+                   pltpu.VMEM((bm, 1), jnp.float32)]
+    return shapes
+
+
+def _fused_kernel(*refs, nk: int, out_dtype, epilogue: Epilogue,
+                  abft: Optional[AbftSpec] = None):
     """Kernel body.  refs layout (inputs, outputs, scratch):
     a, b, [b_gate], [a_scale], [b_scale], [bg_scale], [bias], [residual],
-    o, acc, [acc_gate]."""
+    [fault_delta, fault_row, fault_col],
+    o, [flags], acc, [acc_gate], [ccol, crow, [acol, arow]]."""
     it = iter(refs)
     a_ref = next(it)
     b_ref = next(it)
@@ -207,9 +277,18 @@ def _fused_kernel(*refs, nk: int, out_dtype, epilogue: Epilogue):
     bgs_ref = next(it) if (epilogue.has_gate and epilogue.b_scale) else None
     bias_ref = next(it) if epilogue.bias else None
     res_ref = next(it) if epilogue.residual else None
+    inject = abft is not None and abft.inject
+    fd_ref = next(it) if inject else None
+    fr_ref = next(it) if inject else None
+    fc_ref = next(it) if inject else None
     o_ref = next(it)
+    flags_ref = next(it) if abft is not None else None
     acc_ref = next(it)
     accg_ref = next(it) if epilogue.has_gate else None
+    ccol_ref = next(it) if abft is not None else None
+    crow_ref = next(it) if abft is not None else None
+    acol_ref = next(it) if (abft is not None and not abft.exact) else None
+    arow_ref = next(it) if (abft is not None and not abft.exact) else None
 
     k = pl.program_id(2)
 
@@ -218,6 +297,12 @@ def _fused_kernel(*refs, nk: int, out_dtype, epilogue: Epilogue):
         acc_ref[...] = jnp.zeros_like(acc_ref)
         if accg_ref is not None:
             accg_ref[...] = jnp.zeros_like(accg_ref)
+        if ccol_ref is not None:
+            ccol_ref[...] = jnp.zeros_like(ccol_ref)
+            crow_ref[...] = jnp.zeros_like(crow_ref)
+        if acol_ref is not None:
+            acol_ref[...] = jnp.zeros_like(acol_ref)
+            arow_ref[...] = jnp.zeros_like(arow_ref)
 
     # mxfmacc: one systolic-tile FMA chain into the resident accumulator —
     # narrow (int8/fp8) payloads take the multi-precision datapath of
@@ -227,9 +312,21 @@ def _fused_kernel(*refs, nk: int, out_dtype, epilogue: Epilogue):
     if accg_ref is not None:
         accg_ref[...] += dot_f32(a_blk, bg_ref[...])
 
+    if ccol_ref is not None:
+        abft_accumulate(abft, a_blk, b_ref[...], ccol_ref, crow_ref,
+                        acol_ref, arow_ref)
+
     @pl.when(k == nk - 1)
     def _store():  # single write-back, with the epilogue applied in VMEM
         acc = acc_ref[...]
+        if inject:
+            # Injected SDC lands on the finished accumulator AFTER the
+            # checksums closed over the true products and BEFORE the
+            # verify — exactly where a write-back bit flip would strike.
+            acc = abft_inject(acc, fd_ref, fr_ref, fc_ref)
+        if flags_ref is not None:
+            flags_ref[0, 0] = abft_verify(abft, acc, ccol_ref, crow_ref,
+                                          acol_ref, arow_ref)
         # dequant first: scales are constant along K, so applying them to
         # the finished accumulator == applying them per-FMA, at 1/nk cost.
         if as_ref is not None:
@@ -264,7 +361,8 @@ def _pad_to(x: jax.Array, m0: int, m1: int) -> jax.Array:
 
 @functools.partial(
     jax.jit,
-    static_argnames=("epilogue", "bm", "bn", "bk", "out_dtype", "interpret"),
+    static_argnames=("epilogue", "bm", "bn", "bk", "out_dtype", "interpret",
+                     "abft"),
 )
 def mx_matmul_fused(
     a: jax.Array,
@@ -282,7 +380,11 @@ def mx_matmul_fused(
     bk: int = 128,
     out_dtype=None,
     interpret: bool = False,
-) -> jax.Array:
+    abft: Optional[AbftSpec] = None,
+    fault_delta: Optional[jax.Array] = None,
+    fault_row: Optional[jax.Array] = None,
+    fault_col: Optional[jax.Array] = None,
+):
     """D = epilogue(A @ B), with the epilogue fused into the single final-k
     write-back.  a: (M, K), b: (K, N); bias: (N,); residual: (M, N);
     b_gate: (K, N) when epilogue.activation == "swiglu".
@@ -293,6 +395,15 @@ def mx_matmul_fused(
     write-back (see kernels/quant.quantize_operand; per-tensor scales are
     pre-broadcast to the same layout).  out_dtype defaults to a.dtype —
     always pass it explicitly for quantized payloads.
+
+    ABFT: with ``abft`` set (kernels/abft.AbftSpec), the kernel carries
+    checksum accumulators alongside the tile accumulator, verifies the
+    finished tile inside the same final-k write-back, and returns
+    ``(out, flags)`` where flags is the (grid_m, grid_n) int32 per-tile
+    corruption map (0 = verified clean).  The main accumulator datapath is
+    untouched, so the ``out`` payload is bitwise identical to ``abft=None``.
+    ``fault_*`` are the optional (grid_m, grid_n) injection operands built
+    by abft.build_fault_operands (present iff ``abft.inject``).
     """
     if a.ndim != 2 or b.ndim != 2:
         raise ValueError(f"mx_matmul expects 2-D operands, got {a.shape}, {b.shape}")
@@ -309,6 +420,9 @@ def mx_matmul_fused(
     if (bg_scale is not None) != (epilogue.has_gate and epilogue.b_scale):
         raise ValueError("bg_scale must be given iff the epilogue is gated "
                          "AND b_scale is set")
+    inject = abft is not None and abft.inject
+    if inject != (fault_delta is not None):
+        raise ValueError("fault operands must be given iff abft.inject")
     M, K = a.shape
     K2, N = b.shape
     assert K == K2, (a.shape, b.shape)
@@ -351,22 +465,44 @@ def mx_matmul_fused(
     if epilogue.residual:
         in_specs.append(pl.BlockSpec((bm_, bn_), lambda i, j, k: (i, j)))
         operands.append(_pad_to(residual, bm_, bn_))
+    grid_m, grid_n = grid[0], grid[1]
+    if inject:
+        for arr, dt in ((fault_delta, jnp.float32), (fault_row, jnp.int32),
+                        (fault_col, jnp.int32)):
+            if arr.shape != (grid_m, grid_n):
+                raise ValueError(f"fault operand shape {arr.shape} != grid "
+                                 f"({grid_m}, {grid_n})")
+            in_specs.append(pl.BlockSpec((1, 1), lambda i, j, k: (i, j)))
+            operands.append(arr.astype(dt))
+
+    out_specs = pl.BlockSpec((bm_, bn_), lambda i, j, k: (i, j))  # mst.c
+    out_shape = jax.ShapeDtypeStruct((Mp, Np), out_dtype)
+    if abft is not None:
+        out_specs = (out_specs,
+                     pl.BlockSpec((1, 1), lambda i, j, k: (i, j)))
+        out_shape = (out_shape,
+                     jax.ShapeDtypeStruct((grid_m, grid_n), jnp.int32))
+        scratch.extend(abft_scratch(abft, bm_, bn_))
 
     kernel = functools.partial(
-        _fused_kernel, nk=nk, out_dtype=out_dtype, epilogue=epilogue
+        _fused_kernel, nk=nk, out_dtype=out_dtype, epilogue=epilogue,
+        abft=abft,
     )
     out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, k: (i, j)),  # mst.c
-        out_shape=jax.ShapeDtypeStruct((Mp, Np), out_dtype),
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=scratch,
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
     )(*operands)
+    if abft is not None:
+        out, flags = out
+        return out[:M, :N], flags
     return out[:M, :N]
 
 

@@ -39,8 +39,8 @@ from ..core.hlo_census import census
 from ..core.roofline import HBM_BW, ICI_BW, PEAK_FLOPS_BF16, RooflineReport
 from ..core.precision import resolve_precision
 from ..core.transfer_model import (
-    GemmProblem, PagedKVDecode, PallasGemmTiling, RingCollectiveGemm,
-    SharedPrefixPrefill,
+    AbftGemm, GemmProblem, PagedKVDecode, PallasGemmTiling,
+    RingCollectiveGemm, SharedPrefixPrefill,
 )
 from ..launch.mesh import make_production_mesh
 from ..launch.specs import cell_specs
@@ -134,6 +134,36 @@ def quantized_gemm_reports(cfg, tokens_per_step: int) -> dict:
     out["total_hbm_bytes_bf16"] = total_base
     out["total_traffic_credit_bytes"] = total_base - total_q
     out["bytes_ratio"] = total_q / total_base if total_base else 1.0
+    return out
+
+
+def abft_gemm_reports(cfg, tokens_per_step: int) -> dict:
+    """What checksummed GEMMs (kernels/abft, ops ``abft=``) would cost on
+    this config's block projections: the `AbftGemm` overhead model at the
+    kernels' default 128x128 tiling, float-tolerance path (the bf16
+    roofline operating point).  Pure counterfactual — ABFT is a dispatch
+    flag, not a config property — so every dryrun spec carries the price
+    of turning detection on."""
+    M = max(tokens_per_step, 1)
+    d, hd = cfg.d_model, cfg.hd
+    ff = cfg.d_ff or 4 * d
+    gemms = {
+        "qkv": (M, (cfg.n_heads + 2 * cfg.n_kv_heads) * hd, d),
+        "attn_out": (M, d, cfg.n_heads * hd),
+        "mlp_up": (M, 2 * ff if cfg.activation == "silu" else ff, d),
+        "mlp_down": (M, d, ff),
+    }
+    model = AbftGemm(bm=128, bn=128, exact=False)
+    out = {"bm": 128, "bn": 128, "exact": False}
+    macs = extra = 0
+    for gname, (m, n, k) in gemms.items():
+        prob = GemmProblem(m, n, k, 2)
+        rec = model.report(prob)
+        macs += prob.macs
+        extra += rec["checksum_macs"]
+        out[gname] = rec
+    out["total_checksum_macs"] = extra
+    out["total_overhead_ratio"] = extra / macs if macs else 0.0
     return out
 
 
@@ -324,6 +354,7 @@ def lower_cell(arch: str, shape: str, mesh_kind: str, *, extra: dict | None = No
         "collective_gemms": collective_gemm_reports(
             cfg, mesh, specs.tokens_per_step),
         "quantized_gemms": quantized_gemm_reports(cfg, specs.tokens_per_step),
+        "abft_gemms": abft_gemm_reports(cfg, specs.tokens_per_step),
         "paged_kv_decode": (paged_kv_decode_reports(cfg, preset)
                             if specs.kind == "decode" else {}),
         "shared_prefix_prefill": (shared_prefix_reports(cfg, preset)

@@ -87,6 +87,8 @@ def _run_continuous(model, cfg, params, args) -> int:
             latency_spike_rate=args.fault_rate,
             pool_pressure_rate=args.fault_rate / 2 if args.paged else 0.0,
             pool_pressure_pages=2,
+            # SDC bit flips only land where the ABFT guard can catch them
+            bitflip_rate=args.fault_rate if args.abft else 0.0,
         ))
     batcher = ContinuousBatcher(
         model, params, batch_slots=B, max_len=max_len,
@@ -94,7 +96,7 @@ def _run_continuous(model, cfg, params, args) -> int:
         num_pages=num_pages, prefix_cache=args.prefix_cache,
         prefill_chunk=args.prefill_chunk if args.paged else 0,
         chaos=chaos, retry=RetryPolicy(max_retries=3, backoff_s=0.0),
-        speculate=args.speculate, drafter=drafter,
+        speculate=args.speculate, drafter=drafter, abft=args.abft,
     )
     rng = np.random.default_rng(0)
     n_req = 2 * B
@@ -127,6 +129,8 @@ def _run_continuous(model, cfg, params, args) -> int:
         mode += "+chaos"
     if args.speculate:
         mode += f"+spec{args.speculate}"
+    if args.abft:
+        mode += "+abft"
     print(f"continuous batching [{mode} cache]: {len(finished)} requests "
           f"through {B} slots; {total / wall:.1f} tok/s (CPU)")
     if args.paged:
@@ -150,6 +154,13 @@ def _run_continuous(model, cfg, params, args) -> int:
               f"(peak shared {ps['shared_high_water']}), "
               f"{ps['cow_copies']} COW copies, "
               f"{ps['evicted_pages']} pages evicted")
+    if args.abft:
+        hs = batcher.health_summary()
+        flips = (hs["chaos"] or {}).get("bitflips_injected", 0) \
+            if args.chaos else 0
+        print(f"  abft: {hs['abft']['sdc_detected']} SDC detected / "
+              f"{hs['abft']['sdc_corrected']} corrected "
+              f"({flips} bit flips injected)")
     if args.chaos:
         hs = batcher.health_summary()
         print(f"  chaos [seed {args.chaos_seed}]: "
@@ -287,6 +298,13 @@ def main(argv=None):
                          "reasons + per-step health (runtime/lifecycle)")
     ap.add_argument("--chaos-seed", type=int, default=0,
                     help="chaos schedule seed (same seed => same faults)")
+    ap.add_argument("--abft", action="store_true",
+                    help="checksummed serving (implies --continuous): "
+                         "pallas_mx GEMMs verify ABFT checksums at write-"
+                         "back and the host logits copy is checksummed "
+                         "against the device array; with --chaos, seeded "
+                         "SDC bit flips drive the detect/correct path "
+                         "(kernels/abft, runtime/batcher)")
     ap.add_argument("--fault-rate", type=float, default=0.1,
                     help="per-step fault probability under --chaos")
     ap.add_argument("--speculate", type=int, default=0, metavar="K",
@@ -317,6 +335,11 @@ def main(argv=None):
         ap.error("--disagg-migrate requires --disagg N")
     if args.chaos:
         args.continuous = True  # chaos lives in the batcher's step loop
+    if args.abft:
+        args.continuous = True  # the ABFT guard lives in the batcher's step
+        if args.disagg:
+            ap.error("--abft rides the continuous batcher's step loop; "
+                     "combine with --continuous/--paged, not --disagg")
     if args.prefix_cache:
         args.paged = True  # the prefix index lives on the page pool
     if args.disagg:

@@ -77,6 +77,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..kernels.abft import use_abft
 from .fault import DeviceFailure, StragglerDetector
 from .kv_pages import PagePool
 from .lifecycle import (
@@ -140,7 +141,20 @@ class ContinuousBatcher:
     churn.  Slots still prefilling ride the same launch as forced-token
     windows (prompt rows are accepted by construction), so speculation
     composes with chunked prefill, preemption (a resumed request re-enters
-    through prefill windows) and chaos quarantine unchanged."""
+    through prefill windows) and chaos quarantine unchanged.
+
+    ``abft=True`` arms silent-data-corruption detection end to end: the
+    device step traces under `kernels.abft.use_abft()` (every pallas_mx
+    GEMM inside it carries checksum verification + in-graph recovery),
+    and the host logits copy that token derivation reads is checksummed
+    against the device array (identical jnp reduction on both sides, so
+    the compare is exact) — on mismatch the copy is re-fetched clean and
+    the ``sdc_detected`` / ``sdc_corrected`` counters in
+    `health_summary()` advance.  The chaos bitflip stream
+    (`ChaosConfig.bitflip_*`) corrupts exactly that host copy, which is
+    what the chaos suite drives; with no flip injected the checksums
+    agree and the emitted stream is bitwise identical to
+    ``abft=False``."""
 
     def __init__(self, model, params, batch_slots: int, max_len: int,
                  cache_dtype=jnp.float32, *, paged: bool = False,
@@ -155,7 +169,8 @@ class ContinuousBatcher:
                  nonfinite_guard: Optional[bool] = None,
                  straggler: Optional[StragglerDetector] = None,
                  speculate: int = 0,
-                 drafter: Optional[DraftProposer] = None):
+                 drafter: Optional[DraftProposer] = None,
+                 abft: bool = False):
         self.model = model
         self.params = params
         self.B = batch_slots
@@ -202,6 +217,11 @@ class ContinuousBatcher:
         self.speculate = int(speculate)
         self.drafter = (drafter or NGramDrafter()) if self.speculate else None
         self.spec = SpecStats()
+
+        # ABFT (SDC detection) state
+        self.abft = bool(abft)
+        self.sdc_detected = 0
+        self.sdc_corrected = 0
 
         if paged:
             if not getattr(model, "supports_paged", lambda: False)():
@@ -673,6 +693,9 @@ class ContinuousBatcher:
             "stragglers": len(self.watchdog.flagged),
             "finish_reasons": dict(reasons),
             "chaos": self.chaos.summary() if self.chaos else None,
+            "abft": ({"sdc_detected": self.sdc_detected,
+                      "sdc_corrected": self.sdc_corrected}
+                     if self.abft else None),
         }
 
     def _active_width(self) -> int:
@@ -700,6 +723,12 @@ class ContinuousBatcher:
             try:
                 if fail_first and attempts == 0:
                     raise self.chaos.make_failure(self.steps_run)
+                if self.abft:
+                    # ambient config is read at TRACE time, so the first
+                    # call bakes checksummed GEMMs (with in-graph
+                    # recovery) into the jitted executable; reuse is free
+                    with use_abft():
+                        return fn(*args), attempts
                 return fn(*args), attempts
             except DeviceFailure:
                 attempts += 1
@@ -708,6 +737,36 @@ class ContinuousBatcher:
                     raise
                 if self.retry.backoff_s:
                     time.sleep(self.retry.delay(attempts))
+
+    @staticmethod
+    def _logit_checksum(arr) -> np.ndarray:
+        """Per-row f32 sum over the vocab axis, computed through the SAME
+        jnp reduction whether `arr` lives on device or is a host copy —
+        identical data therefore yields bitwise-identical checksums, so
+        the compare below is exact (no tolerance, any dtype)."""
+        return np.asarray(jnp.sum(jnp.asarray(arr).astype(jnp.float32),
+                                  axis=-1))
+
+    def _abft_host_logits(self, device_logits, now: int) -> np.ndarray:
+        """Host copy of the logits token derivation will read, verified
+        against the device array by exact checksum compare.  The chaos
+        bitflip stream corrupts the copy in flight (the host-side SDC
+        surrogate); on mismatch the copy is re-fetched clean — recovery
+        is a re-transfer, bitwise equal to the fault-free copy."""
+        host = np.array(device_logits)
+        if self.chaos is not None:
+            flip = self.chaos.bitflip(now, host.shape)
+            if flip is not None:
+                host[flip[0]] += flip[1]
+        want = self._logit_checksum(device_logits)
+        bad = self._logit_checksum(host) != want
+        if bad.any():
+            n = int(bad.sum())
+            self.sdc_detected += n
+            host = np.array(device_logits)
+            if (self._logit_checksum(host) == want).all():
+                self.sdc_corrected += n
+        return host
 
     def step(self) -> int:
         """One batched decode step across all slots; returns #active slots."""
@@ -754,7 +813,14 @@ class ContinuousBatcher:
             (logits, self.cache), health.retries = self._device_step(
                 (self.params, jnp.asarray(tokens), self.cache,
                  jnp.asarray(index)), fail)
-        next_tok = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
+        if self.abft:
+            # token derivation reads the VERIFIED host copy (np.argmax and
+            # jnp.argmax agree bitwise: both take the first maximal index)
+            last_host = self._abft_host_logits(logits[:, -1], now)
+            next_tok = np.argmax(last_host, axis=-1).astype(np.int32)
+        else:
+            next_tok = np.asarray(jnp.argmax(logits[:, -1], axis=-1),
+                                  np.int32)
         finite = None
         if self.guard:
             last = np.array(logits[:, -1])  # copy: poisoning writes into it
@@ -906,7 +972,11 @@ class ContinuousBatcher:
              jnp.asarray(index), jnp.asarray(table), jnp.asarray(lengths)),
             fail, fn=self._verify)
         self.spec.launches += 1
-        rows = np.asarray(jnp.argmax(logits, axis=-1), np.int32)  # (B, S)
+        if self.abft:
+            win_host = self._abft_host_logits(logits, now)
+            rows = np.argmax(win_host, axis=-1).astype(np.int32)  # (B, S)
+        else:
+            rows = np.asarray(jnp.argmax(logits, axis=-1), np.int32)  # (B, S)
         finite = None
         if self.guard:
             host = np.array(logits)  # copy: poisoning writes into it

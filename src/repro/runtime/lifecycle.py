@@ -152,6 +152,41 @@ class ChaosEvent:
     detail: str = ""
 
 
+class ChaosStream:
+    """Named rng stream ids for `ChaosInjector._rng(step, stream)`.
+
+    Every fault family draws from its own `default_rng([seed, step, id])`
+    stream so schedules are independent: turning one fault on never shifts
+    another's draws.  These ids used to live as bare literals at each call
+    site with only a comment tying them together; any two families sharing
+    an id would silently correlate their schedules, so the ids are
+    centralized here and the no-collision property is asserted at import.
+    """
+
+    STEP_FAILURE = 0    # transient DeviceFailure gate
+    POISON_GATE = 1     # non-finite-logit poisoning gate
+    POISON_VICTIM = 2   # ... victim slot choice
+    LATENCY = 3         # synthetic watchdog latency spike gate
+    PRESSURE = 4        # pool-pressure episode gate
+    KILL_GATE = 5       # disagg worker kill gate
+    KILL_VICTIM = 6     # ... victim worker choice
+    HANG_GATE = 7       # disagg worker hang gate
+    HANG_VICTIM = 8     # ... victim worker choice
+    HANDOFF_DROP = 9    # disagg handoff drop gate
+    BITFLIP_GATE = 10   # SDC bit-flip gate (ABFT chaos stream)
+    BITFLIP_SITE = 11   # ... flip site + sign/magnitude draws
+
+    ALL = (STEP_FAILURE, POISON_GATE, POISON_VICTIM, LATENCY, PRESSURE,
+           KILL_GATE, KILL_VICTIM, HANG_GATE, HANG_VICTIM, HANDOFF_DROP,
+           BITFLIP_GATE, BITFLIP_SITE)
+
+
+# Two families sharing a stream id would correlate their fault schedules
+# (same rng draws); fail loudly at import time, not in a flaky chaos run.
+assert len(set(ChaosStream.ALL)) == len(ChaosStream.ALL), \
+    "ChaosStream ids must be pairwise distinct"
+
+
 @dataclasses.dataclass
 class ChaosConfig:
     """Fault mix.  Rates draw from per-(seed, step) rng streams; the
@@ -177,6 +212,12 @@ class ChaosConfig:
     worker_hang_steps: int = 3         # default hang length (rate path)
     handoff_drop_rate: float = 0.0     # P(a handoff attempt is dropped)
     drop_handoff_at: tuple = ()        # (step, ...) deterministic
+    # ---- SDC bit flips (ABFT detection path; runtime/batcher --abft) ----
+    bitflip_rate: float = 0.0          # P(one SDC bit flip per step)
+    bitflip_at_steps: tuple = ()       # deterministic schedule variant
+    bitflip_exponent: int = 14         # |delta| = 2**e: an exponent-bit-
+    #   flip surrogate, large enough to clear the float-path ABFT
+    #   tolerance at any realistic operand scale (see kernels/abft.py)
 
 
 class ChaosInjector:
@@ -209,35 +250,36 @@ class ChaosInjector:
         self.worker_kills_injected = 0
         self.worker_hangs_injected = 0
         self.handoff_drops_injected = 0
+        self.bitflips_injected = 0
 
     def _rng(self, step: int, stream: int) -> np.random.Generator:
         return np.random.default_rng([self.cfg.seed, int(step), stream])
 
     # ---- pure per-step predicates (shared by the mutating methods and
-    # the plan() inspection view; rng streams: 0 step failure, 1 poison
-    # gate, 2 poison victim, 3 latency, 4 pressure, 5 kill gate, 6 kill
-    # victim, 7 hang gate, 8 hang victim, 9 handoff drop) ----
+    # the plan() inspection view; stream ids are the ChaosStream named
+    # constants — one independent rng stream per fault family) ----
 
     def _wants_step_failure(self, step: int) -> bool:
         return step in self.cfg.fail_at_steps or (
             self.cfg.step_failure_rate > 0
-            and bool(self._rng(step, 0).random()
+            and bool(self._rng(step, ChaosStream.STEP_FAILURE).random()
                      < self.cfg.step_failure_rate))
 
     def _wants_poison(self, step: int) -> bool:
         return step in self.cfg.poison_at_steps or (
             self.cfg.poison_rate > 0
-            and bool(self._rng(step, 1).random() < self.cfg.poison_rate))
+            and bool(self._rng(step, ChaosStream.POISON_GATE).random()
+                     < self.cfg.poison_rate))
 
     def _wants_spike(self, step: int) -> bool:
         return (self.cfg.latency_spike_rate > 0
-                and bool(self._rng(step, 3).random()
+                and bool(self._rng(step, ChaosStream.LATENCY).random()
                          < self.cfg.latency_spike_rate))
 
     def _wants_pressure(self, step: int) -> bool:
         return step in self.cfg.pressure_at_steps or (
             self.cfg.pool_pressure_rate > 0
-            and bool(self._rng(step, 4).random()
+            and bool(self._rng(step, ChaosStream.PRESSURE).random()
                      < self.cfg.pool_pressure_rate))
 
     def _scheduled_kills(self, step: int) -> List[int]:
@@ -245,7 +287,7 @@ class ChaosInjector:
 
     def _wants_worker_kill(self, step: int) -> bool:
         return (self.cfg.worker_kill_rate > 0
-                and bool(self._rng(step, 5).random()
+                and bool(self._rng(step, ChaosStream.KILL_GATE).random()
                          < self.cfg.worker_kill_rate))
 
     def _scheduled_hangs(self, step: int) -> List[Tuple[int, int]]:
@@ -254,14 +296,20 @@ class ChaosInjector:
 
     def _wants_worker_hang(self, step: int) -> bool:
         return (self.cfg.worker_hang_rate > 0
-                and bool(self._rng(step, 7).random()
+                and bool(self._rng(step, ChaosStream.HANG_GATE).random()
                          < self.cfg.worker_hang_rate))
 
     def _wants_handoff_drop(self, step: int) -> bool:
         return step in self.cfg.drop_handoff_at or (
             self.cfg.handoff_drop_rate > 0
-            and bool(self._rng(step, 9).random()
+            and bool(self._rng(step, ChaosStream.HANDOFF_DROP).random()
                      < self.cfg.handoff_drop_rate))
+
+    def _wants_bitflip(self, step: int) -> bool:
+        return step in self.cfg.bitflip_at_steps or (
+            self.cfg.bitflip_rate > 0
+            and bool(self._rng(step, ChaosStream.BITFLIP_GATE).random()
+                     < self.cfg.bitflip_rate))
 
     def plan(self, step: int) -> dict:
         """Pure inspection of the fault schedule for `step`: what WOULD be
@@ -283,6 +331,7 @@ class ChaosInjector:
             "worker_hang": self._wants_worker_hang(step),
             "worker_hang_scheduled": self._scheduled_hangs(step),
             "handoff_drop": self._wants_handoff_drop(step),
+            "bitflip": self._wants_bitflip(step),
         }
 
     # ---- per-step decisions ----
@@ -303,8 +352,8 @@ class ChaosInjector:
         (seed, step) schedule."""
         if not active_slots or not self._wants_poison(step):
             return None
-        victim = int(active_slots[
-            int(self._rng(step, 2).integers(len(active_slots)))])
+        victim = int(active_slots[int(self._rng(
+            step, ChaosStream.POISON_VICTIM).integers(len(active_slots)))])
         self.poisons_injected += 1
         self.events.append(ChaosEvent(step, "poison", f"slot={victim}"))
         return victim
@@ -328,7 +377,8 @@ class ChaosInjector:
         The victim draw is part of the (seed, step) schedule."""
         victims = [w for w in self._scheduled_kills(step) if w in alive]
         if alive and self._wants_worker_kill(step):
-            pick = int(alive[int(self._rng(step, 6).integers(len(alive)))])
+            pick = int(alive[int(self._rng(
+                step, ChaosStream.KILL_VICTIM).integers(len(alive)))])
             if pick not in victims:
                 victims.append(pick)
         for w in victims:
@@ -343,8 +393,8 @@ class ChaosInjector:
         hangs = [(w, n) for (w, n) in self._scheduled_hangs(step)
                  if w in candidates]
         if candidates and self._wants_worker_hang(step):
-            pick = int(candidates[
-                int(self._rng(step, 8).integers(len(candidates)))])
+            pick = int(candidates[int(self._rng(
+                step, ChaosStream.HANG_VICTIM).integers(len(candidates)))])
             if pick not in [w for w, _ in hangs]:
                 hangs.append((pick, self.cfg.worker_hang_steps))
         for w, n in hangs:
@@ -363,6 +413,54 @@ class ChaosInjector:
             self.handoff_drops_injected += 1
             self.events.append(ChaosEvent(step, "handoff_drop"))
         return hit
+
+    # ---- SDC bit flips (the ABFT chaos stream) ----
+
+    def _flip_delta(self, rng: np.random.Generator) -> float:
+        """Signed exponent-bit-flip surrogate: +/- 2**bitflip_exponent.
+        Real SDCs that matter are high-order-bit flips (low-order flips
+        vanish into rounding noise and are below any sound tolerance);
+        the magnitude clears the float-path ABFT tolerance by orders of
+        magnitude at any realistic operand scale."""
+        sign = 1.0 if bool(rng.integers(2)) else -1.0
+        return sign * float(2.0 ** int(self.cfg.bitflip_exponent))
+
+    def bitflip(self, step: int, shape: Tuple[int, ...]):
+        """Corruption for a host-side array of `shape` this step, or None.
+        Returns (index_tuple, delta): the batcher applies the delta to its
+        host logits copy before token derivation, and the ABFT checksum
+        compare against the device array must catch it.  Pure in
+        (seed, step) given the shape."""
+        if not self._wants_bitflip(step) or any(d <= 0 for d in shape):
+            return None
+        rng = self._rng(step, ChaosStream.BITFLIP_SITE)
+        idx = tuple(int(rng.integers(int(d))) for d in shape)
+        delta = self._flip_delta(rng)
+        self.bitflips_injected += 1
+        self.events.append(ChaosEvent(step, "bitflip",
+                                      f"site={idx} delta={delta:g}"))
+        return idx, delta
+
+    def gemm_fault(self, step: int):
+        """`TileFault` to thread into a checksummed GEMM dispatch at this
+        step (attempt 0 only — the transient-SDC model), or None.  Tile
+        and in-tile coordinates are drawn wide and reduced mod the actual
+        grid/tile sizes at dispatch (kernels/abft.build_fault_operands),
+        so the stream needs no knowledge of the GEMM shape."""
+        if not self._wants_bitflip(step):
+            return None
+        from ..kernels.abft import TileFault
+
+        rng = self._rng(step, ChaosStream.BITFLIP_SITE)
+        coords = [int(v) for v in rng.integers(2 ** 16, size=4)]
+        fault = TileFault(coords[0], coords[1], coords[2], coords[3],
+                          self._flip_delta(rng))
+        self.bitflips_injected += 1
+        self.events.append(ChaosEvent(
+            step, "bitflip",
+            f"tile=({fault.tile_i},{fault.tile_j}) "
+            f"rc=({fault.row},{fault.col}) delta={fault.delta:g}"))
+        return fault
 
     # ---- pool-pressure episodes ----
 
@@ -408,5 +506,6 @@ class ChaosInjector:
             "worker_kills_injected": self.worker_kills_injected,
             "worker_hangs_injected": self.worker_hangs_injected,
             "handoff_drops_injected": self.handoff_drops_injected,
+            "bitflips_injected": self.bitflips_injected,
             "events": len(self.events),
         }

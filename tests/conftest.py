@@ -25,6 +25,8 @@ import random
 import sys
 import types
 
+import pytest
+
 
 
 def pytest_configure(config):
@@ -171,3 +173,21 @@ except ImportError:  # pragma: no cover
     _install_hypothesis_fallback()
 else:  # pragma: no cover
     _install_real_hypothesis_controls()
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _bound_compiled_executable_footprint():
+    """Drop jax's compilation caches at module teardown.
+
+    Every unique (shape, dtype, tiling) jitted in the suite keeps a live
+    compiled executable in the CPU backend's JIT for the life of the
+    process; a full-suite run accumulates enough of them that XLA's
+    compiler eventually crashes (segfault inside ``backend_compile``,
+    hundreds of tests in — the crashing compile itself is innocent).
+    Clearing per module trades a little re-trace time for a bounded
+    footprint, so the suite can keep growing without hitting the cliff.
+    """
+    yield
+    import jax
+
+    jax.clear_caches()

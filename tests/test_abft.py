@@ -1,0 +1,520 @@
+"""ABFT checksummed MX GEMM: detection, bitwise recovery, precision
+interplay, chaos streams, and the analytical overhead model.
+
+The contract under test (kernels/abft + the fused kernels' ``abft=`` mode
++ the ops dispatch recovery protocol):
+
+  - with no fault injected, ``abft=on`` output is BITWISE identical to
+    ``abft=off`` and zero tiles flag (no false positives — asserted here
+    per-path and swept by the hypothesis test);
+  - every injected corruption is detected (the kernel flags exactly the
+    corrupted tile) and the recovered output is BITWISE equal to the
+    fault-free run (tile-localized recompute replays the identical
+    padded-block program);
+  - int8 x int8 payloads verify by exact integer equality (a delta of 1
+    is caught); float and mixed payloads verify under the dtype-aware
+    f32 tolerance (a high-exponent flip is caught, rounding noise never
+    flags);
+  - unrecoverable corruption surfaces as the typed SDCError with tile
+    coordinates, never as silently wrong output.
+"""
+import os
+import pathlib
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import ops
+from repro.core.ops import MXPolicy
+from repro.core.transfer_model import AbftGemm, GemmProblem
+from repro.kernels import abft as abft_mod
+from repro.kernels.abft import (
+    AbftConfig, SDCError, TileFault, abft_rtol, abft_stats,
+    build_fault_operands, make_abft_spec, reset_abft_stats, use_abft,
+)
+from repro.kernels.mx_matmul import Epilogue, mx_matmul_fused
+
+PALLAS = MXPolicy(backend="pallas_mx", bm=32, bn=32, bk=32, interpret=True)
+XLA = MXPolicy(backend="xla")
+# An exponent-bit-flip surrogate: orders of magnitude above the float-path
+# tolerance at every operand scale these tests use (low-order flips vanish
+# into rounding noise and are below any sound tolerance by design).
+BIG = 2.0 ** 16
+
+
+def _rand(key, shape, dtype=jnp.float32, scale=1.0):
+    x = jax.random.normal(jax.random.PRNGKey(key), shape) * scale
+    return x.astype(dtype)
+
+
+def _bitwise(got, want, **kw):
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want), **kw)
+
+
+# ---------------------------------------------------------------------------
+# spec / fault-operand / ambient-config units
+# ---------------------------------------------------------------------------
+
+
+def test_spec_selects_exact_iff_both_integer():
+    assert make_abft_spec(jnp.int8, jnp.int8, 64, 32, 32).exact
+    for a, b in ((jnp.float32, jnp.float32), (jnp.bfloat16, jnp.bfloat16),
+                 (jnp.bfloat16, jnp.int8), (jnp.int8, jnp.float32)):
+        s = make_abft_spec(a, b, 64, 32, 32)
+        assert not s.exact
+        assert s.rtol == abft_rtol(64, 32, 32) > 0.0
+        assert s.atol > 0.0
+    # tolerance scales with the accumulation chain length
+    assert abft_rtol(1024, 32, 32) > abft_rtol(64, 32, 32)
+    assert abft_rtol(64, 128, 32) > abft_rtol(64, 32, 32)
+    s = make_abft_spec(jnp.float32, jnp.float32, 64, 32, 32)
+    assert not s.inject and s.with_inject(True).inject
+
+
+def test_fault_operands_reduce_mod_grid_and_tile():
+    ops_ = build_fault_operands(TileFault(5, 7, 70, 99, 3.0), 2, 3, 32, 32)
+    fd, fr, fc = ops_
+    assert fd.shape == fr.shape == fc.shape == (2, 3)
+    assert float(fd[5 % 2, 7 % 3]) == 3.0 and float(jnp.abs(fd).sum()) == 3.0
+    assert int(fr[0, 0]) == 70 % 32 and int(fc[0, 0]) == 99 % 32
+    assert build_fault_operands(None, 2, 3, 32, 32) is None
+
+
+def test_use_abft_ambient_nesting_and_restore():
+    assert abft_mod.current_abft() is None
+    with use_abft() as cfg:
+        assert abft_mod.current_abft() is cfg and cfg.max_retries == 2
+        inner = AbftConfig(max_retries=5)
+        with use_abft(inner):
+            assert abft_mod.current_abft() is inner
+        assert abft_mod.current_abft() is cfg
+    assert abft_mod.current_abft() is None
+
+
+def test_stats_reset_and_keys():
+    reset_abft_stats()
+    s = abft_stats()
+    assert s == {"gemms_verified": 0, "tiles_flagged": 0,
+                 "tiles_recovered": 0, "sdc_errors": 0}
+
+
+# ---------------------------------------------------------------------------
+# kernel level: clean-run bitwise parity + precise flag placement
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16],
+                         ids=["f32", "bf16"])
+@pytest.mark.parametrize("activation", ["none", "swiglu"])
+def test_kernel_clean_run_bitwise_and_unflagged(dtype, activation):
+    # non-multiple-of-block shape on every dim (padding + masking live)
+    M, K, N = 45, 70, 52
+    x, w = _rand(0, (M, K), dtype), _rand(1, (K, N), dtype)
+    wg = _rand(2, (K, N), dtype) if activation == "swiglu" else None
+    kw = dict(epilogue=Epilogue(activation=activation), b_gate=wg,
+              bm=32, bn=32, bk=32, out_dtype=jnp.float32, interpret=True)
+    plain = mx_matmul_fused(x, w, **kw)
+    spec = make_abft_spec(dtype, dtype, K, 32, 32)
+    out, flags = mx_matmul_fused(x, w, abft=spec, **kw)
+    assert (np.asarray(flags) == 0).all()
+    _bitwise(out, plain)
+
+
+def test_kernel_flags_exactly_the_corrupted_tile():
+    M = K = N = 64  # 2x2 grid of 32x32 tiles
+    x, w = _rand(0, (M, K)), _rand(1, (K, N))
+    kw = dict(bm=32, bn=32, bk=32, out_dtype=jnp.float32, interpret=True)
+    plain = mx_matmul_fused(x, w, **kw)
+    spec = make_abft_spec(jnp.float32, jnp.float32, K, 32, 32)
+    fd, fr, fc = build_fault_operands(TileFault(1, 0, 3, 5, BIG), 2, 2, 32, 32)
+    out, flags = mx_matmul_fused(x, w, abft=spec.with_inject(True),
+                                 fault_delta=fd, fault_row=fr, fault_col=fc,
+                                 **kw)
+    f = np.asarray(flags)
+    assert f[1, 0] == 1 and f.sum() == 1, f
+    # the corruption really landed where a real SDC would: one element of
+    # the write-back, everything else untouched
+    diff = np.abs(np.asarray(out) - np.asarray(plain))
+    assert diff[32 + 3, 5] > BIG / 2
+    assert np.count_nonzero(diff) == 1
+
+
+# ---------------------------------------------------------------------------
+# dispatch: detection + bitwise recovery + the typed error
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("activation", ["none", "gelu", "swiglu"])
+def test_linear_detects_and_recovers_bitwise(activation):
+    reset_abft_stats()
+    x, w = _rand(0, (48, 64)), _rand(1, (64, 48))
+    wg = _rand(2, (64, 48)) if activation == "swiglu" else None
+    kw = dict(activation=activation, w_gate=wg, policy=PALLAS,
+              out_dtype=jnp.float32)
+    base = ops.linear(x, w, abft=False, **kw)
+    clean = ops.linear(x, w, abft=True, **kw)
+    _bitwise(clean, base)  # verification must not perturb the datapath
+    assert abft_stats()["tiles_flagged"] == 0
+    got = ops.linear(x, w, abft=AbftConfig(fault=TileFault(0, 1, 2, 3, BIG)),
+                     **kw)
+    _bitwise(got, base)
+    s = abft_stats()
+    assert s["tiles_flagged"] >= 1 and s["tiles_recovered"] >= 1
+    assert s["sdc_errors"] == 0
+
+
+def test_unrecoverable_corruption_raises_typed_sdc_error():
+    reset_abft_stats()
+    x, w = _rand(0, (32, 32)), _rand(1, (32, 32))
+    cfg = AbftConfig(max_retries=0, fault=TileFault(0, 0, 0, 0, BIG))
+    with pytest.raises(SDCError) as ei:
+        ops.linear(x, w, policy=PALLAS, out_dtype=jnp.float32, abft=cfg)
+    assert ei.value.flagged == ((0, 0),)
+    assert ei.value.attempts == 0
+    assert abft_stats()["sdc_errors"] == 1
+
+
+def test_traced_dispatch_recovers_in_graph():
+    x, w = _rand(0, (48, 64)), _rand(1, (64, 48))
+    cfg = AbftConfig(fault=TileFault(0, 0, 1, 1, BIG))
+    jit_base = jax.jit(lambda a, b: ops.linear(
+        a, b, policy=PALLAS, out_dtype=jnp.float32, abft=False))
+    jit_abft = jax.jit(lambda a, b: ops.linear(
+        a, b, policy=PALLAS, out_dtype=jnp.float32, abft=cfg))
+    _bitwise(jit_abft(x, w), jit_base(x, w))
+
+
+def test_ambient_context_arms_and_false_disarms():
+    reset_abft_stats()
+    x, w = _rand(0, (32, 48)), _rand(1, (48, 32))
+    base = ops.linear(x, w, policy=PALLAS, out_dtype=jnp.float32)
+    with use_abft(AbftConfig(fault=TileFault(0, 0, 0, 0, BIG))):
+        got = ops.linear(x, w, policy=PALLAS, out_dtype=jnp.float32)
+        _bitwise(got, base)
+        assert abft_stats()["tiles_flagged"] >= 1
+        # per-call abft=False overrides the ambient context
+        before = abft_stats()["gemms_verified"]
+        ops.linear(x, w, policy=PALLAS, out_dtype=jnp.float32, abft=False)
+        assert abft_stats()["gemms_verified"] == before
+        # non-pallas backends ignore ABFT (no checksummed kernel to ride)
+        ops.linear(x, w, policy=XLA, out_dtype=jnp.float32)
+        assert abft_stats()["gemms_verified"] == before
+
+
+def test_grouped_detects_and_recovers_bitwise():
+    reset_abft_stats()
+    T, K, N, G = 40, 32, 24, 3
+    x = _rand(0, (T, K))
+    w = _rand(1, (G, K, N))
+    gs = jnp.array([15, 0, 25], jnp.int32)  # row tile 0 straddles experts
+    kw = dict(policy=PALLAS, out_dtype=jnp.float32)
+    base = ops.grouped_matmul(x, w, gs, abft=False, **kw)
+    clean = ops.grouped_matmul(x, w, gs, abft=True, **kw)
+    _bitwise(clean, base)
+    assert abft_stats()["tiles_flagged"] == 0
+    # corrupt the straddled tile (two overlapping experts) and a plain one
+    for ti in (0, 1):
+        cfg = AbftConfig(fault=TileFault(ti, 0, 3, 4, BIG))
+        got = ops.grouped_matmul(x, w, gs, abft=cfg, **kw)
+        _bitwise(got, base, err_msg=f"tile {ti}")
+    s = abft_stats()
+    assert s["tiles_flagged"] >= 2 and s["tiles_recovered"] >= 2
+    assert s["sdc_errors"] == 0
+
+
+# ---------------------------------------------------------------------------
+# precision interplay (satellite: exact int path, tolerant float path)
+# ---------------------------------------------------------------------------
+
+
+def test_int8_exact_path_detects_unit_delta():
+    """int8 x int8 payloads carry integer checksums compared EXACTLY:
+    even a +-1 corruption of the accumulator is caught (the float paths
+    legitimately cannot see a delta under their rounding tolerance)."""
+    reset_abft_stats()
+    x, w = _rand(0, (32, 64)), _rand(1, (64, 32), scale=0.1)
+    kw = dict(precision="int8_all", policy=PALLAS, out_dtype=jnp.float32)
+    base = ops.linear(x, w, abft=False, **kw)
+    got = ops.linear(x, w, abft=AbftConfig(fault=TileFault(0, 0, 3, 4, 1.0)),
+                     **kw)
+    _bitwise(got, base)
+    s = abft_stats()
+    assert s["tiles_flagged"] >= 1 and s["tiles_recovered"] >= 1
+
+
+@pytest.mark.parametrize("name", ["int8", "int8_tensor", "fp8", "fp8_all",
+                                  "bf16"])
+def test_quantized_policies_detect_flip_and_recover(name):
+    """Mixed and float-quantized payloads (fp8 included — fp8 sums round,
+    so it verifies under the float tolerance, not integer equality): a
+    high-exponent flip is detected and recovery is bitwise."""
+    reset_abft_stats()
+    x, w = _rand(0, (32, 64)), _rand(1, (64, 32), scale=0.1)
+    kw = dict(precision=name, policy=PALLAS, out_dtype=jnp.float32)
+    base = ops.linear(x, w, abft=False, **kw)
+    got = ops.linear(x, w, abft=AbftConfig(fault=TileFault(0, 0, 1, 2, BIG)),
+                     **kw)
+    _bitwise(got, base)
+    s = abft_stats()
+    assert s["tiles_flagged"] >= 1 and s["tiles_recovered"] >= 1
+    assert s["sdc_errors"] == 0
+
+
+def test_no_false_positives_across_precision_policies():
+    x, w = _rand(0, (48, 64), scale=3.0), _rand(1, (64, 48), scale=0.2)
+    for name in (None, "bf16", "int8", "int8_all", "int8_tensor",
+                 "fp8", "fp8_all"):
+        reset_abft_stats()
+        kw = dict(precision=name, policy=PALLAS, out_dtype=jnp.float32)
+        base = ops.linear(x, w, abft=False, **kw)
+        clean = ops.linear(x, w, abft=True, **kw)
+        _bitwise(clean, base, err_msg=f"policy {name}")
+        s = abft_stats()
+        assert s["tiles_flagged"] == 0, (name, s)
+        assert s["gemms_verified"] >= 1, (name, s)
+
+
+@pytest.mark.slow
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(min_value=8, max_value=72),
+       k=st.integers(min_value=8, max_value=96),
+       n=st.integers(min_value=8, max_value=72),
+       use_bf16=st.booleans(),
+       scale=st.floats(min_value=0.05, max_value=30.0),
+       seed=st.integers(min_value=0, max_value=2**16))
+def test_float_checksums_never_false_positive(m, k, n, use_bf16, scale, seed):
+    """Property sweep over shapes, dtypes and operand scales: the float
+    tolerance must absorb every legitimate rounding difference between
+    the two association orders — zero flags on clean data, and abft=on
+    output stays bitwise equal to abft=off."""
+    dt = jnp.bfloat16 if use_bf16 else jnp.float32
+    x = _rand(seed, (m, k), dt, scale)
+    w = _rand(seed + 1, (k, n), dt, scale)
+    kw = dict(bm=32, bn=32, bk=32, out_dtype=jnp.float32, interpret=True)
+    plain = mx_matmul_fused(x, w, **kw)
+    spec = make_abft_spec(dt, dt, k, min(32, m), min(32, n))
+    out, flags = mx_matmul_fused(x, w, abft=spec, **kw)
+    assert (np.asarray(flags) == 0).all(), (m, k, n, dt, scale)
+    _bitwise(out, plain)
+
+
+# ---------------------------------------------------------------------------
+# chaos streams (satellite: named ids + the bitflip stream)
+# ---------------------------------------------------------------------------
+
+
+def test_chaos_stream_ids_distinct_and_stable():
+    from repro.runtime.lifecycle import ChaosStream
+
+    assert len(set(ChaosStream.ALL)) == len(ChaosStream.ALL) == 12
+    # ids are a schedule contract: renumbering silently reshuffles every
+    # seeded fault schedule, so the legacy assignment is pinned
+    assert ChaosStream.ALL[:10] == tuple(range(10))
+    assert ChaosStream.BITFLIP_GATE == 10
+    assert ChaosStream.BITFLIP_SITE == 11
+
+
+def test_bitflip_stream_pure_and_independent():
+    from repro.runtime.lifecycle import ChaosConfig, ChaosInjector
+
+    a = ChaosInjector(ChaosConfig(seed=3, bitflip_at_steps=(2, 5)))
+    b = ChaosInjector(ChaosConfig(seed=3, bitflip_at_steps=(2, 5)))
+    assert a.bitflip(1, (4, 9)) is None
+    assert a.bitflip(2, (4, 9)) == b.bitflip(2, (4, 9))
+    assert a.gemm_fault(5) == b.gemm_fault(5)
+    assert a.gemm_fault(4) is None
+    assert a.bitflips_injected == 2
+    assert a.summary()["bitflips_injected"] == 2
+    assert a.plan(2)["bitflip"] and not a.plan(3)["bitflip"]
+    # enabling the bitflip stream must not shift any other family's draws
+    c1 = ChaosInjector(ChaosConfig(seed=7, poison_rate=0.5,
+                                   step_failure_rate=0.5))
+    c2 = ChaosInjector(ChaosConfig(seed=7, poison_rate=0.5,
+                                   step_failure_rate=0.5, bitflip_rate=1.0))
+    for t in range(12):
+        assert c1._wants_poison(t) == c2._wants_poison(t)
+        assert c1._wants_step_failure(t) == c2._wants_step_failure(t)
+
+
+@pytest.mark.chaos
+def test_chaos_bitflip_stream_all_detected_and_recovered():
+    """Rotating-seed sweep (CHAOS_SEED from CI): every fault the bitflip
+    stream draws must be detected AND recovered bitwise — detection rate
+    1.0, recovery exact, zero SDCErrors."""
+    seed = int(os.environ.get("CHAOS_SEED", "0"))
+    from repro.runtime.lifecycle import ChaosConfig, ChaosInjector
+
+    inj = ChaosInjector(ChaosConfig(seed=seed, bitflip_at_steps=tuple(range(6))))
+    x, w = _rand(0, (48, 64)), _rand(1, (64, 48), scale=0.1)
+    base = ops.linear(x, w, policy=PALLAS, out_dtype=jnp.float32)
+    reset_abft_stats()
+    for step in range(6):
+        fault = inj.gemm_fault(step)
+        assert fault is not None
+        got = ops.linear(x, w, policy=PALLAS, out_dtype=jnp.float32,
+                         abft=AbftConfig(fault=fault))
+        _bitwise(got, base, err_msg=f"seed={seed} step={step} fault={fault}")
+    s = abft_stats()
+    assert s["tiles_flagged"] == 6, (seed, s)
+    assert s["tiles_recovered"] == 6, (seed, s)
+    assert s["sdc_errors"] == 0, (seed, s)
+
+
+# ---------------------------------------------------------------------------
+# serving: the batcher's ABFT guard end to end
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_batcher_abft_guard_end_to_end():
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.runtime.batcher import ContinuousBatcher
+    from repro.runtime.lifecycle import ChaosConfig, ChaosInjector, Request
+
+    cfg = get_config("llama3.2-1b-smoke")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    def run(abft, chaos_cfg=None):
+        chaos = ChaosInjector(chaos_cfg) if chaos_cfg else None
+        b = ContinuousBatcher(model, params, batch_slots=2, max_len=12,
+                              chaos=chaos, abft=abft)
+        r = np.random.default_rng(1)
+        for i in range(3):
+            prompt = r.integers(0, cfg.vocab, 4).astype(np.int32)
+            b.submit(Request(rid=i, prompt=prompt, max_new=5))
+        fin = b.run_to_completion()
+        return {k: tuple(fin[k].output) for k in fin}, b
+
+    base, _ = run(False)
+    clean, b1 = run(True)
+    assert clean == base  # verification leaves the stream bitwise intact
+    assert b1.sdc_detected == 0 and b1.sdc_corrected == 0
+    flip, b2 = run(True, ChaosConfig(seed=0, bitflip_at_steps=(1, 3)))
+    assert flip == base  # every corruption corrected before derivation
+    assert b2.sdc_detected == b2.sdc_corrected == b2.chaos.bitflips_injected
+    assert b2.sdc_detected > 0
+    hs = b2.health_summary()
+    assert hs["abft"] == {"sdc_detected": b2.sdc_detected,
+                          "sdc_corrected": b2.sdc_corrected}
+    assert hs["chaos"]["bitflips_injected"] == b2.sdc_detected
+
+
+# ---------------------------------------------------------------------------
+# collective rings: checksum sidecars on an 8-device mesh (subprocess)
+# ---------------------------------------------------------------------------
+
+
+_RING_CODE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import ops
+from repro.core.ops import MXPolicy
+from repro.kernels.abft import AbftConfig, TileFault, abft_stats, \
+    reset_abft_stats
+from repro.launch.mesh import make_mesh
+from repro.parallel.sharding import collective_policy
+
+mesh = make_mesh((1, 8), ("data", "model"))
+POL = MXPolicy(backend="pallas_mx", bm=8, bn=16, bk=8, interpret=True)
+M, K, N = 64, 32, 48
+rng = np.random.default_rng(0)
+x = jnp.asarray(rng.normal(size=(M, K)), jnp.float32)
+w = jnp.asarray(rng.normal(size=(K, N)) * 0.1, jnp.float32)
+BIG = 2.0 ** 16
+
+with collective_policy(mesh, axis="model"):
+    for mode in ("allgather", "reduce_scatter"):
+        kw = dict(tp_mode=mode, policy=POL, out_dtype=jnp.float32)
+        base = ops.linear(x, w, abft=False, **kw)
+        clean = ops.linear(x, w, abft=True, **kw)
+        assert (np.asarray(clean) == np.asarray(base)).all(), mode
+        reset_abft_stats()
+        got = ops.linear(x, w, abft=AbftConfig(
+            fault=TileFault(2, 0, 1, 3, BIG)), **kw)
+        assert (np.asarray(got) == np.asarray(base)).all(), mode
+        s = abft_stats()
+        assert s["tiles_flagged"] > 0 and s["tiles_recovered"] > 0, (mode, s)
+        assert s["sdc_errors"] == 0, (mode, s)
+        print(mode.upper() + "_OK")
+    # quantized payload: the int8 scale sidecar and the checksum sidecar
+    # travel the ring together
+    kwq = dict(tp_mode="allgather", precision="int8", policy=POL,
+               out_dtype=jnp.float32)
+    baseq = ops.linear(x, w, abft=False, **kwq)
+    cleanq = ops.linear(x, w, abft=True, **kwq)
+    assert (np.asarray(cleanq) == np.asarray(baseq)).all()
+    gotq = ops.linear(x, w, abft=AbftConfig(
+        fault=TileFault(1, 0, 0, 0, BIG)), **kwq)
+    assert (np.asarray(gotq) == np.asarray(baseq)).all()
+    print("QUANT_OK")
+    # traced: recovery is an in-graph cond, still bitwise
+    cfg = AbftConfig(fault=TileFault(3, 0, 2, 2, BIG))
+    jb = jax.jit(lambda a, b: ops.linear(a, b, abft=False, tp_mode="allgather",
+                                         policy=POL, out_dtype=jnp.float32))
+    ja = jax.jit(lambda a, b: ops.linear(a, b, abft=cfg, tp_mode="allgather",
+                                         policy=POL, out_dtype=jnp.float32))
+    assert (np.asarray(ja(x, w)) == np.asarray(jb(x, w))).all()
+    print("TRACED_OK")
+print("ALL_ABFT_RING_OK")
+"""
+
+
+@pytest.mark.slow  # subprocess + 8-device mesh + interpret-mode rings
+def test_abft_rings_on_8device_mesh():
+    r = subprocess.run(
+        [sys.executable, "-c", _RING_CODE], capture_output=True, text=True,
+        timeout=900,
+        env={**os.environ, "PYTHONPATH": "src"},
+        cwd=pathlib.Path(__file__).resolve().parents[1],
+    )
+    assert "ALL_ABFT_RING_OK" in r.stdout, (
+        f"stdout={r.stdout}\nstderr={r.stderr[-3000:]}")
+
+
+# ---------------------------------------------------------------------------
+# analytical overhead model (core/transfer_model.AbftGemm)
+# ---------------------------------------------------------------------------
+
+
+def test_abft_gemm_overhead_model():
+    p = GemmProblem(512, 512, 512, 2)
+    exact = AbftGemm(bm=128, bn=128, exact=True)
+    flt = AbftGemm(bm=128, bn=128, exact=False)
+    # the headline ratio: ~(1/bm + 1/bn), doubled for the float |.| pair
+    assert exact.overhead_ratio(p) == pytest.approx(1 / 128 + 1 / 128)
+    assert flt.overhead_ratio(p) == pytest.approx(2 * (1 / 128 + 1 / 128))
+    assert exact.tiles(p) == 16
+    # flags always priced; fault operands only under injection
+    assert flt.extra_hbm_bytes(p) == 16 * 4
+    inj = AbftGemm(bm=128, bn=128, inject=True)
+    assert inj.extra_hbm_bytes(p) == 16 * 4 + 3 * 16 * 4
+    # checksum scratch beside the accumulator, doubled on the float path
+    assert exact.extra_vmem_bytes() == (128 + 128) * 4
+    assert flt.extra_vmem_bytes() == 2 * (128 + 128) * 4
+    # ragged shapes ceil-divide into tiles
+    assert AbftGemm(bm=128, bn=128).tiles(GemmProblem(129, 1, 1, 2)) == 2
+    rep = flt.report(p)
+    for key in ("tiles", "checksum_macs", "reduction_adds", "verify_adds",
+                "overhead_ratio", "extra_hbm_bytes", "extra_vmem_bytes"):
+        assert key in rep
+    # verify rides the write-back: ~2/K relative, far below the checksums
+    assert rep["verify_adds"] / p.macs < rep["overhead_ratio"]
+
+
+def test_dryrun_carries_abft_report():
+    from repro.configs import get_config
+    from repro.launch.dryrun import abft_gemm_reports
+
+    rep = abft_gemm_reports(get_config("llama3.2-1b-smoke"), 256)
+    assert rep["bm"] == rep["bn"] == 128
+    assert 0.0 < rep["total_overhead_ratio"] < 0.1
+    assert rep["qkv"]["checksum_macs"] > 0

@@ -421,3 +421,60 @@ def test_grouped_plan_credits_fused_activation():
     plan = pol.plan(16, 16, 16, 4, fused_epilogue_ops=2)
     assert ops.plan_cache_info().currsize >= 1
     assert plan.epilogue_saved_bytes == 2 * 2 * 16 * 16 * 4
+
+
+# ---------------------------------------------------------------------------
+# non-finite epilogue guard: fused activations must propagate Inf/NaN
+# exactly like the XLA reference (the serving-layer quarantine keys off
+# the NaN/Inf placement, so fusion must not launder or relocate them)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("activation", ["relu", "gelu", "silu", "swiglu"])
+@pytest.mark.parametrize("bad", [np.inf, -np.inf, np.nan],
+                         ids=["inf", "ninf", "nan"])
+def test_epilogue_nonfinite_propagation_parity(activation, bad):
+    M, K, N = 24, 32, 16
+    x = np.array(_rand(0, (M, K)))
+    x[3, 5] = bad  # one poisoned operand element -> one poisoned output row
+    x = jnp.asarray(x)
+    w = _rand(1, (K, N))
+    wg = _rand(2, (K, N)) if activation == "swiglu" else None
+    b = _rand(3, (N,))
+
+    kw = dict(activation=activation, w_gate=wg, out_dtype=jnp.float32)
+    got = np.asarray(ops.linear(x, w, b, policy=PALLAS, **kw))
+    want = np.asarray(ops.linear(x, w, b, policy=XLA, **kw))
+
+    # identical non-finite placement, element for element
+    np.testing.assert_array_equal(np.isnan(got), np.isnan(want))
+    np.testing.assert_array_equal(np.isposinf(got), np.isposinf(want))
+    np.testing.assert_array_equal(np.isneginf(got), np.isneginf(want))
+    # the poison is confined to the row that touched it
+    clean_rows = np.ones(M, bool)
+    clean_rows[3] = False
+    assert np.isfinite(got[clean_rows]).all()
+    # and the finite entries still agree numerically
+    fin = np.isfinite(want)
+    np.testing.assert_allclose(got[fin], want[fin], rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("activation", ["relu", "gelu", "silu", "swiglu"])
+def test_epilogue_nonfinite_residual_parity(activation):
+    """NaN arriving through the residual add (the other epilogue input)
+    propagates identically fused vs XLA."""
+    M, K, N = 24, 32, 16
+    x, w = _rand(0, (M, K)), _rand(1, (K, N))
+    wg = _rand(2, (K, N)) if activation == "swiglu" else None
+    res = np.array(_rand(3, (M, N)))
+    res[7, 2] = np.nan
+    res = jnp.asarray(res)
+
+    kw = dict(activation=activation, w_gate=wg, residual=res,
+              out_dtype=jnp.float32)
+    got = np.asarray(ops.linear(x, w, policy=PALLAS, **kw))
+    want = np.asarray(ops.linear(x, w, policy=XLA, **kw))
+    np.testing.assert_array_equal(np.isnan(got), np.isnan(want))
+    assert np.isnan(got[7, 2]) and np.count_nonzero(np.isnan(got)) == 1
+    fin = np.isfinite(want)
+    np.testing.assert_allclose(got[fin], want[fin], rtol=1e-4, atol=1e-4)
