@@ -31,23 +31,36 @@ passes with a note and becomes the baseline once merged.  An unreadable
 committed baseline is treated the same way (the fresh run re-seeds it)
 rather than failing every PR until someone hand-edits JSON.
 
+When ``$GITHUB_STEP_SUMMARY`` is set (any GitHub Actions step), a
+per-metric pass/drift markdown table is appended to the job summary —
+per-file counts plus a row for every drifting or failing metric.
+
+``--verify-manifest`` closes the loop with the data-driven bench runner
+(scripts/run_benches.py): every committed BENCH_*.json must appear in
+scripts/bench_manifest.json, so an artifact can't silently drop out of
+the regeneration+gating matrix while its stale baseline keeps merging.
+
   python scripts/check_bench.py                       # all default files
   python scripts/check_bench.py BENCH_decode.json     # just one
   python scripts/check_bench.py --baseline-dir saved/ # explicit baselines
+  python scripts/check_bench.py --verify-manifest     # manifest coverage
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import subprocess
 import sys
 from pathlib import Path
 
 REPO = Path(__file__).resolve().parent.parent
+MANIFEST = Path(__file__).resolve().parent / "bench_manifest.json"
 DEFAULT_FILES = ("BENCH_quant.json", "BENCH_decode.json",
                  "BENCH_collective.json", "BENCH_prefix.json",
                  "BENCH_chaos.json", "BENCH_serve.json",
-                 "BENCH_spec.json", "BENCH_abft.json")
+                 "BENCH_spec.json", "BENCH_abft.json",
+                 "BENCH_sparse.json")
 
 EXACT_TOL = 0.01
 TIMING_TOL = 0.25
@@ -76,8 +89,11 @@ def _metric_class(path: tuple) -> str:
     return "exact"
 
 
-def _walk(base, fresh, path, problems):
-    """Recursive compare; appends (path, message) problem tuples."""
+def _walk(base, fresh, path, problems, rows=None):
+    """Recursive compare; appends (path, message) problem tuples.  When
+    ``rows`` is given, every leaf comparison also records a
+    (where, class, base, fresh, drift, status) row — the raw material of
+    the CI step-summary pass/drift table."""
     where = ".".join(str(p) for p in path) or "<root>"
     if isinstance(base, dict):
         if not isinstance(fresh, dict):
@@ -87,19 +103,23 @@ def _walk(base, fresh, path, problems):
             if k not in fresh:
                 problems.append((f"{where}.{k}", "metric missing from fresh run"))
                 continue
-            _walk(bv, fresh[k], path + (k,), problems)
+            _walk(bv, fresh[k], path + (k,), problems, rows)
         return
     if isinstance(base, list):
         if not isinstance(fresh, list) or len(fresh) != len(base):
             problems.append((where, f"list changed: {base!r} -> {fresh!r}"))
             return
         for i, (bv, fv) in enumerate(zip(base, fresh)):
-            _walk(bv, fv, path + (i,), problems)
+            _walk(bv, fv, path + (i,), problems, rows)
         return
     if isinstance(base, bool):
         # a passing acceptance check must keep passing
-        if base and fresh is not True:
+        ok = not (base and fresh is not True)
+        if not ok:
             problems.append((where, f"check regressed: true -> {fresh!r}"))
+        if rows is not None:
+            rows.append((where, "check", base, fresh, None,
+                         "pass" if ok else "FAIL"))
         return
     if isinstance(base, (int, float)):
         if not isinstance(fresh, (int, float)) or isinstance(fresh, bool):
@@ -109,15 +129,21 @@ def _walk(base, fresh, path, problems):
         denom = max(abs(base), abs(fresh), 1e-12)
         rel = abs(fresh - base) / denom
         if kind == "wall":
+            status = "pass"
             if rel > TIMING_TOL:  # informational: walls never gate
+                status = "note"
                 print(f"    note: {where} wall drift {rel:.1%} "
                       f"({base!r} -> {fresh!r})")
-            return
-        tol = TIMING_TOL if kind == "timing" else EXACT_TOL
-        if rel > tol:
-            label = "timing" if kind == "timing" else "exact-model"
-            problems.append((where, f"{label} drift {rel:.1%} > {tol:.0%} "
-                                    f"({base!r} -> {fresh!r})"))
+        else:
+            tol = TIMING_TOL if kind == "timing" else EXACT_TOL
+            status = "pass"
+            if rel > tol:
+                status = "FAIL"
+                label = "timing" if kind == "timing" else "exact-model"
+                problems.append((where, f"{label} drift {rel:.1%} > {tol:.0%} "
+                                        f"({base!r} -> {fresh!r})"))
+        if rows is not None:
+            rows.append((where, kind, base, fresh, rel, status))
         return
     if base != fresh:
         problems.append((where, f"changed: {base!r} -> {fresh!r}"))
@@ -150,7 +176,7 @@ def _baseline(name: str, baseline_dir: Path | None):
         return None
 
 
-def check_file(name: str, baseline_dir: Path | None) -> list:
+def check_file(name: str, baseline_dir: Path | None, rows=None) -> list:
     fresh_path = REPO / name
     if not fresh_path.exists():
         return [(name, "fresh file missing (bench did not run?)")]
@@ -161,8 +187,74 @@ def check_file(name: str, baseline_dir: Path | None) -> list:
         return []
     fresh = json.loads(fresh_path.read_text())
     problems = []
-    _walk(base, fresh, (), problems)
+    file_rows = [] if rows is not None else None
+    _walk(base, fresh, (), problems, file_rows)
+    if rows is not None:
+        rows += [(name,) + r for r in file_rows]
     return [(f"{name}:{w}", msg) for w, msg in problems]
+
+
+def verify_manifest(manifest: Path = MANIFEST) -> list:
+    """Every committed BENCH_*.json must appear in the bench manifest —
+    otherwise the data-driven CI loop silently stops regenerating (and
+    gating) that artifact and the baseline rots while looking enforced."""
+    try:
+        listed = {e["bench"]
+                  for e in json.loads(manifest.read_text())["benches"]}
+    except (OSError, json.JSONDecodeError, KeyError) as e:
+        return [(str(manifest), f"manifest unreadable: {e}")]
+    proc = subprocess.run(["git", "ls-files", "BENCH_*.json"], cwd=REPO,
+                          capture_output=True, text=True)
+    committed = sorted(n for n in proc.stdout.split() if n)
+    if proc.returncode != 0 or not committed:
+        committed = sorted(p.name for p in REPO.glob("BENCH_*.json"))
+    problems = [(name, "committed bench artifact missing from "
+                       "scripts/bench_manifest.json")
+                for name in committed if name not in listed]
+    if not problems:
+        print(f"manifest ok: {len(committed)} committed BENCH artifact(s) "
+              f"all present in {manifest.name}")
+    return problems
+
+
+def _write_step_summary(rows, all_problems) -> None:
+    """Per-metric pass/drift table for the GitHub Actions job summary.
+    Passing metrics are folded into per-file counts; only drifting or
+    failing metrics get individual rows (a green run stays readable)."""
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if not path:
+        return
+    by_file: dict = {}
+    for fname, _where, _kind, _b, _f, _rel, status in rows:
+        counts = by_file.setdefault(fname, {"pass": 0, "note": 0, "FAIL": 0})
+        counts[status] += 1
+    lines = ["### Bench regression gate", "",
+             "| file | metrics | pass | wall notes | fail |",
+             "|---|---:|---:|---:|---:|"]
+    for fname, c in by_file.items():
+        total = c["pass"] + c["note"] + c["FAIL"]
+        lines.append(f"| `{fname}` | {total} | {c['pass']} | {c['note']} "
+                     f"| {c['FAIL']} |")
+    flagged = [r for r in rows if r[-1] != "pass"]
+    if flagged:
+        lines += ["", "| metric | class | baseline | fresh | drift | status |",
+                  "|---|---|---|---|---|---|"]
+        for fname, where, kind, b, f, rel, status in flagged[:100]:
+            drift = "-" if rel is None else f"{rel:.1%}"
+            lines.append(f"| `{fname}:{where}` | {kind} | {b!r} | {f!r} "
+                         f"| {drift} | {status} |")
+        if len(flagged) > 100:
+            lines.append(f"| ... {len(flagged) - 100} more | | | | | |")
+    structural = [p for p in all_problems
+                  if not any(p[0] == f"{r[0]}:{r[1]}" for r in rows)]
+    if structural:
+        lines += ["", "Structural problems (missing metrics / shape "
+                      "changes / missing files):", ""]
+        lines += [f"- `{w}`: {msg}" for w, msg in structural[:50]]
+    verdict = "**FAIL**" if all_problems else "**pass**"
+    lines += ["", f"Gate verdict: {verdict}", ""]
+    with open(path, "a") as fh:
+        fh.write("\n".join(lines) + "\n")
 
 
 def main(argv=None) -> int:
@@ -176,24 +268,34 @@ def main(argv=None) -> int:
     ap.add_argument("--timing-tol", type=float, default=None,
                     help=f"override the timing tolerance (default "
                          f"{TIMING_TOL})")
+    ap.add_argument("--verify-manifest", action="store_true",
+                    help="check every committed BENCH_*.json appears in "
+                         "scripts/bench_manifest.json; with no explicit "
+                         "files, skips the per-file gating")
     args = ap.parse_args(argv)
     if args.timing_tol is not None:
         TIMING_TOL = args.timing_tol
 
-    files = args.files or list(DEFAULT_FILES)
     all_problems = []
-    for name in files:
-        probs = check_file(name, args.baseline_dir)
-        status = "FAIL" if probs else "ok"
-        if (REPO / name).exists() or probs:
-            print(f"  {name}: {status}")
-        all_problems += probs
+    rows: list = []
+    if args.verify_manifest:
+        all_problems += verify_manifest()
+    if args.files or not args.verify_manifest:
+        files = args.files or list(DEFAULT_FILES)
+        for name in files:
+            probs = check_file(name, args.baseline_dir, rows)
+            status = "FAIL" if probs else "ok"
+            if (REPO / name).exists() or probs:
+                print(f"  {name}: {status}")
+            all_problems += probs
+    _write_step_summary(rows, all_problems)
     if all_problems:
         print(f"\n{len(all_problems)} bench regression(s):", file=sys.stderr)
         for where, msg in all_problems:
             print(f"  {where}: {msg}", file=sys.stderr)
         return 1
-    print("bench gate: all files within tolerance")
+    if not args.verify_manifest or args.files:
+        print("bench gate: all files within tolerance")
     return 0
 
 

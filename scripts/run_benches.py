@@ -1,0 +1,110 @@
+"""Data-driven CI bench runner: one loop over scripts/bench_manifest.json.
+
+Replaces the copy-pasted bench -> gate -> artifact step triplets that used
+to live in .github/workflows/ci.yml (eight of them, each a chance to
+forget the gate).  Each manifest entry names the bench module, its CLI
+flags, the BENCH_*.json it writes, and which device leg it belongs to;
+this script runs every entry matching ``--devices``:
+
+  1. ``python -m <module> <args...>`` with PYTHONPATH=src (the bench
+     overwrites its repo-root BENCH file in place, and its own acceptance
+     asserts fail the step immediately);
+  2. ``scripts/check_bench.py <bench>`` — the regression gate against the
+     committed baseline (git show HEAD:<file>).
+
+Failures are aggregated so one broken bench doesn't mask the rest of the
+report; the exit code is nonzero if ANY bench or gate failed.  Artifact
+upload needs no per-bench step either: CI globs BENCH_*.json once.
+
+  python scripts/run_benches.py --devices 1        # single-device leg
+  python scripts/run_benches.py --devices 8        # virtual-mesh leg
+  python scripts/run_benches.py --only BENCH_sparse.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+MANIFEST = Path(__file__).resolve().parent / "bench_manifest.json"
+
+
+def load_manifest(path: Path = MANIFEST) -> list[dict]:
+    spec = json.loads(path.read_text())
+    benches = spec["benches"]
+    for entry in benches:
+        for key in ("bench", "module", "args", "devices"):
+            if key not in entry:
+                raise KeyError(f"manifest entry {entry.get('bench', entry)!r} "
+                               f"missing required key {key!r}")
+    return benches
+
+
+def run_entry(entry: dict, *, gate: bool = True) -> list[str]:
+    """Run one bench + its regression gate; returns failure strings."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    failures: list[str] = []
+    cmd = [sys.executable, "-m", entry["module"], *entry["args"]]
+    print(f"== {entry['bench']}: {' '.join(cmd)}", flush=True)
+    if subprocess.run(cmd, cwd=REPO, env=env).returncode != 0:
+        failures.append(f"{entry['bench']}: bench run failed "
+                        f"({entry['module']})")
+        return failures  # no artifact worth gating
+    if gate:
+        gate_cmd = [sys.executable, str(REPO / "scripts" / "check_bench.py"),
+                    entry["bench"]]
+        print(f"== {entry['bench']}: gate", flush=True)
+        if subprocess.run(gate_cmd, cwd=REPO, env=env).returncode != 0:
+            failures.append(f"{entry['bench']}: regression gate failed")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--devices", default="1",
+                    help="device leg to run (matches manifest entries' "
+                         "'devices'; default 1)")
+    ap.add_argument("--only", default=None,
+                    help="run a single manifest entry by its BENCH file name")
+    ap.add_argument("--manifest", type=Path, default=MANIFEST)
+    ap.add_argument("--no-gate", action="store_true",
+                    help="skip the check_bench regression gates (local "
+                         "refresh of the artifacts)")
+    args = ap.parse_args(argv)
+
+    entries = load_manifest(args.manifest)
+    if args.only is not None:
+        entries = [e for e in entries if e["bench"] == args.only]
+        if not entries:
+            print(f"no manifest entry for {args.only!r}", file=sys.stderr)
+            return 2
+    else:
+        entries = [e for e in entries if e["devices"] == args.devices]
+    if not entries:
+        print(f"no manifest entries for devices={args.devices!r}",
+              file=sys.stderr)
+        return 2
+
+    failures: list[str] = []
+    for entry in entries:
+        failures += run_entry(entry, gate=not args.no_gate)
+
+    print()
+    if failures:
+        print(f"{len(failures)} bench failure(s):", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print(f"bench matrix ok: {len(entries)} bench(es) ran and gated "
+          f"(devices={args.devices})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -51,6 +51,7 @@ from ..kernels.mx_grouped_matmul import (
 )
 from ..kernels.mx_matmul import Epilogue, apply_epilogue, dot_f32, mx_matmul_fused
 from ..kernels.quant import dequantize, quantize_operand
+from ..kernels.sparse import compress_24, expand_24, prune_24
 from .precision import (
     PrecisionPolicy,
     current_precision,
@@ -67,20 +68,22 @@ TP_MODES = ("allgather", "reduce_scatter")
 def _cached_plan(
     policy: "MXPolicy", M: int, N: int, K: int, elem_bytes: int,
     fused_epilogue_ops: int, b_bytes: Optional[int] = None,
-    out_bytes: Optional[int] = None,
+    out_bytes: Optional[int] = None, b_sparse: bool = False,
 ) -> TilePlan:
     """The planner runs once per unique (policy, M, N, K, per-operand
     bytes) key; MXPolicy is a frozen dataclass, so it hashes by value.
     ``elem_bytes`` is the A-operand element size; quantized GEMMs key on
     their narrow b_bytes/out_bytes too, so an int8-weights plan never
-    collides with the f32 plan for the same shape."""
+    collides with the f32 plan for the same shape — and ``b_sparse`` keys
+    2:4-compressed weight streams (fractional bytes/elem) separately."""
     if policy.bm and policy.bn and policy.bk:
         from .transfer_model import PallasGemmTiling
 
         t = PallasGemmTiling(policy.bm, policy.bn, policy.bk,
                              accumulate_in_vmem=policy.backend != "pallas_baseline",
                              fused_epilogue_ops=fused_epilogue_ops)
-        p = GemmProblem(M, N, K, elem_bytes, b_bytes=b_bytes, out_bytes=out_bytes)
+        p = GemmProblem(M, N, K, elem_bytes, b_bytes=b_bytes,
+                        out_bytes=out_bytes, b_sparse=b_sparse)
         return TilePlan(
             policy.bm, policy.bn, policy.bk,
             hbm_bytes=t.hbm_bytes(p),
@@ -91,7 +94,8 @@ def _cached_plan(
             epilogue_saved_bytes=t.epilogue_saved_bytes(p),
         )
     return plan_matmul_tiles(
-        GemmProblem(M, N, K, elem_bytes, b_bytes=b_bytes, out_bytes=out_bytes),
+        GemmProblem(M, N, K, elem_bytes, b_bytes=b_bytes,
+                    out_bytes=out_bytes, b_sparse=b_sparse),
         vmem_budget=policy.vmem_budget,
         accumulate_in_vmem=policy.backend != "pallas_baseline",
         fused_epilogue_ops=fused_epilogue_ops,
@@ -125,13 +129,16 @@ class MXPolicy:
         self, M: int, N: int, K: int, elem_bytes: int,
         fused_epilogue_ops: int = 0, *,
         b_bytes: Optional[int] = None, out_bytes: Optional[int] = None,
+        b_sparse: bool = False,
     ) -> TilePlan:
         """Tile plan for one GEMM.  ``elem_bytes`` is the A-operand element
         size (and the default for B/out); mixed-precision callers pass
         per-operand ``b_bytes`` / ``out_bytes`` so the plan's traffic model
-        reports the quantized bytes and the LRU key separates policies."""
+        reports the quantized bytes and the LRU key separates policies.
+        ``b_sparse`` prices the weight stream as a 2:4 compressed payload
+        + metadata (b_bytes/2 + 0.125 per dense element)."""
         return _cached_plan(self, M, N, K, elem_bytes, fused_epilogue_ops,
-                            b_bytes, out_bytes)
+                            b_bytes, out_bytes, b_sparse)
 
 
 _state = threading.local()
@@ -369,16 +376,45 @@ def _abft_grouped_gemm(x, w, group_sizes, *, activation, w_gate, a_s, b_s,
 
 
 def _prepare_quantized(x, w, w_gate, prec: PrecisionPolicy):
-    """Quantize/cast one linear's operands per the policy.  Returns
-    (qa, a_s, qb, b_s, qg, bg_s); scales are None for cast-only specs.
-    The gate weight quantizes under the same spec as w but with its OWN
-    scales (independent amax)."""
+    """Quantize/cast/compress one linear's operands per the policy.
+    Returns (qa, a_s, qb, b_s, qg, bg_s, b_meta, bg_meta); scales are None
+    for cast-only specs, metas are None for dense policies.  The gate
+    weight quantizes under the same spec as w but with its OWN scales
+    (independent amax).
+
+    Sparse pipeline order: prune (magnitude, on the ORIGINAL weights) ->
+    quantize (per-column scales are constant along K, so pruning commutes
+    with dequant) -> compress the QUANTIZED payload, so the wire stream is
+    narrow values + 2-bit indices.  When K % 8 != 0 the wire format cannot
+    tile; the weights stay dense-masked (meta None) and every backend
+    still computes the pruned semantics."""
+    b_meta = bg_meta = None
+    if prec.b_sparse is not None:
+        w = prune_24(w)
+        if w_gate is not None:
+            w_gate = prune_24(w_gate)
     qa, a_s = quantize_operand(x, prec.a, "a")
     qb, b_s = quantize_operand(w, prec.b, "b")
-    if w_gate is None:
-        return qa, a_s, qb, b_s, None, None
-    qg, bg_s = quantize_operand(w_gate, prec.b, "b")
-    return qa, a_s, qb, b_s, qg, bg_s
+    qg = bg_s = None
+    if w_gate is not None:
+        qg, bg_s = quantize_operand(w_gate, prec.b, "b")
+    if prec.b_sparse is not None and w.shape[-2] % 8 == 0:
+        qb, b_meta = compress_24(qb)
+        if qg is not None:
+            qg, bg_meta = compress_24(qg)
+    return qa, a_s, qb, b_s, qg, bg_s, b_meta, bg_meta
+
+
+def _expand_sparse(qb, qg, b_meta, bg_meta):
+    """Decompress a prepared sparse weight pair back to dense-masked form —
+    the unfused oracle path (xla/baseline backends, ABFT recovery, plans
+    whose bk can't tile the compressed payload).  Consumes the SAME payload
+    the fused kernel would stream, so backends agree bit-for-bit on the
+    weight values."""
+    qb = expand_24(qb, b_meta)
+    if qg is not None:
+        qg = expand_24(qg, bg_meta)
+    return qb, qg
 
 
 def matmul(
@@ -450,6 +486,11 @@ def _collective_linear(
     P_ = coll.axis_size
     if P_ <= 1:
         return None
+    if prec is not None and prec.b_sparse is not None:
+        # Compressed payload/metadata pairs don't shard over the ring yet
+        # (the K-sharded reduce-scatter would split metadata bytes across
+        # devices); fall back to the serialized sparse path.
+        return None
     ax = coll.axis
     x2, lead = _flatten_leading(x)
     M, K = x2.shape
@@ -480,7 +521,9 @@ def _collective_linear(
 
     a_s = b_s = bg_s = None
     if prec is not None:
-        x2, a_s, w, b_s, w_gate, bg_s = _prepare_quantized(x2, w, w_gate, prec)
+        # metas are always None here: sparse policies bailed out above
+        x2, a_s, w, b_s, w_gate, bg_s, _, _ = _prepare_quantized(
+            x2, w, w_gate, prec)
 
     # the per-*chunk* GEMM plan, LRU-cached like every other dispatch
     a_bytes = x2.dtype.itemsize
@@ -689,9 +732,10 @@ def linear(
         M, K = x2.shape
         N = w.shape[-1]
         a_s = b_s = bg_s = None
+        b_meta = bg_meta = None
         if prec is not None:
-            x2, a_s, w, b_s, w_gate, bg_s = _prepare_quantized(
-                x2, w, w_gate, prec)
+            (x2, a_s, w, b_s, w_gate, bg_s,
+             b_meta, bg_meta) = _prepare_quantized(x2, w, w_gate, prec)
         ep = Epilogue(
             activation=activation,
             bias=b is not None,
@@ -703,13 +747,22 @@ def linear(
         plan = policy.plan(M, N, K, x2.dtype.itemsize,
                            fused_epilogue_ops=ep.n_fused_ops,
                            b_bytes=w.dtype.itemsize,
-                           out_bytes=jnp.dtype(out_dtype).itemsize)
+                           out_bytes=jnp.dtype(out_dtype).itemsize,
+                           b_sparse=b_meta is not None)
         res2 = None
         if residual is not None:
             res2 = jnp.broadcast_to(
                 residual, (*lead, x.shape[-2], N) if lead else (M, N)
             ).reshape(M, N)
         cfg = _resolve_abft(abft)
+        b_sparse = (b_meta is not None and min(plan.bk, K) % 8 == 0
+                    and cfg is None)
+        if b_meta is not None and not b_sparse:
+            # ABFT recovery re-slices dense weight panels (w[:, c0:c1]),
+            # and a non-8-aligned bk can't tile the compressed payload:
+            # decompress and run the dense-masked kernel — same math.
+            w, w_gate = _expand_sparse(w, w_gate, b_meta, bg_meta)
+            b_meta = bg_meta = None
         if cfg is not None:
             out = _abft_fused_gemm(
                 x2, w, ep=ep, bias=b, residual=res2, w_gate=w_gate,
@@ -719,6 +772,7 @@ def linear(
             out = mx_matmul_fused(
                 x2, w, epilogue=ep, b_gate=w_gate, bias=b, residual=res2,
                 a_scale=a_s, b_scale=b_s, bg_scale=bg_s,
+                b_sparse=b_sparse, b_meta=b_meta, bg_meta=bg_meta,
                 bm=plan.bm, bn=plan.bn, bk=plan.bk,
                 out_dtype=out_dtype, interpret=policy.interpret,
             )
@@ -731,7 +785,12 @@ def linear(
     if prec is not None:
         # Quantized reference: the SAME narrow payloads the kernel loads,
         # dot'd through the same dot_f32 accumulation, dequantized unfused.
-        qa, a_s, qb, b_s, qg, bg_s = _prepare_quantized(x, w, w_gate, prec)
+        # Sparse payloads decompress through the shared expand oracle first
+        # (same wire bytes, unfused expansion).
+        qa, a_s, qb, b_s, qg, bg_s, b_meta, bg_meta = _prepare_quantized(
+            x, w, w_gate, prec)
+        if b_meta is not None:
+            qb, qg = _expand_sparse(qb, qg, b_meta, bg_meta)
         y = dot_f32(qa, qb)
         gate = dot_f32(qa, qg) if activation == "swiglu" else None
         ep = Epilogue(activation=activation, bias=b is not None,
@@ -782,10 +841,15 @@ def grouped_matmul(
     if prec is not None and prec.out is not None:
         out_dtype = prec.out_jnp_dtype
     a_s = b_s = bg_s = None
+    b_meta = bg_meta = None
     if prec is not None:
-        x, a_s, w, b_s, w_gate, bg_s = _prepare_quantized(x, w, w_gate, prec)
+        (x, a_s, w, b_s, w_gate, bg_s,
+         b_meta, bg_meta) = _prepare_quantized(x, w, w_gate, prec)
     if policy.backend in ("xla", "pallas_baseline"):
         if prec is not None:
+            if b_meta is not None:
+                # shared expand oracle: same wire payload, unfused
+                w, w_gate = _expand_sparse(w, w_gate, b_meta, bg_meta)
             # dequantized reference over the SAME narrow payloads
             x = dequantize(x, a_s) if a_s is not None else x
             w = dequantize(w, b_s) if b_s is not None else w
@@ -806,8 +870,16 @@ def grouped_matmul(
     plan = policy.plan(max(T // G, 1), N, K, x.dtype.itemsize,
                        fused_epilogue_ops=n_fused,
                        b_bytes=w.dtype.itemsize,
-                       out_bytes=jnp.dtype(out_dtype).itemsize)
+                       out_bytes=jnp.dtype(out_dtype).itemsize,
+                       b_sparse=b_meta is not None)
     cfg = _resolve_abft(abft)
+    b_sparse = (b_meta is not None and min(plan.bk, K) % 8 == 0
+                and cfg is None)
+    if b_meta is not None and not b_sparse:
+        # per-expert ABFT recovery slices dense panels (w[g, :, c0:c1]);
+        # decompress and run the dense-masked grouped kernel — same math.
+        w, w_gate = _expand_sparse(w, w_gate, b_meta, bg_meta)
+        b_meta = bg_meta = None
     if cfg is not None:
         return _abft_grouped_gemm(
             x, w, group_sizes, activation=activation, w_gate=w_gate,
@@ -816,6 +888,7 @@ def grouped_matmul(
     return mx_grouped_matmul(
         x, w, group_sizes, w_gate=w_gate, activation=activation,
         a_scale=a_s, b_scale=b_s, bg_scale=bg_s,
+        b_sparse=b_sparse, w_meta=b_meta, wg_meta=bg_meta,
         bm=plan.bm, bn=plan.bn, bk=plan.bk,
         out_dtype=out_dtype, interpret=policy.interpret,
     )

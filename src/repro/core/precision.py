@@ -44,6 +44,45 @@ DTYPES = {
     "fp8_e4m3": (jnp.float8_e4m3fn, 1, 448.0),  # max finite e4m3
 }
 GRANULARITIES = ("tensor", "tile")
+SPARSITY_KINDS = ("2:4",)
+
+
+@dataclasses.dataclass(frozen=True)
+class SparsitySpec:
+    """Structured N:M sparsity declaration for the WEIGHT (B) operand.
+
+    "2:4": of every 4 consecutive elements along the contraction (K) axis,
+    the 2 largest-magnitude survive; HBM carries the compressed payload
+    (K/2, N) in the operand's (possibly quantized) dtype plus packed 2-bit
+    position metadata (K/8, N) uint8 — see kernels/sparse.py for the wire
+    format.  Composes with a quantized QuantSpec: prune first (magnitude
+    on the original weights), quantize the pruned weights (per-column
+    scales are constant along K, so K-compression does not touch them),
+    compress the quantized payload.  Declarative, like QuantSpec: kernels
+    steer the metadata to VMEM like a scale slot, the transfer model
+    prices payload + metadata bytes (`SparseGemm`), and the xla/baseline
+    backends decompress the SAME payload unfused so backends agree.
+    """
+
+    kind: str = "2:4"
+
+    def __post_init__(self):
+        if self.kind not in SPARSITY_KINDS:
+            raise ValueError(
+                f"unknown sparsity kind {self.kind!r}; one of {SPARSITY_KINDS}")
+
+    @property
+    def n(self) -> int:
+        return 2
+
+    @property
+    def m(self) -> int:
+        return 4
+
+    def b_bytes_per_elem(self, payload_itemsize: int) -> float:
+        """HBM bytes per DENSE weight element: payload/2 + 1 metadata bit.
+        f32 -> 2.125 (0.53125x dense), int8 payload -> 0.625."""
+        return payload_itemsize * self.n / self.m + self.n * 2 / 8 / self.m
 
 
 @dataclasses.dataclass(frozen=True)
@@ -118,14 +157,18 @@ class PrecisionPolicy:
 
     ``a`` is the activation operand, ``b`` the weight operand.  Accumulation
     is always f32 (the MX inter-k accumulator); ``out`` overrides the output
-    dtype (None = caller's out_dtype).  Frozen + hashable: it participates
-    in the tile-plan LRU key and in jit static args.
+    dtype (None = caller's out_dtype).  ``b_sparse`` declares structured
+    2:4 sparsity on the weight operand (SparsitySpec) — composed ON TOP of
+    the ``b`` QuantSpec: the compressed payload carries the quantized
+    values.  Frozen + hashable: it participates in the tile-plan LRU key
+    and in jit static args.
     """
 
     a: QuantSpec = QuantSpec()
     b: QuantSpec = QuantSpec()
     acc: str = "f32"
     out: Optional[str] = None
+    b_sparse: Optional[SparsitySpec] = None
 
     def __post_init__(self):
         if self.acc != "f32":
@@ -160,7 +203,7 @@ class PrecisionPolicy:
     def is_noop_for(self, a_dtype, b_dtype) -> bool:
         """True when applying this policy changes nothing (pure f32 passthrough)."""
         return not (self.a.transforms(a_dtype) or self.b.transforms(b_dtype)
-                    or self.out is not None)
+                    or self.out is not None or self.b_sparse is not None)
 
 
 # ---------------------------------------------------------------------------
@@ -216,6 +259,14 @@ NAMED_POLICIES = {
     "fp8": PrecisionPolicy(a=QuantSpec("bf16"), b=QuantSpec("fp8_e4m3", "tile")),
     "fp8_all": PrecisionPolicy(a=QuantSpec("fp8_e4m3", "tile"),
                                b=QuantSpec("fp8_e4m3", "tile")),
+    # 2:4 structured-sparse weights: full-precision payload, and the int8
+    # composition (prune -> per-column quantize -> compress the int8
+    # payload; ~0.16x the f32 weight bytes).  Activations ride full/bf16 —
+    # sparsity is a WEIGHT property.
+    "sparse24": PrecisionPolicy(b_sparse=SparsitySpec()),
+    "sparse24_int8": PrecisionPolicy(a=QuantSpec("bf16"),
+                                     b=QuantSpec("int8", "tile"),
+                                     b_sparse=SparsitySpec()),
 }
 
 

@@ -110,9 +110,12 @@ def plan_matmul_tiles(
                     fused_epilogue_ops=fused_epilogue_ops,
                 )
                 # Double-buffered inputs: Pallas pipelines the next (A, B)
-                # block DMA while the MXU consumes the current one.
-                vmem = (
-                    2 * (bm * bk * p.a_elem_bytes + bk * bn * p.b_elem_bytes)
+                # block DMA while the MXU consumes the current one.  A
+                # 2:4-sparse B stages compressed payload + metadata
+                # (b_stream_bytes), so sparse weights buy larger tiles
+                # under the same budget — the narrow-operand argument again.
+                vmem = round(
+                    2 * (bm * bk * p.a_elem_bytes + bk * bn * p.b_stream_bytes)
                     + bm * bn * acc_bytes
                 )
                 if vmem > vmem_budget:

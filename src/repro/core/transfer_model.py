@@ -34,6 +34,12 @@ class GemmProblem:
     e.g. GemmProblem(M, N, K, 2, b_bytes=1, out_bytes=2).  None means
     "same as elem_bytes", so every existing uniform-precision call site and
     the Table IV validation are unchanged.
+
+    ``b_sparse`` marks the weight operand as 2:4 structured-sparse
+    (kernels/sparse.py wire format): the B panel streams the compressed
+    payload at ``b_elem_bytes``/2 per dense element plus 1 metadata bit —
+    a FRACTIONAL per-dense-element size (f32: 2.125), which is why it is a
+    flag consumed by ``b_stream_bytes`` rather than an integer b_bytes.
     """
 
     M: int
@@ -42,6 +48,7 @@ class GemmProblem:
     elem_bytes: int = 8  # FP64 in the paper's Dual-Core study
     b_bytes: Optional[int] = None
     out_bytes: Optional[int] = None
+    b_sparse: bool = False
 
     @property
     def a_elem_bytes(self) -> int:
@@ -50,6 +57,15 @@ class GemmProblem:
     @property
     def b_elem_bytes(self) -> int:
         return self.elem_bytes if self.b_bytes is None else self.b_bytes
+
+    @property
+    def b_stream_bytes(self) -> float:
+        """Effective HBM bytes per DENSE B element: the payload itemsize
+        for a dense operand; payload/2 + 1/8 (2-bit indices, 2 kept of 4,
+        packed 2 groups/byte) under 2:4 sparsity."""
+        if not self.b_sparse:
+            return float(self.b_elem_bytes)
+        return self.b_elem_bytes / 2 + 0.125
 
     @property
     def out_elem_bytes(self) -> int:
@@ -347,13 +363,14 @@ class PallasGemmTiling:
 
     def hbm_bytes(self, p: GemmProblem, out_bytes: Optional[int] = None) -> int:
         """Per-operand accounting: A and B panels move at their own element
-        sizes (the §III narrow-operand traffic credit), the output operand
-        at the OUTPUT element size — the accumulator is always f32 but
-        never leaves VMEM, so it costs nothing here."""
+        sizes (the §III narrow-operand traffic credit; a 2:4-sparse B panel
+        moves compressed payload + metadata via ``b_stream_bytes``), the
+        output operand at the OUTPUT element size — the accumulator is
+        always f32 but never leaves VMEM, so it costs nothing here."""
         t = self.hbm_transfers(p)
         ob = p.out_elem_bytes if out_bytes is None else out_bytes
-        return (t.a_down * p.a_elem_bytes + t.b_down * p.b_elem_bytes
-                + (t.cd_down + t.d_up) * ob)
+        return round(t.a_down * p.a_elem_bytes + t.b_down * p.b_stream_bytes
+                     + (t.cd_down + t.d_up) * ob)
 
     def vmem_bytes(self, p: GemmProblem, acc_bytes: int = 4) -> int:
         """Working set in VMEM: one A block, one B block, one accumulator.
@@ -362,11 +379,13 @@ class PallasGemmTiling:
         Quantized operand blocks shrink the input footprint (per-operand
         bytes), which is exactly how narrow operands buy LARGER tiles under
         the same budget — the paper's more-MACs-per-cycle argument restated
-        as more-tile-per-VMEM.
+        as more-tile-per-VMEM.  A sparse B block stages payload + metadata
+        (``b_stream_bytes``) and expands to dense only transiently at the
+        dot; the STAGED bytes are the resident footprint.
         """
-        return (
+        return round(
             self.bm * self.bk * p.a_elem_bytes
-            + self.bk * self.bn * p.b_elem_bytes
+            + self.bk * self.bn * p.b_stream_bytes
             + self.bm * self.bn * acc_bytes
         )
 
@@ -485,6 +504,86 @@ class AbftGemm:
             "overhead_ratio": self.overhead_ratio(p),
             "extra_hbm_bytes": self.extra_hbm_bytes(p),
             "extra_vmem_bytes": self.extra_vmem_bytes(),
+        }
+
+
+# ---------------------------------------------------------------------------
+# Sparsity mapping: 2:4 compressed weight-stream economics (kernels/sparse)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseGemm:
+    """Traffic economics of one 2:4 structured-sparse GEMM (kernels/sparse
+    wire format riding kernels/mx_matmul's fused write-back), priced in the
+    transfer model's own units.
+
+    The weight panel streams payload (b_elem_bytes / 2 per dense element)
+    plus packed 2-bit metadata (1/8 byte per dense element); A, the output,
+    and the write-back discipline are untouched.  The in-VMEM expansion at
+    the dot costs compare-selects, not HBM bytes, so the whole benefit is
+    the B-stream shrink — f32 weights drop to 0.53125x, int8-sparse weights
+    to 0.15625x of dense f32 (the BENCH_sparse.json gates).
+
+    ``report`` prices the SAME (bm, bn, bk) tiling with the sparse flag on
+    and off, so the ratio includes the tile revisits (nm) the planner's
+    traffic model charges — it is the as-executed ratio, not the naive
+    storage ratio (they coincide on aligned shapes)."""
+
+    bm: int
+    bn: int
+    bk: int
+    fused_epilogue_ops: int = 0
+
+    def _tiling(self) -> PallasGemmTiling:
+        return PallasGemmTiling(self.bm, self.bn, self.bk,
+                                fused_epilogue_ops=self.fused_epilogue_ops)
+
+    def _sparse(self, p: GemmProblem) -> GemmProblem:
+        return dataclasses.replace(p, b_sparse=True)
+
+    def weight_stream_bytes(self, p: GemmProblem) -> int:
+        """B-panel HBM bytes of the sparse GEMM (payload + metadata,
+        including per-tile revisits)."""
+        t = self._tiling().hbm_transfers(p)
+        return round(t.b_down * self._sparse(p).b_stream_bytes)
+
+    def dense_weight_stream_bytes(self, p: GemmProblem) -> int:
+        t = self._tiling().hbm_transfers(p)
+        return t.b_down * p.b_elem_bytes
+
+    def weight_ratio(self, p: GemmProblem) -> float:
+        """sparse weight bytes / dense weight bytes at the SAME payload
+        dtype: (itemsize/2 + 1/8) / itemsize — 0.53125 for f32, 0.625 for
+        int8 (vs int8 dense; 0.15625 vs f32 dense)."""
+        return self.weight_stream_bytes(p) / self.dense_weight_stream_bytes(p)
+
+    def hbm_bytes(self, p: GemmProblem) -> int:
+        return self._tiling().hbm_bytes(self._sparse(p))
+
+    def dense_hbm_bytes(self, p: GemmProblem) -> int:
+        return self._tiling().hbm_bytes(p)
+
+    def saved_hbm_bytes(self, p: GemmProblem) -> int:
+        return self.dense_hbm_bytes(p) - self.hbm_bytes(p)
+
+    def vmem_bytes(self, p: GemmProblem) -> int:
+        """Staged working set: compressed B block + A block + accumulator."""
+        return self._tiling().vmem_bytes(self._sparse(p))
+
+    def report(self, p: GemmProblem) -> dict:
+        return {
+            "bm": self.bm,
+            "bn": self.bn,
+            "bk": self.bk,
+            "b_bytes_per_dense_elem": self._sparse(p).b_stream_bytes,
+            "weight_stream_bytes": self.weight_stream_bytes(p),
+            "dense_weight_stream_bytes": self.dense_weight_stream_bytes(p),
+            "weight_ratio": self.weight_ratio(p),
+            "hbm_bytes": self.hbm_bytes(p),
+            "hbm_bytes_dense": self.dense_hbm_bytes(p),
+            "saved_hbm_bytes": self.saved_hbm_bytes(p),
+            "vmem_bytes": self.vmem_bytes(p),
         }
 
 

@@ -37,6 +37,7 @@ from ._compat import CompilerParams
 from .abft import AbftSpec
 from .mx_matmul import (abft_accumulate, abft_inject, abft_scratch,
                         abft_verify, apply_activation, dot_f32)
+from .sparse import expand_24
 
 
 def make_group_metadata(
@@ -107,11 +108,14 @@ def _grouped_kernel(
     has_a_scale: bool = False,
     has_b_scale: bool = False,
     abft: Optional[AbftSpec] = None,
+    b_sparse: bool = False,
 ):
     it = iter(refs)
     x_ref = next(it)
     w_ref = next(it)
+    wmeta_ref = next(it) if b_sparse else None
     wg_ref = next(it) if has_gate else None
+    wgmeta_ref = next(it) if (has_gate and b_sparse) else None
     as_ref = next(it) if has_a_scale else None
     bs_ref = next(it) if has_b_scale else None
     bgs_ref = next(it) if (has_gate and has_b_scale) else None
@@ -144,15 +148,21 @@ def _grouped_kernel(
             arow_ref[...] = jnp.zeros_like(arow_ref)
 
     x_blk = x_ref[...]
-    acc_ref[...] += dot_f32(x_blk, w_ref[0])
+    # Sparse experts: the staged block is THIS group's compressed payload
+    # (steered by grp[l], like the scale slots); expand in VMEM, then the
+    # identical FMA chain.
+    w_blk = (expand_24(w_ref[0], wmeta_ref[0]) if b_sparse else w_ref[0])
+    acc_ref[...] += dot_f32(x_blk, w_blk)
     if accg_ref is not None:
-        accg_ref[...] += dot_f32(x_blk, wg_ref[0])
+        wg_blk = (expand_24(wg_ref[0], wgmeta_ref[0]) if b_sparse
+                  else wg_ref[0])
+        accg_ref[...] += dot_f32(x_blk, wg_blk)
 
     if ccol_ref is not None:
         # Per-expert checksums: w_ref is already THIS slot's group weight
         # block (steered by grp[l]), so the same accumulate helper covers
         # the ragged case with zero extra steering logic.
-        abft_accumulate(abft, x_blk, w_ref[0], ccol_ref, crow_ref,
+        abft_accumulate(abft, x_blk, w_blk, ccol_ref, crow_ref,
                         acol_ref, arow_ref)
 
     @pl.when(k == nk - 1)
@@ -203,7 +213,7 @@ def _grouped_kernel(
 @functools.partial(
     jax.jit,
     static_argnames=("activation", "bm", "bn", "bk", "out_dtype", "interpret",
-                     "abft"),
+                     "abft", "b_sparse"),
 )
 def mx_grouped_matmul(
     x: jax.Array,
@@ -215,6 +225,9 @@ def mx_grouped_matmul(
     a_scale: Optional[jax.Array] = None,
     b_scale: Optional[jax.Array] = None,
     bg_scale: Optional[jax.Array] = None,
+    b_sparse: bool = False,
+    w_meta: Optional[jax.Array] = None,
+    wg_meta: Optional[jax.Array] = None,
     bm: int = 128,
     bn: int = 128,
     bk: int = 128,
@@ -243,12 +256,37 @@ def mx_grouped_matmul(
     shaped (row_tiles, col_tiles) int32.  Straddled tiles OR the per-group
     visit verdicts.  ``fault_*`` are the optional (row_tiles, col_tiles)
     injection operands (present iff ``abft.inject``).
+
+    2:4 sparse experts: with ``b_sparse`` the w / w_gate operands carry the
+    per-expert COMPRESSED payloads (G, K/2, N) and ``w_meta`` / ``wg_meta``
+    the packed uint8 indices (G, K/8, N); the grp[l] scalar-prefetch maps
+    steer both exactly like the per-expert scale blocks, and each staged
+    block expands in VMEM before the dot.  Needs K % 8 == 0 and
+    bk % 8 == 0; does not compose with ``abft`` in-kernel.
     """
     if x.ndim != 2 or w.ndim != 3:
         raise ValueError(f"expected x (T, K), w (G, K, N); got {x.shape}, {w.shape}")
     T, K = x.shape
-    G, K2, N = w.shape
-    assert K == K2, (x.shape, w.shape)
+    if b_sparse:
+        if w_meta is None:
+            raise ValueError("w_meta must be given iff b_sparse")
+        if abft is not None:
+            raise ValueError("b_sparse does not compose with abft in-kernel; "
+                             "decompress to dense for the checksummed path")
+        G, K2, N = w.shape  # compressed payload: K2 == K/2
+        if 2 * K2 != K:
+            raise ValueError(f"sparse payload K/2={K2} inconsistent with "
+                             f"x's K={K}")
+        if K % 8 != 0:
+            raise ValueError(f"2:4 sparse GEMM needs K % 8 == 0, got {K}")
+        if w_meta.shape != (G, K // 8, N) or w_meta.dtype != jnp.uint8:
+            raise ValueError(f"w_meta must be uint8 ({G}, {K // 8}, {N}), "
+                             f"got {w_meta.dtype} {w_meta.shape}")
+    else:
+        G, K2, N = w.shape
+        assert K == K2, (x.shape, w.shape)
+    if (wg_meta is not None) != (b_sparse and activation == "swiglu"):
+        raise ValueError("wg_meta must be given iff b_sparse AND gated")
     if group_sizes.shape != (G,):
         raise ValueError(
             f"group_sizes must have shape ({G},) to match w's leading dim; "
@@ -269,9 +307,16 @@ def mx_grouped_matmul(
     out_dtype = out_dtype or x.dtype
 
     bm_, bn_, bk_ = min(bm, T), min(bn, N), min(bk, K)
+    if b_sparse and bk_ % 8 != 0:
+        raise ValueError(f"2:4 sparse GEMM needs bk % 8 == 0, got {bk_}")
+    # Sparse payload/metadata pad K in their own compressed units (the
+    # K-pad is a multiple of 8 since K and bk both are); zero payload
+    # expands to a zero dense block, so padded metadata is harmless.
+    kpad = (-K) % bk_
     # pad rows *after* the data (group layout must keep row t at index t)
-    x_p = jnp.pad(x, ((0, (-T) % bm_), (0, (-K) % bk_)))
-    w_p = jnp.pad(w, ((0, 0), (0, (-K) % bk_), (0, (-N) % bn_)))
+    x_p = jnp.pad(x, ((0, (-T) % bm_), (0, kpad)))
+    w_p = jnp.pad(w, ((0, 0), (0, kpad // 2 if b_sparse else kpad),
+                      (0, (-N) % bn_)))
     Tp, Kp = x_p.shape
     Np = w_p.shape[2]
     nk = Kp // bk_
@@ -282,23 +327,38 @@ def mx_grouped_matmul(
         group_sizes, bm_, num_slots, Tp // bm_
     )
 
+    wk_blk = bk_ // 2 if b_sparse else bk_
     in_specs = [
         # x block follows the slot's global row-tile; w follows its group.
         pl.BlockSpec((bm_, bk_), lambda j, l, k, grp, tile, first, st, sz: (tile[l], k)),
         pl.BlockSpec(
-            (1, bk_, bn_), lambda j, l, k, grp, tile, first, st, sz: (grp[l], k, j)
+            (1, wk_blk, bn_), lambda j, l, k, grp, tile, first, st, sz: (grp[l], k, j)
         ),
     ]
     operands = [x_p, w_p]
     scratch = [pltpu.VMEM((bm_, bn_), jnp.float32)]
+    if b_sparse:
+        # packed indices: same per-expert grp[l] steering as the payload
+        in_specs.append(pl.BlockSpec(
+            (1, bk_ // 8, bn_),
+            lambda j, l, k, grp, tile, first, st, sz: (grp[l], k, j)))
+        operands.append(jnp.pad(
+            w_meta, ((0, 0), (0, kpad // 8), (0, (-N) % bn_))))
     if has_gate:
-        wg_p = jnp.pad(w_gate, ((0, 0), (0, (-K) % bk_), (0, (-N) % bn_)))
+        wg_p = jnp.pad(w_gate, ((0, 0), (0, kpad // 2 if b_sparse else kpad),
+                                (0, (-N) % bn_)))
         in_specs.append(
             pl.BlockSpec(
-                (1, bk_, bn_), lambda j, l, k, grp, tile, first, st, sz: (grp[l], k, j)
+                (1, wk_blk, bn_), lambda j, l, k, grp, tile, first, st, sz: (grp[l], k, j)
             )
         )
         operands.append(wg_p)
+        if b_sparse:
+            in_specs.append(pl.BlockSpec(
+                (1, bk_ // 8, bn_),
+                lambda j, l, k, grp, tile, first, st, sz: (grp[l], k, j)))
+            operands.append(jnp.pad(
+                wg_meta, ((0, 0), (0, kpad // 8), (0, (-N) % bn_))))
         scratch.append(pltpu.VMEM((bm_, bn_), jnp.float32))
     if a_scale is not None:
         # per-row scale panel follows the slot's global row-tile, like x
@@ -352,6 +412,7 @@ def mx_grouped_matmul(
         has_a_scale=a_scale is not None,
         has_b_scale=b_scale is not None,
         abft=abft,
+        b_sparse=b_sparse,
     )
     out = pl.pallas_call(
         kernel,

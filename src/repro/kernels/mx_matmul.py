@@ -40,6 +40,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from ._compat import CompilerParams
 from .abft import AbftSpec
+from .sparse import expand_24
 
 ACTIVATIONS = ("none", "relu", "gelu", "silu", "swiglu")
 
@@ -263,15 +264,23 @@ def abft_scratch(abft: Optional[AbftSpec], bm: int, bn: int) -> list:
 
 
 def _fused_kernel(*refs, nk: int, out_dtype, epilogue: Epilogue,
-                  abft: Optional[AbftSpec] = None):
+                  abft: Optional[AbftSpec] = None, b_sparse: bool = False):
     """Kernel body.  refs layout (inputs, outputs, scratch):
-    a, b, [b_gate], [a_scale], [b_scale], [bg_scale], [bias], [residual],
-    [fault_delta, fault_row, fault_col],
-    o, [flags], acc, [acc_gate], [ccol, crow, [acol, arow]]."""
+    a, b, [b_meta], [b_gate], [bg_meta], [a_scale], [b_scale], [bg_scale],
+    [bias], [residual], [fault_delta, fault_row, fault_col],
+    o, [flags], acc, [acc_gate], [ccol, crow, [acol, arow]].
+
+    With ``b_sparse`` the b / b_gate refs hold the 2:4 COMPRESSED payload
+    blocks (bk/2, bn) and b_meta / bg_meta the packed index blocks
+    (bk/8, bn); `expand_24` rebuilds the dense (bk, bn) tile in VMEM right
+    before the dot — the metadata streams with the k step exactly like the
+    dequant scale slots stream with j."""
     it = iter(refs)
     a_ref = next(it)
     b_ref = next(it)
+    bmeta_ref = next(it) if b_sparse else None
     bg_ref = next(it) if epilogue.has_gate else None
+    bgmeta_ref = next(it) if (epilogue.has_gate and b_sparse) else None
     as_ref = next(it) if epilogue.a_scale else None
     bs_ref = next(it) if epilogue.b_scale else None
     bgs_ref = next(it) if (epilogue.has_gate and epilogue.b_scale) else None
@@ -306,14 +315,20 @@ def _fused_kernel(*refs, nk: int, out_dtype, epilogue: Epilogue,
 
     # mxfmacc: one systolic-tile FMA chain into the resident accumulator —
     # narrow (int8/fp8) payloads take the multi-precision datapath of
-    # dot_f32; the accumulator is f32 regardless of operand width.
+    # dot_f32; the accumulator is f32 regardless of operand width.  Sparse
+    # payloads expand in VMEM first (compare-selects, no gathers), so HBM
+    # only ever saw the compressed stream.
     a_blk = a_ref[...]
-    acc_ref[...] += dot_f32(a_blk, b_ref[...])
+    b_blk = (expand_24(b_ref[...], bmeta_ref[...]) if b_sparse
+             else b_ref[...])
+    acc_ref[...] += dot_f32(a_blk, b_blk)
     if accg_ref is not None:
-        accg_ref[...] += dot_f32(a_blk, bg_ref[...])
+        bg_blk = (expand_24(bg_ref[...], bgmeta_ref[...]) if b_sparse
+                  else bg_ref[...])
+        accg_ref[...] += dot_f32(a_blk, bg_blk)
 
     if ccol_ref is not None:
-        abft_accumulate(abft, a_blk, b_ref[...], ccol_ref, crow_ref,
+        abft_accumulate(abft, a_blk, b_blk, ccol_ref, crow_ref,
                         acol_ref, arow_ref)
 
     @pl.when(k == nk - 1)
@@ -362,7 +377,7 @@ def _pad_to(x: jax.Array, m0: int, m1: int) -> jax.Array:
 @functools.partial(
     jax.jit,
     static_argnames=("epilogue", "bm", "bn", "bk", "out_dtype", "interpret",
-                     "abft"),
+                     "abft", "b_sparse"),
 )
 def mx_matmul_fused(
     a: jax.Array,
@@ -375,6 +390,9 @@ def mx_matmul_fused(
     a_scale: Optional[jax.Array] = None,
     b_scale: Optional[jax.Array] = None,
     bg_scale: Optional[jax.Array] = None,
+    b_sparse: bool = False,
+    b_meta: Optional[jax.Array] = None,
+    bg_meta: Optional[jax.Array] = None,
     bm: int = 128,
     bn: int = 128,
     bk: int = 128,
@@ -404,6 +422,16 @@ def mx_matmul_fused(
     untouched, so the ``out`` payload is bitwise identical to ``abft=None``.
     ``fault_*`` are the optional (grid_m, grid_n) injection operands built
     by abft.build_fault_operands (present iff ``abft.inject``).
+
+    2:4 sparsity: with ``b_sparse`` the b / b_gate operands carry the
+    COMPRESSED payload (K/2, N) and ``b_meta`` / ``bg_meta`` the packed
+    uint8 indices (K/8, N) (kernels/sparse.compress_24).  K and bk must be
+    multiples of 8 so payload and metadata tile evenly; the kernel expands
+    each staged block in VMEM before the dot, so HBM traffic is the
+    compressed stream.  Composes with ``b_scale`` quantization (payload
+    holds quantized values; per-column scales are constant along K, so
+    pruning does not disturb them) but not with ``abft`` (checksum
+    recovery needs dense weight slices — callers decompress first).
     """
     if a.ndim != 2 or b.ndim != 2:
         raise ValueError(f"mx_matmul expects 2-D operands, got {a.shape}, {b.shape}")
@@ -423,14 +451,40 @@ def mx_matmul_fused(
     inject = abft is not None and abft.inject
     if inject != (fault_delta is not None):
         raise ValueError("fault operands must be given iff abft.inject")
+    if b_sparse != (b_meta is not None):
+        raise ValueError("b_meta must be given iff b_sparse")
+    if (bg_meta is not None) != (b_sparse and epilogue.has_gate):
+        raise ValueError("bg_meta must be given iff b_sparse AND the "
+                         "epilogue is gated")
+    if b_sparse and abft is not None:
+        raise ValueError("b_sparse does not compose with abft in-kernel; "
+                         "decompress to dense for the checksummed path")
     M, K = a.shape
-    K2, N = b.shape
-    assert K == K2, (a.shape, b.shape)
+    if b_sparse:
+        K2, N = b.shape  # compressed payload: K2 == K/2
+        if 2 * K2 != K:
+            raise ValueError(f"sparse payload K/2={K2} inconsistent with "
+                             f"a's K={K}")
+        if K % 8 != 0:
+            raise ValueError(f"2:4 sparse GEMM needs K % 8 == 0, got {K}")
+        if b_meta.shape != (K // 8, N) or b_meta.dtype != jnp.uint8:
+            raise ValueError(f"b_meta must be uint8 ({K // 8}, {N}), got "
+                             f"{b_meta.dtype} {b_meta.shape}")
+    else:
+        K2, N = b.shape
+        assert K == K2, (a.shape, b.shape)
     out_dtype = out_dtype or a.dtype
 
     bm_, bn_, bk_ = min(bm, M), min(bn, N), min(bk, K)
+    if b_sparse and bk_ % 8 != 0:
+        raise ValueError(f"2:4 sparse GEMM needs bk % 8 == 0, got {bk_}")
     a_p = _pad_to(a, bm_, bk_)
-    b_p = _pad_to(b, bk_, bn_)
+    # Sparse payload/metadata pad in their own compressed units: K % 8 == 0
+    # and bk % 8 == 0 make the K-pad a multiple of 8, so the padded payload
+    # stays exactly Kp/2 rows (and metadata Kp/8) — zero payload expands to
+    # a zero dense block, so the degenerate padded metadata is harmless.
+    b_p = (_pad_to(b, bk_ // 2, bn_) if b_sparse
+           else _pad_to(b, bk_, bn_))
     Mp, Kp = a_p.shape
     Np = b_p.shape[1]
     nk = Kp // bk_
@@ -438,13 +492,23 @@ def mx_matmul_fused(
 
     in_specs = [
         pl.BlockSpec((bm_, bk_), lambda i, j, k: (i, k)),  # mld.a
-        pl.BlockSpec((bk_, bn_), lambda i, j, k: (k, j)),  # mld.b
+        pl.BlockSpec((bk_ // 2 if b_sparse else bk_, bn_),
+                     lambda i, j, k: (k, j)),  # mld.b (payload when sparse)
     ]
     operands = [a_p, b_p]
     scratch = [pltpu.VMEM((bm_, bn_), jnp.float32)]  # the tile buffer
+    if b_sparse:
+        # packed 2-bit indices ride the same (k, j) steering as the payload
+        in_specs.append(pl.BlockSpec((bk_ // 8, bn_), lambda i, j, k: (k, j)))
+        operands.append(_pad_to(b_meta, bk_ // 8, bn_))
     if epilogue.has_gate:
-        in_specs.append(pl.BlockSpec((bk_, bn_), lambda i, j, k: (k, j)))
-        operands.append(_pad_to(b_gate, bk_, bn_))
+        in_specs.append(pl.BlockSpec((bk_ // 2 if b_sparse else bk_, bn_),
+                                     lambda i, j, k: (k, j)))
+        operands.append(_pad_to(b_gate, bk_ // 2 if b_sparse else bk_, bn_))
+        if b_sparse:
+            in_specs.append(
+                pl.BlockSpec((bk_ // 8, bn_), lambda i, j, k: (k, j)))
+            operands.append(_pad_to(bg_meta, bk_ // 8, bn_))
         scratch.append(pltpu.VMEM((bm_, bn_), jnp.float32))
     if epilogue.a_scale:
         # (M, 1) per-row scale panel rides with the i tile (padded rows of
@@ -486,7 +550,7 @@ def mx_matmul_fused(
 
     kernel = functools.partial(
         _fused_kernel, nk=nk, out_dtype=out_dtype, epilogue=epilogue,
-        abft=abft,
+        abft=abft, b_sparse=b_sparse,
     )
     out = pl.pallas_call(
         kernel,

@@ -159,12 +159,18 @@ def executed_gemm_bytes(
     bk: int,
     out_itemsize: int,
     scales: Tuple[Optional[jax.Array], ...] = (),
+    b_meta: Optional[jax.Array] = None,
 ) -> int:
     """HBM bytes one mx_matmul launch actually moves, derived from the
     CONCRETE operands and grid: padded shapes, real payload itemsizes, one
     A-panel pass per N-tile / one B-panel pass per M-tile (the BlockSpec
     revisit structure), single M*N write-back, plus the scale sidecars
     (each scale panel rides with its (i, j) tile once per revisit).
+
+    With ``b_meta`` (2:4 sparse), ``b`` is the compressed (K/2, N) payload
+    and the metadata panel (K/8, N uint8) streams with the same per-M-tile
+    revisits — the B term becomes the wire bytes the sparse kernel's
+    BlockSpecs actually DMA.
 
     This is the "measured" side of the model-vs-measured agreement check:
     it knows about padding and scale traffic, which the analytic
@@ -177,9 +183,15 @@ def executed_gemm_bytes(
     bm_, bn_, bk_ = min(bm, M), min(bn, N), min(bk, K)
     nm, nn, nk = _ceil_div(M, bm_), _ceil_div(N, bn_), _ceil_div(K, bk_)
     Mp, Np, Kp = nm * bm_, nn * bn_, nk * bk_
+    if b_meta is not None:
+        # payload (Kp/2, Np) + packed metadata (Kp/8, Np), per M-tile
+        b_panel = (nm * (Kp // 2) * Np * b.dtype.itemsize
+                   + nm * (Kp // 8) * Np * b_meta.dtype.itemsize)
+    else:
+        b_panel = nm * Kp * Np * b.dtype.itemsize
     total = (
         nn * Mp * Kp * a.dtype.itemsize   # A panel re-read per N-tile
-        + nm * Kp * Np * b.dtype.itemsize  # B panel re-read per M-tile
+        + b_panel                          # B panel re-read per M-tile
         + Mp * Np * out_itemsize           # the single write-back
     )
     for s in scales:

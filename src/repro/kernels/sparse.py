@@ -1,0 +1,147 @@
+"""2:4 structured weight sparsity: pruner, wire format, and expand oracle.
+
+The paper's whole argument is throughput per byte moved — reuse what the
+engine already has (the tile buffer, the single fused write-back) and shrink
+what streams through it.  N:M structured sparsity is that argument applied
+to the weight operand (PAPERS.md "Optimizing Structured-Sparse Matrix
+Multiplication in RISC-V Vector Processors", arXiv 2501.10189): of every
+M=4 consecutive elements along the contraction (K) axis, only the N=2
+largest-magnitude survive, and HBM carries
+
+  - the **payload** — the kept values, shape (K/2, N), in the weight's own
+    dtype (composes with int8/fp8 quantization: the payload is the
+    quantized value stream), and
+  - the **metadata** — the kept positions, 2 bits each, packed 2 groups per
+    byte: uint8 of shape (K/8, N).  Byte layout (little-end first):
+    bits[1:0] = group 2b's first index, bits[3:2] = its second,
+    bits[5:4] / bits[7:6] = group 2b+1's pair.  Indices are canonical
+    (strictly increasing within a group), so the format round-trips
+    bit-exactly.
+
+Bytes per dense weight element: itemsize/2 payload + 1/8 metadata — f32
+0.53125x dense, int8-sparse 0.15625x of f32 (the ≤0.56x / ≤0.19x gates in
+BENCH_sparse.json).  A one-byte-per-group encoding would be 0.5625x and
+lose the f32 gate; the packing is load-bearing, not cosmetic.
+
+`expand_24` is the shared decompress: the XLA/baseline backends call it
+unfused on the whole operand (so every backend consumes the SAME payload),
+and the Pallas kernel bodies call it on each staged (bk/2, bn)+(bk/8, bn)
+block pair right before the dot — eight compare-select ops, no gathers, so
+the expansion rides the existing k-step with the metadata steered to VMEM
+exactly like the dequant scale slots.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+GROUP = 4  # M of N:M
+KEEP = 2   # N of N:M
+GROUPS_PER_BYTE = 2  # 2 indices x 2 bits = 4 bits/group
+
+
+def _check_k(k: int, *, what: str = "contraction dim") -> None:
+    if k % (GROUP * GROUPS_PER_BYTE) != 0:
+        raise ValueError(
+            f"2:4 wire format needs {what} divisible by "
+            f"{GROUP * GROUPS_PER_BYTE} (payload halves, metadata packs "
+            f"{GROUPS_PER_BYTE} groups/byte); got {k}")
+
+
+def prune_24(w: jax.Array) -> jax.Array:
+    """Magnitude-based 2:4 prune along the contraction axis.
+
+    ``w``: (..., K, N) weights (the B operand layout; K is axis -2,
+    K % 4 == 0).  Every group of 4 consecutive K positions keeps its 2
+    largest-|.| entries and zeroes the rest.  Ties break toward the lower
+    K position (argsort is stable), so the mask — and therefore the
+    compressed metadata — is deterministic for any input, including the
+    already-2:4-sparse fixed point: prune(prune(w)) == prune(w).
+    """
+    *lead, K, N = w.shape
+    if K % GROUP != 0:
+        raise ValueError(f"K={K} must be divisible by {GROUP} for 2:4 pruning")
+    g = w.reshape(*lead, K // GROUP, GROUP, N)
+    mag = jnp.abs(g.astype(jnp.float32))
+    # descending magnitude, stable => lower position wins ties
+    order = jnp.argsort(-mag, axis=-2)
+    ranks = jnp.argsort(order, axis=-2)  # rank of each position
+    mask = ranks < KEEP
+    return jnp.where(mask, g, jnp.zeros_like(g)).reshape(*lead, K, N)
+
+
+def compress_24(w: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Pack an (already 2:4-pruned) weight into (payload, metadata).
+
+    ``w``: (..., K, N) with at most 2 nonzeros per group of 4 along K and
+    K % 8 == 0.  Returns payload (..., K/2, N) in w's dtype and metadata
+    uint8 (..., K/8, N).  The kept positions are the group's nonzeros
+    (zero positions fill in when a group has fewer than 2 — their payload
+    value is 0, so the round-trip is still exact), chosen canonically:
+    nonzeros first in position order, then the pair sorted ascending.
+    Inputs with more than 2 nonzeros per group are a caller bug; compress
+    keeps the 2 earliest positions and silently drops the rest, so always
+    prune first (`prune_24`) — ops dispatch does.
+    """
+    *lead, K, N = w.shape
+    _check_k(K)
+    g = w.reshape(*lead, K // GROUP, GROUP, N)
+    nz = (g != 0)
+    pos = jnp.arange(GROUP, dtype=jnp.int32).reshape(
+        *([1] * len(lead)), 1, GROUP, 1)
+    # key: nonzeros (in position order) sort before zeros (in position
+    # order) — argsort ascending picks 2 distinct positions per group.
+    key = jnp.where(nz, pos, pos + GROUP)
+    order = jnp.argsort(key, axis=-2)
+    idx = jnp.sort(order[..., :KEEP, :], axis=-2).astype(jnp.int32)
+    payload = jnp.take_along_axis(g, idx, axis=-2)  # (..., K/4, 2, N)
+    payload = payload.reshape(*lead, K // KEEP, N)
+    nibble = (idx[..., 0, :] | (idx[..., 1, :] << 2)).astype(jnp.uint8)
+    # pack 2 consecutive groups per byte: group 2b low nibble, 2b+1 high
+    nib2 = nibble.reshape(*lead, K // (GROUP * GROUPS_PER_BYTE),
+                          GROUPS_PER_BYTE, N)
+    meta = (nib2[..., 0, :] | (nib2[..., 1, :] << 4)).astype(jnp.uint8)
+    return payload, meta
+
+
+def expand_24(payload: jax.Array, meta: jax.Array) -> jax.Array:
+    """Decompress (payload, metadata) back to the dense (..., K, N) weight.
+
+    Pure jnp — usable both as the unfused oracle (XLA/baseline backends,
+    tests) and inside the Pallas kernel bodies on staged VMEM blocks: the
+    dense row 4g+j is  payload[2g] * (idx0 == j) + payload[2g+1] *
+    (idx1 == j) — compare-selects, no gathers, exact for integer payloads
+    (the two kept positions are always distinct, so at most one term is
+    nonzero per element)."""
+    *lead, K2, N = payload.shape
+    K = K2 * KEEP
+    if meta.shape != (*lead, K // (GROUP * GROUPS_PER_BYTE), N):
+        raise ValueError(
+            f"metadata shape {meta.shape} does not match payload "
+            f"{payload.shape} (want (..., {K // (GROUP * GROUPS_PER_BYTE)}, "
+            f"{N}))")
+    nib = jnp.stack([meta & 0xF, meta >> 4], axis=-2)
+    nib = nib.reshape(*lead, K // GROUP, N).astype(jnp.int32)
+    i0 = nib & 3
+    i1 = (nib >> 2) & 3
+    p = payload.reshape(*lead, K // GROUP, KEEP, N)
+    p0 = p[..., 0, :]
+    p1 = p[..., 1, :]
+    zero = jnp.zeros_like(p0)
+    dense = jnp.stack(
+        [jnp.where(i0 == j, p0, zero) + jnp.where(i1 == j, p1, zero)
+         for j in range(GROUP)],
+        axis=-2,
+    )
+    return dense.reshape(*lead, K, N)
+
+
+def sparse_b_bytes_per_elem(payload_itemsize: int) -> float:
+    """HBM bytes per DENSE weight element the wire format moves: half the
+    payload itemsize plus 1 metadata bit (4 bits/group of 4).  f32 ->
+    2.125 (0.53125x), int8 -> 0.625 (0.15625x of a 4-byte dense f32) —
+    the numbers `core.transfer_model.SparseGemm` prices and
+    BENCH_sparse.json gates."""
+    return payload_itemsize / KEEP + 1.0 / (GROUP * GROUPS_PER_BYTE)

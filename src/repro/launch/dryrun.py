@@ -40,7 +40,7 @@ from ..core.roofline import HBM_BW, ICI_BW, PEAK_FLOPS_BF16, RooflineReport
 from ..core.precision import resolve_precision
 from ..core.transfer_model import (
     AbftGemm, GemmProblem, PagedKVDecode, PallasGemmTiling,
-    RingCollectiveGemm, SharedPrefixPrefill,
+    RingCollectiveGemm, SharedPrefixPrefill, SparseGemm,
 )
 from ..launch.mesh import make_production_mesh
 from ..launch.specs import cell_specs
@@ -134,6 +134,46 @@ def quantized_gemm_reports(cfg, tokens_per_step: int) -> dict:
     out["total_hbm_bytes_bf16"] = total_base
     out["total_traffic_credit_bytes"] = total_base - total_q
     out["bytes_ratio"] = total_q / total_base if total_base else 1.0
+    return out
+
+
+def sparse_gemm_reports(cfg, tokens_per_step: int) -> dict:
+    """What 2:4 structured-sparse weights (kernels/sparse, the "sparse24"
+    precision policies) would save on this config's block projections: the
+    `SparseGemm` stream model at the kernels' default 128x128x128 tiling.
+
+    ``active`` marks whether the config declares a sparse policy
+    (cfg.precision naming a registry entry with b_sparse); otherwise the
+    report is the counterfactual at the policy's own operand bytes — bf16
+    activations/weights for "sparse24", so every dryrun spec carries the
+    weight-stream credit turning sparsity on would earn."""
+    name = getattr(cfg, "precision", "none")
+    prec = resolve_precision(name) if name not in ("none",) else None
+    active = prec is not None and prec.b_sparse is not None
+    if not active:
+        prec = resolve_precision("sparse24")
+    M = max(tokens_per_step, 1)
+    d, hd = cfg.d_model, cfg.hd
+    ff = cfg.d_ff or 4 * d
+    gemms = {
+        "qkv": (M, (cfg.n_heads + 2 * cfg.n_kv_heads) * hd, d),
+        "attn_out": (M, d, cfg.n_heads * hd),
+        "mlp_up": (M, 2 * ff if cfg.activation == "silu" else ff, d),
+        "mlp_down": (M, d, ff),
+    }
+    model = SparseGemm(bm=128, bn=128, bk=128)
+    out = {"policy": name if active else "sparse24", "active": active}
+    total_sparse = total_dense = 0
+    for gname, (m, n, k) in gemms.items():
+        prob = GemmProblem(m, n, k, prec.a_bytes(2), b_bytes=prec.b_bytes(2),
+                           out_bytes=2)
+        rec = model.report(prob)
+        total_sparse += rec["weight_stream_bytes"]
+        total_dense += rec["dense_weight_stream_bytes"]
+        out[gname] = rec
+    out["total_weight_stream_bytes"] = total_sparse
+    out["total_dense_weight_stream_bytes"] = total_dense
+    out["weight_ratio"] = (total_sparse / total_dense) if total_dense else 1.0
     return out
 
 
@@ -354,6 +394,7 @@ def lower_cell(arch: str, shape: str, mesh_kind: str, *, extra: dict | None = No
         "collective_gemms": collective_gemm_reports(
             cfg, mesh, specs.tokens_per_step),
         "quantized_gemms": quantized_gemm_reports(cfg, specs.tokens_per_step),
+        "sparse_gemms": sparse_gemm_reports(cfg, specs.tokens_per_step),
         "abft_gemms": abft_gemm_reports(cfg, specs.tokens_per_step),
         "paged_kv_decode": (paged_kv_decode_reports(cfg, preset)
                             if specs.kind == "decode" else {}),

@@ -64,9 +64,11 @@ class Linear(Module):
     # collective matmul when a collective_policy context is active.
     tp_mode: Optional[str] = None
     # Per-projection precision declaration (core.precision registry name,
-    # e.g. "int8" = weights int8 per-tile / activations bf16).  None/"none"
-    # keeps full precision; the ambient use_precision() context still
-    # applies when unset.
+    # e.g. "int8" = weights int8 per-tile / activations bf16, or a
+    # structured-sparse policy: "sparse24" = 2:4-pruned weights streamed
+    # compressed, "sparse24_int8" = the same payload quantized to int8).
+    # None/"none" keeps full precision; the ambient use_precision() context
+    # still applies when unset.
     precision: Optional[str] = None
 
     def build(self, mk: Builder):
@@ -543,7 +545,9 @@ class MLP(Module):
     d_model: int
     d_ff: int
     activation: str = "silu"  # "silu" => gated (SwiGLU); "gelu"/"relu" => plain
-    precision: Optional[str] = None  # per-projection precision (up/gate/down)
+    # per-projection precision (up/gate/down): quantized ("int8", ...) or
+    # structured-sparse ("sparse24", "sparse24_int8") registry names
+    precision: Optional[str] = None
 
     @property
     def gated(self) -> bool:

@@ -45,7 +45,9 @@ class MoE(Module):
     # Per-projection precision for the expert GEMMs (core.precision
     # registry name).  The router stays full precision — top-k routing is
     # the decision point, not the traffic.  Grouped dispatch quantizes
-    # weights PER EXPERT (scales steered by the group-offset prefetch).
+    # weights PER EXPERT (scales steered by the group-offset prefetch);
+    # sparse policies ("sparse24", "sparse24_int8") prune and compress
+    # per expert, with payload + metadata steered the same way.
     precision: Optional[str] = None
 
     def build(self, mk: Builder):

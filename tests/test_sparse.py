@@ -1,0 +1,296 @@
+"""Structured-sparse (2:4) MX path: wire format, kernels, pricing.
+
+Layers under test, innermost out:
+
+  - kernels/sparse.py wire format — prune/compress/expand round-trip must
+    be EXACT (the payload is values the pruner kept, verbatim; only the
+    positions are re-encoded), across every payload dtype including int8,
+    property-tested over shapes and seeds;
+  - the fused kernels' sparse path — the in-VMEM expansion feeds the SAME
+    blocks to the SAME FMA chain as a dense-masked (pruned, uncompressed)
+    weight, so sparse-vs-dense-masked is BITWISE on the pallas backend,
+    exact on the int8xint8 integer MAC path, and the xla backend
+    decompresses the identical payload unfused;
+  - dispatch fallbacks — K % 8 != 0 skips compression (dense pruned
+    semantics, bitwise), ABFT + sparse decompresses before the checksummed
+    launch (recovery needs dense panels);
+  - pricing — SparsitySpec/b_stream_bytes arithmetic, the SparseGemm
+    report, and model-vs-executed byte agreement on aligned shapes.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ops
+from repro.core.precision import (
+    NAMED_POLICIES,
+    PrecisionPolicy,
+    QuantSpec,
+    SparsitySpec,
+    resolve_precision,
+)
+from repro.core.transfer_model import GemmProblem, SparseGemm
+from repro.kernels.quant import executed_gemm_bytes
+from repro.kernels.sparse import (
+    compress_24,
+    expand_24,
+    prune_24,
+    sparse_b_bytes_per_elem,
+)
+
+POL_MX = ops.MXPolicy(backend="pallas_mx", bm=32, bn=32, bk=32, interpret=True)
+POL_XLA = ops.MXPolicy(backend="xla")
+INT8_SPARSE = PrecisionPolicy(a=QuantSpec("int8", "tile"),
+                              b=QuantSpec("int8", "tile"),
+                              b_sparse=SparsitySpec())
+INT8_DENSE = PrecisionPolicy(a=QuantSpec("int8", "tile"),
+                             b=QuantSpec("int8", "tile"))
+
+
+def _rand(shape, seed, scale=1.0):
+    return jnp.asarray(
+        np.random.default_rng(seed).normal(size=shape) * scale, jnp.float32
+    )
+
+
+# ---------------------------------------------------------------------------
+# wire format: prune / compress / expand
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    k_groups=st.integers(min_value=1, max_value=6),
+    n=st.sampled_from([1, 3, 8, 17]),
+    dtype=st.sampled_from(["float32", "bfloat16", "int8"]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_roundtrip_exact(k_groups, n, dtype, seed):
+    """expand(compress(pruned)) == pruned, bit-for-bit, every dtype."""
+    K = 8 * k_groups
+    rng = np.random.default_rng(seed)
+    if dtype == "int8":
+        w = jnp.asarray(rng.integers(-127, 128, size=(K, n)), jnp.int8)
+    else:
+        w = jnp.asarray(rng.normal(size=(K, n)), dtype)
+    wp = prune_24(w)
+    payload, meta = compress_24(wp)
+    assert payload.shape == (K // 2, n) and payload.dtype == w.dtype
+    assert meta.shape == (K // 8, n) and meta.dtype == jnp.uint8
+    back = expand_24(payload, meta)
+    assert back.dtype == w.dtype
+    assert jnp.array_equal(back, wp), "2:4 round-trip must be exact"
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_prune_24_properties(seed):
+    w = _rand((24, 16), seed)
+    wp = prune_24(w)
+    groups = np.asarray(wp).reshape(-1, 4, wp.shape[-1])
+    assert (np.count_nonzero(groups, axis=1) <= 2).all(), \
+        "every 4-group keeps at most 2 nonzeros"
+    # survivors are the original values (a mask, not a rewrite) ...
+    mask = np.asarray(wp) != 0
+    assert np.array_equal(np.asarray(wp)[mask], np.asarray(w)[mask])
+    # ... and pruning is idempotent
+    assert jnp.array_equal(prune_24(wp), wp)
+    # kept pair dominates the dropped pair per group (magnitude pruning)
+    aw = np.abs(np.asarray(w)).reshape(-1, 4, w.shape[-1])
+    kept = np.where(np.asarray(mask).reshape(aw.shape), aw, np.inf)
+    dropped = np.where(np.asarray(mask).reshape(aw.shape), -np.inf, aw)
+    assert (kept.min(axis=1) >= dropped.max(axis=1) - 1e-7).all()
+
+
+def test_compress_rejects_unaligned_k():
+    with pytest.raises(ValueError):
+        compress_24(prune_24(_rand((12, 8), 0)))
+
+
+def test_grouped_weights_roundtrip():
+    w = prune_24(_rand((3, 16, 8), 1))
+    payload, meta = compress_24(w)
+    assert payload.shape == (3, 8, 8) and meta.shape == (3, 2, 8)
+    assert jnp.array_equal(expand_24(payload, meta), w)
+
+
+# ---------------------------------------------------------------------------
+# precision registry / spec arithmetic
+# ---------------------------------------------------------------------------
+
+
+def test_sparsity_spec_and_registry():
+    with pytest.raises(ValueError):
+        SparsitySpec(kind="4:8")
+    s = SparsitySpec()
+    assert (s.n, s.m) == (2, 4)
+    # bytes per DENSE element: payload/2 + 2-bit metadata packed 2/byte
+    assert s.b_bytes_per_elem(4) == pytest.approx(2.125)   # f32: 0.53125x
+    assert s.b_bytes_per_elem(2) == pytest.approx(1.125)   # bf16
+    assert s.b_bytes_per_elem(1) == pytest.approx(0.625)   # int8: 0.15625x f32
+    assert sparse_b_bytes_per_elem(4) == pytest.approx(2.125)
+    for name in ("sparse24", "sparse24_int8"):
+        p = resolve_precision(name)
+        assert name in NAMED_POLICIES and p.b_sparse is not None
+        assert not p.is_noop_for(jnp.float32, jnp.float32)
+    assert resolve_precision("sparse24_int8").b.dtype == "int8"
+
+
+def test_transfer_model_sparse_pricing():
+    p = GemmProblem(256, 256, 256, 4, b_bytes=4, out_bytes=4)
+    model = SparseGemm(bm=128, bn=128, bk=128)
+    rep = model.report(p)
+    assert rep["b_bytes_per_dense_elem"] == pytest.approx(2.125)
+    assert rep["weight_ratio"] == pytest.approx(0.53125)
+    assert rep["weight_stream_bytes"] < rep["dense_weight_stream_bytes"]
+    assert rep["saved_hbm_bytes"] > 0
+    p8 = GemmProblem(256, 256, 256, 2, b_bytes=1, out_bytes=4)
+    assert SparseGemm(bm=128, bn=128, bk=128).weight_stream_bytes(p8) \
+        / model.dense_weight_stream_bytes(p) == pytest.approx(0.15625)
+    # the tile planner prices the compressed stream through the same knob
+    plan_s = POL_MX.plan(256, 256, 256, 4, b_bytes=4, out_bytes=4,
+                         b_sparse=True)
+    plan_d = POL_MX.plan(256, 256, 256, 4, b_bytes=4, out_bytes=4)
+    assert plan_s.hbm_bytes < plan_d.hbm_bytes
+    assert plan_s.vmem_bytes < plan_d.vmem_bytes
+
+
+def test_executed_bytes_match_model_on_aligned_shapes():
+    M = N = K = 128
+    w = prune_24(_rand((K, N), 2))
+    payload, meta = compress_24(w)
+    a = _rand((M, K), 3)
+    executed = executed_gemm_bytes(a, payload, bm=32, bn=32, bk=32,
+                                   out_itemsize=4, b_meta=meta)
+    plan = ops.MXPolicy(backend="pallas_mx", bm=32, bn=32, bk=32).plan(
+        M, N, K, 4, b_bytes=4, out_bytes=4, b_sparse=True)
+    assert executed == plan.hbm_bytes
+
+
+# ---------------------------------------------------------------------------
+# linear: sparse vs dense-masked parity, both backends
+# ---------------------------------------------------------------------------
+
+
+def test_sparse_linear_bitwise_vs_dense_masked_pallas():
+    a, w = _rand((16, 32), 4), _rand((32, 24), 5, scale=0.1)
+    y_sparse = ops.linear(a, w, policy=POL_MX, out_dtype=jnp.float32,
+                          precision="sparse24")
+    y_masked = ops.linear(a, prune_24(w), policy=POL_MX,
+                          out_dtype=jnp.float32)
+    assert jnp.array_equal(y_sparse, y_masked), \
+        "same kernel, same blocks, same FMA order => bitwise"
+
+
+def test_sparse_linear_xla_backend_matches_pallas():
+    a, w = _rand((16, 32), 6), _rand((32, 24), 7, scale=0.1)
+    y_mx = ops.linear(a, w, policy=POL_MX, out_dtype=jnp.float32,
+                      precision="sparse24")
+    y_xla = ops.linear(a, w, policy=POL_XLA, out_dtype=jnp.float32,
+                       precision="sparse24")
+    # identical decompressed payload; only k-blocking order differs
+    assert float(jnp.abs(y_mx - y_xla).max()) <= 1e-5
+    # and the xla backend really pruned: vs the dense f32 GEMM it differs
+    y_dense = ops.linear(a, w, policy=POL_XLA, out_dtype=jnp.float32)
+    assert float(jnp.abs(y_xla - y_dense).max()) > 0
+
+
+def test_sparse_int8_exact_both_backends():
+    a, w = _rand((16, 32), 8), _rand((32, 24), 9, scale=0.1)
+    y_sq = ops.linear(a, w, policy=POL_MX, out_dtype=jnp.float32,
+                      precision=INT8_SPARSE)
+    y_dq = ops.linear(a, prune_24(w), policy=POL_MX, out_dtype=jnp.float32,
+                      precision=INT8_DENSE)
+    assert jnp.array_equal(y_sq, y_dq), "integer MAC path: bit-exact"
+    y_xla = ops.linear(a, w, policy=POL_XLA, out_dtype=jnp.float32,
+                       precision=INT8_SPARSE)
+    assert float(jnp.abs(y_sq - y_xla).max()) <= 1e-5
+
+
+def test_sparse24_int8_registry_policy_runs():
+    a, w = _rand((16, 32), 10), _rand((32, 24), 11, scale=0.1)
+    y = ops.linear(a, w, policy=POL_MX, out_dtype=jnp.float32,
+                   precision="sparse24_int8")
+    y_ref = ops.linear(a, w, policy=POL_XLA, out_dtype=jnp.float32,
+                       precision="sparse24_int8")
+    assert float(jnp.abs(y - y_ref).max()) <= 1e-4  # bf16 A payload
+
+
+def test_sparse_swiglu_epilogue():
+    a = _rand((16, 32), 12)
+    w, wg = _rand((32, 24), 13, scale=0.1), _rand((32, 24), 14, scale=0.1)
+    y = ops.linear(a, w, w_gate=wg, activation="swiglu", policy=POL_MX,
+                   out_dtype=jnp.float32, precision="sparse24")
+    y_ref = ops.linear(a, prune_24(w), w_gate=prune_24(wg),
+                       activation="swiglu", policy=POL_MX,
+                       out_dtype=jnp.float32)
+    assert jnp.array_equal(y, y_ref)
+
+
+def test_k_unaligned_falls_back_to_dense_pruned():
+    a, w = _rand((8, 12), 15), _rand((12, 16), 16, scale=0.1)  # K=12 % 8 != 0
+    y = ops.linear(a, w, policy=POL_MX, out_dtype=jnp.float32,
+                   precision="sparse24")
+    y_ref = ops.linear(a, prune_24(w), policy=POL_MX, out_dtype=jnp.float32)
+    assert jnp.array_equal(y, y_ref), \
+        "unaligned K: dense pruned-masked semantics, bitwise"
+
+
+def test_abft_plus_sparse_decompresses_before_checksummed_launch():
+    from repro.kernels.abft import AbftConfig
+
+    a, w = _rand((16, 32), 17), _rand((32, 24), 18, scale=0.1)
+    y = ops.linear(a, w, policy=POL_MX, out_dtype=jnp.float32,
+                   precision="sparse24", abft=AbftConfig())
+    y_ref = ops.linear(a, prune_24(w), policy=POL_MX, out_dtype=jnp.float32,
+                       abft=AbftConfig())
+    assert jnp.array_equal(y, y_ref)
+
+
+# ---------------------------------------------------------------------------
+# grouped (MoE experts) path
+# ---------------------------------------------------------------------------
+
+
+def test_grouped_sparse_bitwise_vs_dense_masked():
+    G, K, N = 3, 32, 24
+    sizes = jnp.asarray([16, 0, 9], jnp.int32)  # ragged + an empty expert
+    x = _rand((int(sizes.sum()), K), 19)
+    w = _rand((G, K, N), 20, scale=0.1)
+    y = ops.grouped_matmul(x, w, sizes, policy=POL_MX,
+                           out_dtype=jnp.float32, precision="sparse24")
+    y_ref = ops.grouped_matmul(x, prune_24(w), sizes, policy=POL_MX,
+                               out_dtype=jnp.float32)
+    assert jnp.array_equal(y, y_ref)
+
+
+def test_grouped_sparse_swiglu_and_xla_backend():
+    G, K, N = 2, 16, 16
+    sizes = jnp.asarray([8, 8], jnp.int32)
+    x = _rand((16, K), 21)
+    w, wg = _rand((G, K, N), 22, scale=0.1), _rand((G, K, N), 23, scale=0.1)
+    y = ops.grouped_matmul(x, w, sizes, activation="swiglu", w_gate=wg,
+                           policy=POL_MX, out_dtype=jnp.float32,
+                           precision="sparse24")
+    y_xla = ops.grouped_matmul(x, w, sizes, activation="swiglu", w_gate=wg,
+                               policy=POL_XLA, out_dtype=jnp.float32,
+                               precision="sparse24")
+    assert float(jnp.abs(y - y_xla).max()) <= 1e-5
+
+
+def test_moe_layer_runs_with_sparse_experts():
+    from repro.models.moe import MoE
+
+    layer = MoE(d_model=16, d_ff=16, n_experts=2, top_k=1,
+                precision="sparse24")
+    params = layer.init(jax.random.PRNGKey(0))
+    x = _rand((2, 8, 16), 24)
+    with ops.use_policy(POL_MX):
+        y, aux = layer(params, x)
+    assert y.shape == x.shape and jnp.isfinite(y).all()
+    with ops.use_policy(POL_XLA):
+        y_ref, _ = layer(params, x)
+    assert float(jnp.abs(y.astype(jnp.float32)
+                         - y_ref.astype(jnp.float32)).max()) <= 1e-4
